@@ -1,0 +1,49 @@
+"""Shared benchmark harness: timed comparisons of TINA lowerings vs the
+NumPy CPU baseline and the direct-jnp baseline (the paper's comparison
+set, adapted to this container — DESIGN.md §8.2)."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def timeit(fn: Callable, *args, repeats: int = 20, warmup: int = 3) -> float:
+    """Median seconds per call; jax outputs are block_until_ready'd."""
+    for _ in range(warmup):
+        out = fn(*args)
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+        elif isinstance(out, (tuple, list)):
+            jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+        elif isinstance(out, (tuple, list)):
+            jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def fmt_table(title: str, header: list[str], rows: list[list]) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(header)]
+    lines = [f"== {title} ==",
+             "  ".join(str(h).ljust(w) for h, w in zip(header, widths)),
+             "  ".join("-" * w for w in widths)]
+    for r in rows:
+        lines.append("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(lines)
+
+
+def us(t: float) -> str:
+    return f"{t * 1e6:9.1f}"
+
+
+def speedup(base: float, t: float) -> str:
+    return f"{base / t:6.1f}x"

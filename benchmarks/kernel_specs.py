@@ -1,0 +1,65 @@
+"""Structural (compile-time) metrics for the Pallas TPU kernels.
+
+Interpret-mode wall time is not TPU time, so this reports what IS
+checkable off-hardware: per-block VMEM footprint vs the 16 MiB/core
+budget, MXU alignment of the matmul dims, and arithmetic intensity
+(FLOPs per HBM byte) of each kernel's blocking — the quantities the
+BlockSpec design trades off (DESIGN.md §6)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fmt_table
+
+VMEM_BYTES = 16 * 2 ** 20
+
+
+def _mm(bm, bn, bk, dtype=4):
+    vmem = (bm * bk + bk * bn + bm * bn) * dtype
+    flops = 2 * bm * bn * bk
+    hbm = (bm * bk + bk * bn) * dtype          # per block-k step
+    return vmem, flops / hbm
+
+
+def run() -> str:
+    rows = []
+    # matmul kernel (kernels/matmul.py): 128x128x512 fp32 accum
+    for bm, bn, bk in [(128, 128, 128), (128, 128, 512), (256, 256, 512)]:
+        vmem, ai = _mm(bm, bn, bk)
+        rows.append(["matmul", f"{bm}x{bn}x{bk}", f"{vmem / 2**20:.2f} MiB",
+                     "yes" if vmem <= VMEM_BYTES else "NO",
+                     f"{ai:.1f}",
+                     "aligned" if all(d % 128 == 0 for d in (bm, bn, bk))
+                     else "UNALIGNED"])
+    # dft kernel: same tiles, 3-mult variant does 3 matmuls for 2 outputs
+    vmem, ai = _mm(128, 128, 512)
+    rows.append(["dft-3mult", "128x128x512", f"{3 * vmem / 2**20:.2f} MiB",
+                 "yes", f"{0.75 * ai:.1f}", "aligned"])
+    # fir kernel: (bb, bn) block + K-1 halo, taps resident
+    for bb, bn, k in [(8, 512, 31), (8, 2048, 127)]:
+        vmem = (bb * (bn + k - 1) + k + bb * bn) * 4
+        ai = 2 * k / (2 * 4)                   # 2K flops per in+out element
+        rows.append(["fir", f"{bb}x{bn} k={k}", f"{vmem / 2**20:.2f} MiB",
+                     "yes" if vmem <= VMEM_BYTES else "NO",
+                     f"{ai:.1f}", "aligned" if bn % 128 == 0 else "UNALIGNED"])
+    # pfb fused kernel: frames block (bt+M-1, P) + taps (M,P) + F (P,2P)
+    for bt, p, m in [(256, 32, 8), (256, 128, 16)]:
+        vmem = ((bt + m - 1) * p + m * p + 2 * p * p + 2 * bt * p) * 4
+        flops = bt * p * (2 * m + 4 * p)
+        hbm = (bt * p + 2 * bt * p) * 4
+        rows.append(["pfb-fused", f"bt={bt} P={p} M={m}",
+                     f"{vmem / 2**20:.2f} MiB",
+                     "yes" if vmem <= VMEM_BYTES else "NO",
+                     f"{flops / hbm:.1f}",
+                     "aligned" if p % 8 == 0 else "UNALIGNED"])
+    # unfold: pure data movement
+    rows.append(["unfold", "8x512 J=16", f"{(8 * 512 * 17) * 4 / 2**20:.2f} MiB",
+                 "yes", "0.0 (movement)", "aligned"])
+    return fmt_table(
+        "Pallas kernel structural metrics (TPU v5e, 16 MiB VMEM/core)",
+        ["kernel", "block", "vmem/block", "fits", "flops/byte", "mxu"],
+        rows)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,3 @@
+from repro.analysis.roofline import HW, RooflineReport, analyze
+
+__all__ = ["HW", "RooflineReport", "analyze"]

@@ -1,0 +1,270 @@
+"""Roofline terms from a compiled (dry-run) artifact — TPU v5e target.
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_wire_bytes_per_chip / link_bw
+
+``cost_analysis()`` on the SPMD-partitioned executable reports the
+*per-device* program, so terms divide by per-chip peaks directly
+(equivalent to the global-FLOPs/(chips x peak) form).
+
+collective bytes are NOT in cost_analysis: we parse the optimized HLO
+(``compiled.as_text()``) and, for every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, account operand bytes
+with ring-traffic factors:
+
+    all-reduce      2 (n-1)/n x bytes     (ring reduce-scatter+all-gather)
+    all-gather      (n-1)/n x out_bytes
+    reduce-scatter  (n-1)   x out_bytes   (out is the 1/n shard)
+    all-to-all      (n-1)/n x bytes
+    collective-permute  1 x bytes
+
+Collectives whose replica groups span the pod boundary (device ids on
+both sides of chips-per-pod) are costed at DCN bandwidth instead of ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HWSpec:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12     # per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    ici_bw: float = 50e9                # bytes/s per link (~per-chip eff.)
+    dcn_bw: float = 25e9                # bytes/s per host, cross-pod
+    hbm_bytes: float = 16e9             # v5e HBM capacity
+    chips_per_pod: int = 256
+
+
+HW = HWSpec()
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.-]*)\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.I)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_groups(line: str) -> Optional[list[list[int]]]:
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return [[int(x) for x in g.split(",") if x.strip()]
+                for g in re.findall(r"\{([^}]*)\}", m.group(1))]
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        ng, gs = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims)))
+        if m.group(4):                      # iota with transpose
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.reshape(dims).transpose(perm).reshape(-1)
+        return ids.reshape(ng, gs).tolist()
+    return None
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op_bytes: dict = dataclasses.field(default_factory=dict)   # simple sums
+    wire_ici: float = 0.0       # ring-model wire bytes/device, ICI ops
+    wire_dcn: float = 0.0       # ring-model wire bytes/device, DCN-crossing
+    count: int = 0
+
+    @property
+    def total_op_bytes(self) -> float:
+        return sum(self.op_bytes.values())
+
+
+def parse_collectives(hlo_text: str, *, chips_per_pod: int = HW.chips_per_pod
+                      ) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        result_type, op = m.group(2), m.group(3).lower()
+        if m.group(4):  # -start of a start/done pair: count once (the start)
+            pass
+        out_bytes = _shape_bytes(result_type)
+        # operand types appear inline inside the parens
+        inside = line[m.end():]
+        depth, j = 1, 0
+        for j, ch in enumerate(inside):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        operand_bytes = _shape_bytes(inside[:j]) or out_bytes
+        groups = _parse_groups(line)
+        n = len(groups[0]) if groups else 1
+        crosses_pod = False
+        if groups:
+            for g in groups:
+                if len({d // chips_per_pod for d in g}) > 1:
+                    crosses_pod = True
+                    break
+        if op == "collective-permute":
+            wire = out_bytes          # n comes from source_target_pairs
+        elif n <= 1:
+            wire = 0.0
+        elif op == "all-reduce":
+            wire = 2.0 * (n - 1) / n * out_bytes
+        elif op == "all-gather":
+            wire = (n - 1) / n * out_bytes
+        elif op == "reduce-scatter":
+            wire = (n - 1) * out_bytes
+        elif op == "all-to-all":
+            wire = (n - 1) / n * out_bytes
+        else:
+            wire = out_bytes
+        stats.op_bytes[op] = stats.op_bytes.get(op, 0.0) + operand_bytes
+        stats.count += 1
+        if crosses_pod:
+            stats.wire_dcn += wire
+        else:
+            stats.wire_ici += wire
+    return stats
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # per chip
+    hlo_bytes: float            # per chip (cost_analysis 'bytes accessed')
+    collectives: CollectiveStats = None
+    model_flops: float = 0.0    # 6·N·D or 2·N per token (global)
+    bytes_per_device: dict = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / HW.peak_flops_bf16
+
+    @property
+    def t_memory(self) -> float:
+        """Assignment formula: cost_analysis bytes / HBM bw.  NOTE: on the
+        CPU backend 'bytes accessed' counts every op unfused (each operand
+        + result at every HLO op), so this overestimates true HBM traffic
+        by the fusion factor; ``t_memory_refined`` is the deployment
+        estimate and drives ``bottleneck``."""
+        return self.hlo_bytes / HW.hbm_bw
+
+    @property
+    def hbm_bytes_refined(self) -> float:
+        """Live-buffer traffic estimate: arguments + outputs read/written
+        once, every temp written + read once."""
+        m = self.bytes_per_device or {}
+        args = m.get("argument_size_in_bytes", 0)
+        outs = m.get("output_size_in_bytes", 0)
+        temps = m.get("temp_size_in_bytes", 0)
+        if not (args or temps):
+            return self.hlo_bytes
+        return float(args + outs + 2 * temps)
+
+    @property
+    def t_memory_refined(self) -> float:
+        return self.hbm_bytes_refined / HW.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        c = self.collectives
+        return c.wire_ici / HW.ici_bw + c.wire_dcn / HW.dcn_bw if c else 0.0
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory_refined,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory_refined, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs — catches remat/dispatch waste."""
+        g = self.hlo_flops * self.chips
+        return self.model_flops / g if g else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chip's peak the step would achieve if it runs
+        at the roofline bound: useful model FLOPs / (bound-time x peak)."""
+        t = self.t_bound
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (t * self.chips * HW.peak_flops_bf16)
+
+    def row(self) -> dict:
+        c = self.collectives or CollectiveStats()
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_gflops_per_chip": self.hlo_flops / 1e9,
+            "hlo_gbytes_per_chip": self.hlo_bytes / 1e9,
+            "coll_gbytes_ici": c.wire_ici / 1e9,
+            "coll_gbytes_dcn": c.wire_dcn / 1e9,
+            "coll_op_gbytes": c.total_op_bytes / 1e9,
+            "n_collectives": c.count,
+            "t_compute_ms": self.t_compute * 1e3,
+            "t_memory_ms": self.t_memory * 1e3,
+            "t_memory_refined_ms": self.t_memory_refined * 1e3,
+            "t_collective_ms": self.t_collective * 1e3,
+            "bottleneck": self.bottleneck,
+            "model_gflops": self.model_flops / 1e9,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(n_params: float, n_active: float, tokens: float,
+                kind: str) -> float:
+    """6·N·D for a train step over D tokens; 2·N per decoded/prefilled
+    token (forward only)."""
+    n = n_active or n_params
+    if kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens
+
+
+def analyze(*, arch: str, shape: str, mesh_name: str, chips: int,
+            cost: dict, hlo_text: str, n_params: float, n_active: float,
+            tokens: float, kind: str, memory: dict = None) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    stats = parse_collectives(hlo_text)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts, collectives=stats,
+        model_flops=model_flops(n_params, n_active, tokens, kind),
+        bytes_per_device=memory)

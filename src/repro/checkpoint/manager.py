@@ -1,0 +1,174 @@
+"""Sharded, atomic, keep-N, optionally-async checkpointing.
+
+Format: one directory per step, one ``.npy`` per pytree leaf (keyed by
+its tree path), plus a ``manifest.json`` recording keys/shapes/dtypes
+and user metadata.  Writes go to ``<dir>.tmp`` and are renamed into
+place only when complete — a killed run can never leave a half
+checkpoint that restore would pick up (fault-tolerance contract,
+DESIGN.md §4; exercised by ``tests/test_checkpoint.py``).
+
+Restore is *structure-driven*: the caller passes a target pytree (or
+``jax.eval_shape`` specs) and each leaf is filled by key and
+``device_put`` with the leaf's sharding — which is what makes
+**elastic re-meshing** work: save on mesh A, build specs on mesh B,
+restore re-shards (``runtime/elastic.py``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PREFIX = "ckpt_"
+
+
+def _leaf_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {_leaf_key(path): leaf for path, leaf in flat}
+
+
+def save_pytree(tree, directory: str, *, metadata: Optional[dict] = None):
+    """Atomic write of ``tree`` to ``directory``."""
+    tmp = directory + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"leaves": {}, "metadata": metadata or {}}
+    for key, leaf in _flatten(tree).items():
+        arr = np.asarray(leaf)
+        dtype = str(arr.dtype)
+        if arr.dtype.char == 'V' or dtype not in np.sctypeDict:
+            # ml_dtypes (bfloat16 etc.): npy can't round-trip the dtype —
+            # store the bits as a same-width uint and record the real dtype
+            arr = arr.view(np.dtype(f"uint{arr.dtype.itemsize * 8}"))
+        fname = key.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = {"file": fname, "shape": list(arr.shape),
+                                   "dtype": dtype}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(directory):
+        shutil.rmtree(directory)
+    os.rename(tmp, directory)
+
+
+def load_manifest(directory: str) -> dict:
+    with open(os.path.join(directory, "manifest.json")) as f:
+        return json.load(f)
+
+
+def load_pytree(target, directory: str, *, shardings=None):
+    """Fill ``target``'s structure from ``directory``.
+
+    ``target`` leaves may be arrays or ``ShapeDtypeStruct``s (no
+    allocation needed to describe the destination).  ``shardings`` —
+    optional aligned pytree of ``jax.sharding.Sharding`` — re-shards
+    each leaf on load (elastic restore path).
+    """
+    manifest = load_manifest(directory)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+    sflat = None
+    if shardings is not None:
+        sflat = [s for _, s in jax.tree_util.tree_flatten_with_path(shardings)[0]]
+    leaves = []
+    for i, (path, leaf) in enumerate(flat):
+        key = _leaf_key(path)
+        if key not in manifest["leaves"]:
+            raise KeyError(f"checkpoint {directory} missing leaf {key!r}")
+        entry = manifest["leaves"][key]
+        arr = np.load(os.path.join(directory, entry["file"]))
+        if str(arr.dtype) != entry["dtype"]:
+            import ml_dtypes  # noqa: F401  (registers bfloat16 & co.)
+            arr = arr.view(np.dtype(entry["dtype"]))
+        want = tuple(leaf.shape)
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != {want}")
+        arr = arr.astype(leaf.dtype)
+        if sflat is not None:
+            leaves.append(jax.device_put(arr, sflat[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """keep-N rotation + latest-step discovery + async save."""
+
+    def __init__(self, root: str, *, keep_n: int = 3, async_save: bool = False):
+        self.root = root
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(root, exist_ok=True)
+
+    # -- discovery ---------------------------------------------------------
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.root):
+            m = re.fullmatch(PREFIX + r"(\d+)", name)
+            if m and os.path.exists(os.path.join(self.root, name,
+                                                 "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def path(self, step: int) -> str:
+        return os.path.join(self.root, f"{PREFIX}{step}")
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, tree, *, metadata: Optional[dict] = None,
+             block: bool = False):
+        """Device->host copy happens synchronously (correct snapshot);
+        file writes go to a background thread when ``async_save``."""
+        host = jax.tree.map(lambda x: np.asarray(x), tree)
+        meta = dict(metadata or {})
+        meta["step"] = step
+        if self.async_save and not block:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._save_and_gc, args=(step, host, meta), daemon=True)
+            self._thread.start()
+        else:
+            self._save_and_gc(step, host, meta)
+
+    def _save_and_gc(self, step, host, meta):
+        save_pytree(host, self.path(step), metadata=meta)
+        for old in self.steps()[: -self.keep_n]:
+            shutil.rmtree(self.path(old), ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore ---------------------------------------------------------------
+    def restore(self, target, *, step: Optional[int] = None, shardings=None):
+        """Returns (tree, metadata) or (None, None) when no checkpoint."""
+        self.wait()
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None, None
+        d = self.path(step)
+        return (load_pytree(target, d, shardings=shardings),
+                load_manifest(d)["metadata"])

@@ -1,0 +1,35 @@
+"""Assigned-architecture configs.  ``get(name)`` returns the full config,
+``get_reduced(name)`` the CPU-smoke-sized one.  ``ARCHS`` lists all ids."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, reduced
+
+ARCHS = [
+    "olmo_1b", "qwen2_7b", "stablelm_3b", "stablelm_1_6b",
+    "recurrentgemma_9b", "kimi_k2_1t_a32b", "arctic_480b",
+    "internvl2_2b", "rwkv6_3b", "hubert_xlarge",
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+_ALIASES.update({
+    "olmo-1b": "olmo_1b", "qwen2-7b": "qwen2_7b",
+    "stablelm-3b": "stablelm_3b", "stablelm-1.6b": "stablelm_1_6b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b", "arctic-480b": "arctic_480b",
+    "internvl2-2b": "internvl2_2b", "rwkv6-3b": "rwkv6_3b",
+    "hubert-xlarge": "hubert_xlarge",
+})
+
+
+def get(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_ALIASES.get(name, name)}")
+    return mod.CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_ALIASES.get(name, name)}")
+    if hasattr(mod, "REDUCED"):
+        return mod.REDUCED
+    return reduced(mod.CONFIG)

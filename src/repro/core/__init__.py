@@ -1,0 +1,18 @@
+"""TINA core: the paper's contribution — non-NN signal processing as NN
+layers (convolutions + fully connected), TPU-adapted.  See DESIGN.md."""
+from repro.core import blocks, functions, pfb, quantize
+from repro.core.blocks import (depthwise_conv, fully_connected,
+                               pointwise_conv, standard_conv)
+from repro.core.functions import (dft, depthwise_fir, elementwise_add,
+                                  elementwise_mult, fir, idft, matmul,
+                                  summation, unfold)
+from repro.core.pfb import pfb as pfb_full
+from repro.core.pfb import pfb_frontend, pfb_window
+
+__all__ = [
+    "blocks", "functions", "pfb",
+    "standard_conv", "depthwise_conv", "pointwise_conv", "fully_connected",
+    "elementwise_mult", "elementwise_add", "matmul", "summation",
+    "dft", "idft", "fir", "depthwise_fir", "unfold",
+    "pfb_full", "pfb_frontend", "pfb_window", "quantize",
+]

@@ -1,0 +1,221 @@
+"""TINA building blocks (paper §2).
+
+The four NN layers TINA composes everything from:
+
+  * standard convolution   (§2.1, Eq. 1)
+  * depthwise convolution  (§2.2, Eq. 2)
+  * pointwise convolution  (§2.3, Eq. 3)
+  * fully connected layer  (§2.4, Eq. 4)
+
+Every block supports two lowerings:
+
+  * ``lowering="conv"``   — the paper-faithful form: an actual
+    ``lax.conv_general_dilated`` / ``dot_general`` NN layer, NCHW/OIHW,
+    exactly as the PyTorch reference instantiates ``nn.Conv2d``.
+  * ``lowering="native"`` — the TPU-native form (DESIGN.md §2): pointwise
+    conv -> MXU ``dot_general``; depthwise 1x1 -> VPU elementwise;
+    standard conv -> im2col + MXU matmul.
+
+Both are pure functions of (input, kernel, bias) and are tested for
+equality, so models can flip lowerings per-op without semantic change.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+_CONV_DN = ("NCHW", "OIHW", "NCHW")
+
+
+def _bias4d(b: Optional[Array], c: int, dtype) -> Array:
+    if b is None:
+        return jnp.zeros((1, c, 1, 1), dtype=dtype)
+    return b.reshape(1, c, 1, 1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# §2.1 standard convolution
+# ---------------------------------------------------------------------------
+def standard_conv(
+    x: Array,
+    kernel: Array,
+    bias: Optional[Array] = None,
+    *,
+    stride: tuple[int, int] = (1, 1),
+    padding: str | tuple = "VALID",
+    groups: int = 1,
+    lowering: str = "conv",
+    precision=lax.Precision.HIGHEST,
+) -> Array:
+    """Paper Eq. (1).  x: (T, C_in, H, W); kernel: (C_out, C_in//groups, M, N).
+
+    XLA convolution is cross-correlation (no kernel flip) — identical to
+    PyTorch ``nn.Conv2d`` semantics, which is what the paper's equations
+    (1), (16), (18) write (``I(h+m, w+n)``, plus-index).
+    """
+    if x.ndim != 4:
+        raise ValueError(f"standard_conv expects NCHW, got {x.shape}")
+    c_out = kernel.shape[0]
+    if lowering == "conv":
+        out = lax.conv_general_dilated(
+            x, kernel, window_strides=stride, padding=padding,
+            dimension_numbers=_CONV_DN, feature_group_count=groups,
+            precision=precision,
+        )
+    elif lowering == "native":
+        out = _conv_via_im2col(x, kernel, stride=stride, padding=padding,
+                               groups=groups, precision=precision)
+    else:
+        raise ValueError(f"unknown lowering {lowering!r}")
+    return out + _bias4d(bias, c_out, out.dtype)
+
+
+def _conv_via_im2col(x, kernel, *, stride, padding, groups, precision):
+    """Standard conv as unfold + MXU matmul (the TPU-native lowering)."""
+    t, c_in, h, w = x.shape
+    c_out, c_in_g, m, n = kernel.shape
+    if padding not in ("VALID",):  # general padding: fall back to explicit pad
+        if padding == "SAME":
+            ph, pw = (m - 1) // 2, (n - 1) // 2
+            x = jnp.pad(x, ((0, 0), (0, 0), (ph, m - 1 - ph), (pw, n - 1 - pw)))
+        else:
+            (p0, p1), (p2, p3) = padding
+            x = jnp.pad(x, ((0, 0), (0, 0), (p0, p1), (p2, p3)))
+        t, c_in, h, w = x.shape
+    ho = (h - m) // stride[0] + 1
+    wo = (w - n) // stride[1] + 1
+    # patches: (T, C_in, ho, wo, M, N) — zero-FLOP data movement
+    patches = _sliding_windows_2d(x, (m, n), stride)
+    if groups == 1:
+        lhs = patches.transpose(0, 2, 3, 1, 4, 5).reshape(t * ho * wo, c_in * m * n)
+        rhs = kernel.reshape(c_out, c_in * m * n).T
+        out = jnp.dot(lhs, rhs, precision=precision)
+        return out.reshape(t, ho, wo, c_out).transpose(0, 3, 1, 2)
+    # grouped: block-diagonal matmul per group
+    g = groups
+    cg_in, cg_out = c_in // g, c_out // g
+    lhs = patches.reshape(t, g, cg_in, ho, wo, m, n)
+    rhs = kernel.reshape(g, cg_out, c_in_g, m, n)
+    out = jnp.einsum("tgihwmn,goimn->tgohw", lhs, rhs, precision=precision)
+    return out.reshape(t, c_out, ho, wo)
+
+
+def _sliding_windows_2d(x, window, stride):
+    """(T,C,H,W) -> (T,C,Ho,Wo,M,N) sliding windows, pure gather."""
+    m, n = window
+    t, c, h, w = x.shape
+    ho = (h - m) // stride[0] + 1
+    wo = (w - n) // stride[1] + 1
+    ih = jnp.arange(ho)[:, None] * stride[0] + jnp.arange(m)[None, :]  # (Ho,M)
+    iw = jnp.arange(wo)[:, None] * stride[1] + jnp.arange(n)[None, :]  # (Wo,N)
+    return x[:, :, ih[:, None, :, None], iw[None, :, None, :]]
+
+
+# ---------------------------------------------------------------------------
+# §2.2 depthwise convolution
+# ---------------------------------------------------------------------------
+def depthwise_conv(
+    x: Array,
+    kernel: Array,
+    bias: Optional[Array] = None,
+    *,
+    stride: tuple[int, int] = (1, 1),
+    padding: str | tuple = "VALID",
+    lowering: str = "conv",
+    precision=lax.Precision.HIGHEST,
+) -> Array:
+    """Paper Eq. (2).  x: (T, C, H, W); kernel: (C, M, N) — channel c of the
+    kernel applied to input channel c independently."""
+    c = x.shape[1]
+    if kernel.shape[0] != c:
+        raise ValueError(f"kernel channels {kernel.shape[0]} != input {c}")
+    if lowering == "conv":
+        k4 = kernel[:, None]  # (C, 1, M, N) OIHW with groups=C
+        out = lax.conv_general_dilated(
+            x, k4, window_strides=stride, padding=padding,
+            dimension_numbers=_CONV_DN, feature_group_count=c,
+            precision=precision,
+        )
+        return out + _bias4d(bias, c, out.dtype)
+    elif lowering == "native":
+        m, n = kernel.shape[1], kernel.shape[2]
+        if m == 1 and n == 1 and stride == (1, 1) and padding == "VALID":
+            # the TINA elementwise case: pure VPU op
+            out = x * kernel.reshape(1, c, 1, 1)
+        else:
+            patches = _sliding_windows_2d(
+                x if padding == "VALID" else _pad_same(x, m, n), kernel.shape[1:], stride
+            )
+            out = jnp.einsum("tchwmn,cmn->tchw", patches, kernel,
+                             precision=precision)
+        return out + _bias4d(bias, c, out.dtype)
+    raise ValueError(f"unknown lowering {lowering!r}")
+
+
+def _pad_same(x, m, n):
+    ph, pw = (m - 1) // 2, (n - 1) // 2
+    return jnp.pad(x, ((0, 0), (0, 0), (ph, m - 1 - ph), (pw, n - 1 - pw)))
+
+
+# ---------------------------------------------------------------------------
+# §2.3 pointwise convolution
+# ---------------------------------------------------------------------------
+def pointwise_conv(
+    x: Array,
+    kernel: Array,
+    bias: Optional[Array] = None,
+    *,
+    lowering: str = "conv",
+    precision=lax.Precision.HIGHEST,
+) -> Array:
+    """Paper Eq. (3).  x: (T, C_in, H, W); kernel: (C_in, C_out).
+
+    A 1x1 conv mixes channels per spatial position — i.e. a matmul over
+    the channel axis.  ``native`` lowers straight to ``dot_general``
+    (the MXU form); ``conv`` instantiates the literal 1x1 conv layer.
+    """
+    c_in, c_out = kernel.shape
+    if lowering == "conv":
+        k4 = kernel.T.reshape(c_out, c_in, 1, 1)  # OIHW
+        out = lax.conv_general_dilated(
+            x, k4, window_strides=(1, 1), padding="VALID",
+            dimension_numbers=_CONV_DN, precision=precision,
+        )
+        return out + _bias4d(bias, c_out, out.dtype)
+    elif lowering == "native":
+        # (T,C_in,H,W) x (C_in,C_out) -> (T,C_out,H,W)
+        out = jnp.einsum("tihw,io->tohw", x, kernel, precision=precision)
+        return out + _bias4d(bias, c_out, out.dtype)
+    raise ValueError(f"unknown lowering {lowering!r}")
+
+
+# ---------------------------------------------------------------------------
+# §2.4 fully connected layer
+# ---------------------------------------------------------------------------
+def fully_connected(
+    x: Array,
+    kernel: Array,
+    bias: Optional[Array] = None,
+    *,
+    lowering: str = "native",
+    precision=lax.Precision.HIGHEST,
+) -> Array:
+    """Paper Eq. (4).  x: (..., C_in); kernel: (C_in, C_out)."""
+    out = jnp.tensordot(x, kernel, axes=((-1,), (0,)), precision=precision)
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+__all__ = [
+    "standard_conv",
+    "depthwise_conv",
+    "pointwise_conv",
+    "fully_connected",
+]

@@ -1,0 +1,254 @@
+"""TINA function mappings (paper §3 arithmetic + §4 signal processing).
+
+Every public function here is a *non-NN* operation expressed through the
+four TINA building blocks of :mod:`repro.core.blocks` (Table 1 of the
+paper).  Each takes ``lowering=`` to pick the paper-faithful conv form
+(``"conv"``), the TPU-native form (``"native"``), or — where a kernel
+exists — the Pallas form (``"pallas"``, dispatched via
+:mod:`repro.kernels.ops`).
+
+Shapes follow the paper but accept leading batch dims where noted.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocks
+
+Array = jax.Array
+
+
+def _kernels_ops():
+    # deferred import: core must not hard-depend on kernels at import time
+    from repro.kernels import ops
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# §3.1 elementwise multiplication  — depthwise conv, Eq. (6)
+# ---------------------------------------------------------------------------
+def elementwise_mult(x: Array, y: Array, *, lowering: str = "native") -> Array:
+    """Elementwise x*y of same-shape arrays via a depthwise conv whose
+    H = W = 1 and C_out = H*W (paper Eq. 6).  Batched over x.shape[:-2]."""
+    if x.shape[-2:] != y.shape[-2:]:
+        raise ValueError(f"shape mismatch {x.shape} vs {y.shape}")
+    if lowering == "pallas":
+        return _kernels_ops().elementwise_mult(x, y)
+    h, w = x.shape[-2:]
+    batch = x.shape[:-2]
+    c = h * w
+    xi = x.reshape((-1, c, 1, 1))                       # (T, C, 1, 1)
+    ker = jnp.broadcast_to(y.reshape((-1, c))[..., None, None], (xi.shape[0] if y.ndim > 2 else 1, c, 1, 1))
+    if y.ndim > 2:  # batched kernel: run per-sample depthwise conv via vmap
+        out = jax.vmap(
+            lambda a, k: blocks.depthwise_conv(a[None], k, lowering=lowering)[0]
+        )(xi, ker.reshape(-1, c, 1, 1))
+    else:
+        out = blocks.depthwise_conv(xi, y.reshape(c, 1, 1), lowering=lowering)
+    return out.reshape(batch + (h, w))
+
+
+# ---------------------------------------------------------------------------
+# §3.3 elementwise addition  — depthwise conv, ones kernel, addend as bias,
+# Eq. (10)
+# ---------------------------------------------------------------------------
+def elementwise_add(x: Array, y: Array, *, lowering: str = "native") -> Array:
+    if x.shape[-2:] != y.shape[-2:]:
+        raise ValueError(f"shape mismatch {x.shape} vs {y.shape}")
+    if lowering == "pallas":
+        return _kernels_ops().elementwise_add(x, y)
+    h, w = x.shape[-2:]
+    batch = x.shape[:-2]
+    c = h * w
+    xi = x.reshape((-1, c, 1, 1))
+    ones = jnp.ones((c, 1, 1), x.dtype)
+    if y.ndim > 2:
+        out = jax.vmap(
+            lambda a, b: blocks.depthwise_conv(a[None], ones, bias=b, lowering=lowering)[0]
+        )(xi, y.reshape(-1, c))
+    else:
+        out = blocks.depthwise_conv(xi, ones, bias=y.reshape(c), lowering=lowering)
+    return out.reshape(batch + (h, w))
+
+
+# ---------------------------------------------------------------------------
+# §3.2 matrix–matrix multiplication  — pointwise conv, Eq. (9)
+# ---------------------------------------------------------------------------
+def matmul(x: Array, y: Array, *, lowering: str = "native",
+           precision=jax.lax.Precision.HIGHEST) -> Array:
+    """Z = X @ Y via pointwise conv: reshape X (.., M, L) into the conv
+    input (T, C_in=L, 1, W=M); kernel = Y (L, N) (paper Eq. 9)."""
+    if lowering == "pallas":
+        return _kernels_ops().matmul(x, y)
+    if y.ndim != 2:
+        raise ValueError("TINA matmul kernel (conv weight) must be 2-D")
+    if lowering == "native":
+        # The pointwise conv with 1x1 kernel *is* dot_general (DESIGN.md
+        # §2); emit it directly so the MXU form carries no reshape noise.
+        return jnp.matmul(x, y, precision=precision)
+    m, l = x.shape[-2], x.shape[-1]
+    batch = x.shape[:-2]
+    xi = x.reshape((-1, m, l)).transpose(0, 2, 1)[:, :, None, :]  # (T, L, 1, M)
+    out = blocks.pointwise_conv(xi, y, lowering=lowering, precision=precision)
+    out = out[:, :, 0, :].transpose(0, 2, 1)                      # (T, M, N)
+    return out.reshape(batch + (m, y.shape[1]))
+
+
+# ---------------------------------------------------------------------------
+# §3.4 summation  — fully connected, ones weights, Eq. (11)
+# ---------------------------------------------------------------------------
+def summation(x: Array, *, lowering: str = "native") -> Array:
+    """sum(x) over the last axis via a dense layer with all-ones weights,
+    zero bias, C_out = 1 (paper Eq. 11).  Leading dims are batch."""
+    ones = jnp.ones((x.shape[-1], 1), x.dtype)
+    return blocks.fully_connected(x, ones, lowering=lowering)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# §4.1 / §4.2 DFT and IDFT  — pointwise conv with (inverse) Fourier matrix
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=64)
+def _dfm(n: int, inverse: bool, dtype: str) -> tuple[np.ndarray, np.ndarray]:
+    """Discrete Fourier Matrix (paper [9]): F[l, k] = exp(-2πi l k / n);
+    inverse adds the conjugate and the 1/n normalization."""
+    lk = np.outer(np.arange(n), np.arange(n))
+    sign = 2j if inverse else -2j
+    f = np.exp(sign * np.pi * lk / n)
+    if inverse:
+        f = f / n
+    return f.real.astype(dtype), f.imag.astype(dtype)
+
+
+def _split(x: Array) -> tuple[Array, Array]:
+    if jnp.iscomplexobj(x):
+        return jnp.real(x), jnp.imag(x)
+    return x, jnp.zeros_like(x)
+
+
+def dft(x: Array, *, inverse: bool = False, lowering: str = "native",
+        variant: str = "4mult") -> Array:
+    """(I)DFT over the last axis as a TINA matmul with the (I)DFM kernel
+    (paper Eq. 12–14).  Complex arithmetic is the real/imag block matmul:
+
+      4mult (paper-faithful):  Zr = Xr Fr - Xi Fi ; Zi = Xr Fi + Xi Fr
+      3mult (beyond-paper):    Karatsuba — 3 real matmuls instead of 4.
+    """
+    n = x.shape[-1]
+    rdt = x.real.dtype if jnp.iscomplexobj(x) else x.dtype
+    fr_np, fi_np = _dfm(n, inverse, np.dtype(rdt).name)
+    fr, fi = jnp.asarray(fr_np), jnp.asarray(fi_np)
+    xr, xi = _split(x)
+    shp = xr.shape
+    xr = xr.reshape((-1, n))
+    xi = xi.reshape((-1, n))
+    if lowering == "pallas":
+        zr, zi = _kernels_ops().dft(xr, xi, fr, fi, variant=variant)
+    else:
+        mm = functools.partial(matmul, lowering=lowering)
+        if variant == "4mult":
+            zr = mm(xr, fr) - mm(xi, fi)
+            zi = mm(xr, fi) + mm(xi, fr)
+        elif variant == "3mult":
+            # Karatsuba: t1 = Xr(Fr+Fi); t2 = Fi(Xr+Xi); t3 = Fr(Xi-Xr) is one
+            # of several 3-mult schemes; use the standard one:
+            # k1 = Fr (Xr + Xi); k2 = Xr (Fi - Fr); k3 = Xi (Fr + Fi)
+            k1 = mm(xr + xi, fr)
+            k2 = mm(xr, fi - fr)
+            k3 = mm(xi, fr + fi)
+            zr = k1 - k3
+            zi = k1 + k2
+        else:
+            raise ValueError(f"unknown dft variant {variant!r}")
+    return (zr + 1j * zi).reshape(shp[:-1] + (n,))
+
+
+def idft(z: Array, *, lowering: str = "native", variant: str = "4mult") -> Array:
+    return dft(z, inverse=True, lowering=lowering, variant=variant)
+
+
+# ---------------------------------------------------------------------------
+# §4.3 FIR filter  — standard conv with taps as weights, Eq. (16)
+# ---------------------------------------------------------------------------
+def fir(x: Array, taps: Array, *, mode: str = "valid",
+        lowering: str = "native", flip: bool = True) -> Array:
+    """FIR filter y(i) = Σ_k a(k) x(i−k) over the last axis.
+
+    The paper's Eq. (16) is a cross-correlation (``I(w+n)``); true FIR
+    convolution needs the taps reversed, which ``flip=True`` (default)
+    does — set ``flip=False`` for the literal Eq. (16).  ``mode`` follows
+    scipy: "valid" (paper), "same", "full".
+    """
+    k = taps.shape[-1]
+    kern = taps[::-1] if flip else taps
+    if mode == "valid":
+        pad = "VALID"
+    elif mode == "same":
+        pad = (k // 2, (k - 1) // 2) if flip else ((k - 1) // 2, k // 2)
+        pad = (pad,)
+    elif mode == "full":
+        pad = ((k - 1, k - 1),)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    if lowering == "pallas":
+        return _kernels_ops().fir(x, kern, mode=mode)
+    batch = x.shape[:-1]
+    w = x.shape[-1]
+    xi = x.reshape((-1, 1, 1, w))                        # (T,1,1,W)
+    k4 = kern.reshape(1, 1, 1, k)                        # OIHW
+    pad2 = "VALID" if pad == "VALID" else (((0, 0),) + tuple(pad))
+    out = blocks.standard_conv(xi, k4, padding=pad2, lowering=lowering)
+    return out.reshape(batch + (out.shape[-1],))
+
+
+def depthwise_fir(x: Array, taps: Array, *, causal: bool = True,
+                  lowering: str = "native") -> Array:
+    """Per-channel FIR over time: x (..., T, C), taps (K, C) — the form
+    model short-convs (RG-LRU conv1d, RWKV token-shift) use.  Causal
+    left-padding keeps length T.  Maps to the TINA depthwise conv."""
+    k, c = taps.shape
+    assert x.shape[-1] == c, (x.shape, taps.shape)
+    batch = x.shape[:-2]
+    t = x.shape[-2]
+    xi = x.reshape((-1, t, c)).transpose(0, 2, 1)[:, :, None, :]   # (B,C,1,T)
+    if causal:
+        xi = jnp.pad(xi, ((0, 0), (0, 0), (0, 0), (k - 1, 0)))
+    kern = taps.T[:, None, :]                                      # (C,1,K) -> (C,M=1,N=K)
+    out = blocks.depthwise_conv(xi, kern, lowering=lowering)       # (B,C,1,T)
+    return out[:, :, 0, :].transpose(0, 2, 1).reshape(batch + (t, c))
+
+
+# ---------------------------------------------------------------------------
+# §4.4 unfolding  — standard conv with identity kernel, Eq. (19)
+# ---------------------------------------------------------------------------
+def unfold(x: Array, window: int, *, lowering: str = "native") -> Array:
+    """Y(i, j) = X(i + j): (.., N) -> (.., N-J+1, J).
+
+    ``conv`` is the paper-faithful identity-kernel conv (burns N·J² MACs);
+    ``native``/``pallas`` are the zero-FLOP data-movement forms
+    (DESIGN.md §2 — the TPU adaptation).
+    """
+    n = x.shape[-1]
+    j = window
+    if j > n:
+        raise ValueError(f"window {j} > length {n}")
+    if lowering == "pallas":
+        return _kernels_ops().unfold(x, j)
+    batch = x.shape[:-1]
+    if lowering == "native":
+        idx = jnp.arange(n - j + 1)[:, None] + jnp.arange(j)[None, :]
+        return x[..., idx]
+    xi = x.reshape((-1, 1, 1, n))
+    eye = jnp.eye(j, dtype=x.dtype).reshape(j, 1, 1, j)   # C_out=J, N=J identity
+    out = blocks.standard_conv(xi, eye, lowering=lowering)  # (T, J, 1, N-J+1)
+    return out[:, :, 0, :].transpose(0, 2, 1).reshape(batch + (n - j + 1, j))
+
+
+__all__ = [
+    "elementwise_mult", "elementwise_add", "matmul", "summation",
+    "dft", "idft", "fir", "depthwise_fir", "unfold",
+]

@@ -1,0 +1,92 @@
+"""Polyphase filter bank (paper §5.2, Eq. 20) built from TINA blocks.
+
+A PFB channelizes a time-domain signal into P frequency channels:
+
+  1. decompose x(n) into P branches  x_p(n') = x(n'·P + p)
+  2. subfilter each branch with its taps  y_p(n') = Σ_m h_p(m) x_p(n'−m)
+  3. DFT across the branch axis.
+
+Step 2 is the TINA FIR/unfold mapping (depthwise standard conv); step 3
+is the TINA DFT (pointwise conv with the Fourier matrix).  The paper
+composes the two as separate NN layers through GPU memory; the
+``lowering="pallas"`` path runs the fused kernel (FIR accumulation in
+VMEM feeding the DFT matmul — see ``kernels/pfb.py``), which removes the
+intermediate ``y_p`` HBM round-trip the paper identifies as TINA's main
+limitation.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import functions
+
+Array = jax.Array
+
+
+def pfb_window(n_branches: int, n_taps: int, kind: str = "hamming") -> np.ndarray:
+    """Prototype low-pass filter, sinc-windowed, split across P branches —
+    the standard radio-astronomy construction [Price 2021].  Returns taps
+    of shape (M, P): taps[m, p] = h(m·P + p)."""
+    p, m = n_branches, n_taps
+    n = np.arange(p * m, dtype=np.float64)
+    x = n / p - m / 2.0
+    sinc = np.sinc(x)
+    if kind == "hamming":
+        win = np.hamming(p * m)
+    elif kind == "hanning":
+        win = np.hanning(p * m)
+    elif kind == "rect":
+        win = np.ones(p * m)
+    else:
+        raise ValueError(f"unknown window {kind!r}")
+    return (sinc * win).reshape(m, p)
+
+
+def pfb_frontend(x: Array, taps: Array, *, lowering: str = "native") -> Array:
+    """Subfiltered signals y_p(n') (paper Fig. 3 "left column").
+
+    x: (..., n_samples) with n_samples divisible by P.
+    taps: (M, P) per-branch FIR coefficients.
+    returns: (..., n_frames − M + 1, P)
+    """
+    m, p = taps.shape
+    if x.shape[-1] % p:
+        raise ValueError(f"n_samples {x.shape[-1]} not divisible by P={p}")
+    batch = x.shape[:-1]
+    frames = x.reshape(batch + (-1, p))            # (..., n', P): branch decomp
+    if lowering == "pallas":
+        from repro.kernels import ops
+        return ops.pfb_fir(frames, taps)
+    # TINA mapping: unfold over the frame axis + depthwise reduction ==
+    # P parallel FIRs (the paper's bank of standard convs).
+    # windows: (..., n'-M+1, M, P)
+    nfr = frames.shape[-2]
+    idx = jnp.arange(nfr - m + 1)[:, None] + jnp.arange(m)[None, :]
+    if lowering == "conv":
+        # paper-faithful: per-branch standard conv (correlation with
+        # time-reversed taps gives the Eq. 20 sum over x_p(n'−m))
+        y = functions.depthwise_fir(frames, taps[::-1], causal=True, lowering="conv")
+        return y[..., m - 1:, :]
+    windows = frames[..., idx, :]
+    # y[.., t, p] = Σ_m taps_rev[m, p] · x[.., t+m, p]
+    return jnp.einsum("...tmp,mp->...tp", windows, taps[::-1, :])
+
+
+def pfb(x: Array, taps: Array, *, lowering: str = "native",
+        variant: str = "4mult") -> Array:
+    """Full PFB: frontend + DFT across branches (paper Fig. 3 "right
+    column").  Returns complex spectra (..., n_frames − M + 1, P)."""
+    if lowering == "pallas":
+        from repro.kernels import ops
+        return ops.pfb(x, taps, variant=variant)
+    y = pfb_frontend(x, taps, lowering=lowering)
+    # y is (..., n_frames', P): the DFT runs across the branch axis P,
+    # which is already the last axis.
+    return functions.dft(y, lowering=lowering, variant=variant)
+
+
+__all__ = ["pfb_window", "pfb_frontend", "pfb"]

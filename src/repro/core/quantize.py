@@ -1,0 +1,118 @@
+"""Quantization for TINA ops (paper §1 claim: mapping non-NN algorithms
+onto NN layers lets them inherit NN-ecosystem tooling such as
+quantization — the paper cites Brevitas/QAT; the TINA 16-bit variant in
+its Fig. 3 is this idea at fp16).
+
+Symmetric int8 post-training quantization of the TINA *kernels* (the
+conv/dense weights that carry the DFM, FIR taps, PFB prototype):
+
+    W_q = round(W / s),  s = max|W| / 127        (per output channel)
+    y  = (X_q W_q) · s_x · s_w                   (int32 accumulate)
+
+On TPU the int8 x int8 -> int32 matmul runs on the MXU at 2x bf16
+throughput (v5e: 394 TOPS int8), which is exactly the "NN-accelerator
+feature for free" the paper argues for.  Here the arithmetic is
+simulated in jnp (int32 accumulation semantics preserved) and validated
+by SQNR bounds in tests/test_quantize.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def quantize_symmetric(x: Array, *, axis=None, bits: int = 8):
+    """Returns (q int8, scale f32).  ``axis``: per-channel scales along
+    that axis (None = per-tensor)."""
+    qmax = 2 ** (bits - 1) - 1
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def qmatmul(x: Array, wq: Array, w_scale: Array, *,
+            quantize_activations: bool = True) -> Array:
+    """TINA matmul (pointwise-conv mapping) with an int8 kernel.
+
+    ``quantize_activations=True`` is the full-int8 path (int8 x int8 ->
+    int32 accumulate, the MXU-native form); False keeps activations in
+    float (weight-only quantization, the LLM-serving default)."""
+    if quantize_activations:
+        xq, x_scale = quantize_symmetric(x, axis=-1)
+        acc = jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32))
+        return acc.astype(jnp.float32) * x_scale * w_scale.reshape(
+            (1,) * (acc.ndim - 1) + (-1,))
+    return jnp.matmul(x.astype(jnp.float32),
+                      dequantize(wq, w_scale.reshape(1, -1)))
+
+
+# ---------------------------------------------------------------------------
+# quantized TINA signal ops
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=16)
+def _qdfm(n: int):
+    """int8-quantized Discrete Fourier Matrix (per-column scales)."""
+    lk = np.outer(np.arange(n), np.arange(n))
+    f = np.exp(-2j * np.pi * lk / n)
+    fr, fi = jnp.asarray(f.real, jnp.float32), jnp.asarray(f.imag, jnp.float32)
+    qr, sr = quantize_symmetric(fr, axis=0)
+    qi, si = quantize_symmetric(fi, axis=0)
+    return (qr, sr.reshape(-1)), (qi, si.reshape(-1))
+
+
+def qdft(x: Array, *, quantize_activations: bool = True) -> Array:
+    """DFT with an int8 Fourier-matrix kernel (paper §4.1 mapping +
+    §1 quantization claim)."""
+    n = x.shape[-1]
+    (qr, sr), (qi, si) = _qdfm(n)
+    shp = x.shape
+    x2 = x.reshape(-1, n)
+    zr = qmatmul(x2, qr, sr, quantize_activations=quantize_activations)
+    zi = qmatmul(x2, qi, si, quantize_activations=quantize_activations)
+    return (zr + 1j * zi).reshape(shp[:-1] + (n,))
+
+
+def qfir(x: Array, taps: Array, *,
+         quantize_activations: bool = False) -> Array:
+    """FIR with int8 taps via the unfold + matmul form of the standard
+    conv (weight-only by default: FIR inputs are streaming samples)."""
+    k = taps.shape[-1]
+    tq, ts = quantize_symmetric(taps.reshape(-1, 1), axis=0)
+    n = x.shape[-1]
+    idx = jnp.arange(n - k + 1)[:, None] + jnp.arange(k)[None, :]
+    windows = x[..., idx]                           # (..., n-k+1, k)
+    w2 = windows.reshape(-1, k)
+    y = qmatmul(w2, tq[::-1], ts,
+                quantize_activations=quantize_activations)
+    return y.reshape(x.shape[:-1] + (n - k + 1,))
+
+
+def qpfb(x: Array, taps: Array) -> Array:
+    """Full PFB with int8 prototype taps + int8 DFM (paper §5.2 use case
+    under the §1 quantization claim — the 'TINA 16 bit' column of the
+    paper's Fig. 3, pushed to int8 weights)."""
+    m, p = taps.shape
+    frames = x.reshape(x.shape[:-1] + (-1, p))
+    nfr = frames.shape[-2]
+    tq, ts = quantize_symmetric(taps[::-1], axis=0)   # per-branch scales
+    idx = jnp.arange(nfr - m + 1)[:, None] + jnp.arange(m)[None, :]
+    windows = frames[..., idx, :]                     # (..., t, m, p)
+    y = jnp.einsum("...tmp,mp->...tp", windows, dequantize(tq, ts))
+    return qdft(y, quantize_activations=False)
+
+
+__all__ = ["quantize_symmetric", "dequantize", "qmatmul", "qdft", "qfir",
+           "qpfb"]

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (Batch, input_specs, make_batch,
+                                 SyntheticDataset, prefetch)

@@ -1,0 +1,13 @@
+from repro.distributed.context import axis_rules, constrain, current_rules
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        opt_state_shardings, param_shardings,
+                                        spec_for)
+from repro.distributed.step import (make_decode_step, make_prefill_step,
+                                    make_train_step)
+
+__all__ = [
+    "axis_rules", "constrain", "current_rules",
+    "spec_for", "param_shardings", "opt_state_shardings",
+    "batch_shardings", "cache_shardings",
+    "make_train_step", "make_prefill_step", "make_decode_step",
+]

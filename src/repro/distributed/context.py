@@ -1,0 +1,8 @@
+"""Re-export of the logical-axis context (lives in repro.partitioning so
+model code can import it without triggering the distributed package
+__init__ -> step -> models import cycle)."""
+from repro.partitioning import (axis_rules, constrain, current_rules,
+                                default_rules, logical_to_spec)
+
+__all__ = ["axis_rules", "constrain", "current_rules", "default_rules",
+           "logical_to_spec"]

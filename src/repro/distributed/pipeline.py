@@ -1,0 +1,172 @@
+"""Pipeline parallelism over a ``stage`` mesh axis (opt-in runtime
+feature, DESIGN.md §4).
+
+GPipe-schedule microbatched pipeline built from ``shard_map`` +
+``lax.ppermute``:
+
+  * the layer stack's scan axis is split across stages (stage s owns
+    superblock repeats [s*R/S, (s+1)*R/S));
+  * microbatches stream through: each tick every stage applies its local
+    sub-stack to the activation it holds, then ppermutes it to the next
+    stage; stage 0 injects microbatch ``t`` at tick ``t``, the last
+    stage banks logits-loss for microbatch ``t`` at tick ``t + S - 1``;
+  * total ticks = n_micro + S - 1 (the classic pipeline bubble:
+    (S-1)/(n_micro+S-1) idle fraction — picking n_micro >= 4*S keeps it
+    under 6%);
+  * backward is ``jax.grad`` *through* the shard_mapped forward —
+    ppermute transposes to the reversed permutation, which reproduces
+    the backward activation flow; each stage's compute is wrapped in
+    ``jax.checkpoint`` so live activations stay O(ticks), per-microbatch
+    recompute (GPipe re-materialization schedule).
+
+Embedding + head run on every stage but are only *used* at stage 0 /
+stage S-1 (masked); their weights are tiny relative to a stage's share
+of the stack and this keeps the SPMD program uniform.
+
+Restriction: ``cfg.n_layers`` divisible by ``len(block_pattern) *
+n_stages`` and no cross-layer cache (training only).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers, model as model_lib
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def stage_split_params(params, n_stages: int):
+    """Re-shape the scan-stacked superblock params (reps, ...) into
+    (n_stages, reps/n_stages, ...); embed/head/norm stay replicated."""
+    def f(x):
+        reps = x.shape[0]
+        assert reps % n_stages == 0, (reps, n_stages)
+        return x.reshape((n_stages, reps // n_stages) + x.shape[1:])
+    out = dict(params)
+    out["stack"] = jax.tree.map(f, params["stack"])
+    return out
+
+
+def make_pipeline_train_step(cfg: ModelConfig, mesh: Mesh, *,
+                             n_micro: int, lr_fn=None):
+    """Returns a jitted (params, opt_state, batch) -> (params, opt_state,
+    metrics) step running the block stack as a ``stage``-axis pipeline.
+    ``mesh`` must have a ``stage`` axis; ``batch`` leading dim divides
+    into ``n_micro`` microbatches."""
+    from repro.optim import clip_by_global_norm, make_optimizer, warmup_cosine
+
+    n_stages = mesh.shape["stage"]
+    pat, reps, tail = model_lib._pattern_layout(cfg)
+    assert not tail, "pipeline requires n_layers divisible by the pattern"
+    assert reps % n_stages == 0, (reps, n_stages)
+    opt = make_optimizer(cfg, lr_fn or warmup_cosine(3e-4, 100, 10_000))
+
+    def superblock(x, p_sb, positions):
+        for i, kind in enumerate(pat):
+            x, _, _ = model_lib.apply_block(p_sb[f"sub{i}"], x, cfg, kind,
+                                            positions=positions, cache=None)
+        return x
+
+    def stage_fn(p_stage, x, positions):
+        """Apply this stage's reps/n_stages superblocks (scan)."""
+        def body(h, p_sb):
+            return superblock(h, p_sb, positions), None
+        x, _ = jax.lax.scan(body, x, p_stage)
+        return x
+
+    def pipeline_loss(params, batch):
+        """shard_map body: runs on every stage device."""
+        tokens = batch["tokens"]                      # (n_micro, mb, S)
+        stage = jax.lax.axis_index("stage")
+        nm, mb, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (mb, s))
+        p_stack = jax.tree.map(lambda x: x[0], params["stack"])  # local slice
+
+        fwd = jax.checkpoint(functools.partial(stage_fn, p_stack))
+
+        def tick(carry, t):
+            h, loss_sum, tok_sum = carry              # h: (mb, S, D)
+            mb_idx = jnp.clip(t, 0, nm - 1)
+            toks = jax.lax.dynamic_index_in_dim(tokens, mb_idx, 0,
+                                                keepdims=False)
+            emb = layers.embed(params["embed"], toks, cfg)
+            h_in = jnp.where(stage == 0, emb.astype(h.dtype), h)
+            h_out = fwd(h_in, positions)
+            # last stage: loss for the microbatch that entered t-(S-1) ago
+            hn = layers.norm(params["final_norm"], h_out, cfg)
+            if cfg.tie_embeddings:
+                logits = layers.unembed(params["embed"], hn, cfg)
+            else:
+                logits = layers.linear(params["head"],
+                                       hn.astype(jnp.float32),
+                                       cfg.scaled(use_tina=False))
+            out_idx = jnp.clip(t - (n_stages - 1), 0, nm - 1)
+            otoks = jax.lax.dynamic_index_in_dim(tokens, out_idx, 0,
+                                                 keepdims=False)
+            nll, denom = model_lib._ce(logits[:, :-1], otoks[:, 1:],
+                                       jnp.ones((mb, s - 1), jnp.float32))
+            use = ((stage == n_stages - 1) &
+                   (t >= n_stages - 1) & (t - (n_stages - 1) < nm))
+            loss_sum = loss_sum + jnp.where(use, nll * denom, 0.0)
+            tok_sum = tok_sum + jnp.where(use, denom, 0.0)
+            h_next = jax.lax.ppermute(
+                h_out, "stage",
+                [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return (h_next, loss_sum, tok_sum), None
+
+        d = cfg.d_model
+        h0 = jnp.zeros((mb, s, d), layers.cdtype(cfg))
+        (h, loss_sum, tok_sum), _ = jax.lax.scan(
+            tick, (h0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            jnp.arange(nm + n_stages - 1))
+        # broadcast the last stage's loss to all stages
+        loss_sum = jax.lax.psum(loss_sum, "stage")
+        tok_sum = jax.lax.psum(tok_sum, "stage")
+        return loss_sum / jnp.maximum(tok_sum, 1.0)
+
+    # --- shard_map wrapper -----------------------------------------------
+    stacked = P("stage")
+    repl = P()
+
+    def param_specs(params_shape):
+        def f(path, leaf):
+            keys = [getattr(k, "key", None) for k in path]
+            return stacked if keys and keys[0] == "stack" else repl
+        return jax.tree_util.tree_map_with_path(f, params_shape)
+
+    def loss_fn(params, batch):
+        params_spec = param_specs(params)
+        # check_rep=False: the attention scan's zero-initialized carries
+        # are stage-unvarying while the data is stage-varying, which the
+        # replication checker rejects; the psums above make replication
+        # explicit where it matters
+        fn = shard_map(pipeline_loss, mesh=mesh,
+                       in_specs=(params_spec, {"tokens": repl}),
+                       out_specs=repl, check_rep=False)
+        return fn(params, batch)
+
+    def train_step(params, opt_state, batch):
+        # batch: {"tokens": (B, S)} -> (n_micro, B/n_micro, S)
+        b = batch["tokens"].shape[0]
+        toks = batch["tokens"].reshape(n_micro, b // n_micro, -1)
+        sp = stage_split_params(params, n_stages)
+        loss, grads_sp = jax.value_and_grad(loss_fn)(sp, {"tokens": toks})
+        # merge stage axis back into the scan axis
+        grads = dict(grads_sp)
+        grads["stack"] = jax.tree.map(
+            lambda g: g.reshape((g.shape[0] * g.shape[1],) + g.shape[2:]),
+            grads_sp["stack"])
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    return jax.jit(train_step), opt

@@ -1,0 +1,195 @@
+"""Parameter / optimizer-state / batch / cache sharding rules.
+
+One ordered regex table maps every parameter path to a logical spec;
+logical names resolve through the active rule set (context.py).  The
+same table serves optimizer state (m/v mirror params; adafactor vr/vc
+drop the corresponding factored axis) — so checkpointed state re-shards
+consistently on elastic restore.
+
+TP legality note: specs shard *flattened feature dims* (e.g. the
+``h*hd`` output of wq), never the per-head axis, so head counts that
+don't divide the model axis (qwen2: 28 heads on 16-way TP) still shard
+evenly — 3584 = 16 x 224.  GSPMD propagates through the (b,s,h,hd)
+reshapes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.context import logical_to_spec
+from repro.models.config import ModelConfig
+
+# (path regex, logical spec for the *trailing* dims) — first match wins.
+# "fsdp" resolves to the data axis only when cfg.fsdp (rules handle it).
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    # embeddings: vocab-parallel, embed over fsdp
+    (r".*embed/table$",        ("vocab", "fsdp")),
+    (r".*head/w$",             ("fsdp", "vocab")),
+    # attention
+    (r".*(wq|wk|wv)/w$",       ("fsdp", "tp")),
+    (r".*(wq|wk|wv)/b$",       ("tp",)),
+    (r".*wo/w$",               ("tp", "fsdp")),
+    (r".*wo/b$",               (None,)),
+    # MoE experts: expert axis over model (EP), embed over fsdp
+    (r".*(w_up|w_gate)$",      ("expert", "fsdp", None)),
+    (r".*w_down$",             ("expert", None, "fsdp")),
+    (r".*router/w$",           (None, None)),
+    # dense MLP (also shared/dense-residual expert MLPs)
+    (r".*(up|gate)/w$",        ("fsdp", "tp")),
+    (r".*down/w$",             ("tp", "fsdp")),
+    # recurrentgemma RG-LRU
+    (r".*(in_x|in_gate|w_r|w_i)/w$", ("fsdp", "tp")),
+    (r".*rec/out/w$",          ("tp", "fsdp")),
+    (r".*conv_taps$",          (None, "tp")),
+    (r".*/lambda$",            ("tp",)),
+    # rwkv6
+    (r".*(wr|wk|wv|wg)/w$",    ("fsdp", "tp")),
+    (r".*(tm|cm)/wo/w$",       ("tp", "fsdp")),
+    (r".*mix_w1$",             ("fsdp", None)),
+    (r".*mix_w2$",             (None, None, "fsdp")),
+    (r".*td_w1$",              ("fsdp", None)),
+    (r".*td_w2$",              (None, "fsdp")),
+    (r".*(mu_base|mu_rwkvg|w0|u|ln_x)$", None),  # small: replicated
+    # frontends
+    (r".*frontend/proj/w$",    (None, "fsdp")),
+    (r".*conv_pos$",           (None, "fsdp")),
+]
+
+
+def _leaf_path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def legalize(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Make a spec pjit-legal: (a) drop mesh axes whose size doesn't
+    divide the dim (hubert's 504-entry vocab can't shard 16-way); (b)
+    drop axes already used by an earlier dim (the fsdp layout maps both
+    'vocab' and 'fsdp' to the model axis — first occurrence wins)."""
+    out = []
+    used: set = set()
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        axes = tuple(a for a in axes if a not in used)
+        if not axes:
+            out.append(None)
+            continue
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % size != 0:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def spec_for(path: str, ndim: int, rules: dict) -> P:
+    """Logical spec for a parameter path, resolved through ``rules``.
+    Leading axes not covered by the rule (the scan/stack ``reps`` axis)
+    are unsharded."""
+    if ndim == 0:
+        return P()
+    for pat, logical in _PARAM_RULES:
+        if re.match(pat, path):
+            if logical is None:
+                return P(*([None] * ndim))
+            spec = logical_to_spec(logical, rules)
+            if len(spec) > ndim:       # rank-reduced (e.g. bias-less match)
+                spec = P(*spec[-ndim:])
+            pad = ndim - len(spec)
+            return P(*([None] * pad + list(spec)))
+    if ndim == 1:
+        return P(None)
+    # default for unmatched matrices: fsdp on the largest dim
+    return P(*([None] * ndim))
+
+
+def param_shardings(params_shape, cfg: ModelConfig, mesh: Mesh, rules: dict):
+    """Pytree of NamedSharding aligned with ``params_shape`` (a pytree of
+    ShapeDtypeStruct or arrays)."""
+    def f(path, leaf):
+        spec = spec_for(_leaf_path_str(path), len(leaf.shape), rules)
+        return NamedSharding(mesh, legalize(spec, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def opt_state_shardings(opt_state_shape, cfg: ModelConfig, mesh: Mesh,
+                        rules: dict):
+    """AdamW m/v mirror the param spec; adafactor vr drops the last axis,
+    vc drops the second-to-last.  Paths look like
+    ``m/stack/sub0/attn/wq/w`` or ``s/stack/.../w/vr``."""
+    def f(path, leaf):
+        p = _leaf_path_str(path)
+        ndim = len(leaf.shape)
+        head, _, rest = p.partition("/")
+        if head in ("m", "v"):
+            spec = spec_for(rest, ndim, rules)
+        elif head == "s":
+            base, _, kind = rest.rpartition("/")
+            pspec = spec_for(base, ndim + (1 if kind in ("vr", "vc") else 0),
+                             rules)
+            if kind == "vr":
+                spec = P(*pspec[:-1])
+            elif kind == "vc":
+                spec = P(*(list(pspec[:-2]) + [pspec[-1]]))
+            else:
+                spec = P(*pspec[:ndim]) if len(pspec) >= ndim else pspec
+        else:                                    # count, ef residuals, ...
+            spec = P(*([None] * ndim))
+        return NamedSharding(mesh, legalize(spec, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(f, opt_state_shape)
+
+
+def batch_shardings(batch_shape, mesh: Mesh, rules: dict):
+    """Every batch leaf shards its leading (batch) dim over the DP axes."""
+    dp = rules.get("batch")
+    def f(leaf):
+        spec = P(*([dp] + [None] * (len(leaf.shape) - 1)))
+        return NamedSharding(mesh, legalize(spec, leaf.shape, mesh))
+    return jax.tree.map(f, batch_shape)
+
+
+def cache_shardings(cache_shape, cfg: ModelConfig, mesh: Mesh, rules: dict):
+    """KV caches: (B, S, Hkv, hd) -> (batch, None, tp-if-divisible, None).
+    Recurrent states: (B, ...) -> batch on dim 0, tp on the last (width)
+    dim when divisible.  Scalars (pos counters) replicated."""
+    model_size = int(np.prod([mesh.shape[a] for a in ("model",)
+                              if a in mesh.shape])) or 1
+    dp = rules.get("batch")
+    tp = rules.get("tp")
+
+    def f(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        p = _leaf_path_str(path)
+        spec = [None] * nd
+        # leading stack axis (scan-stacked caches): true batch is dim 1
+        bdim = 1 if p.startswith("stack") else 0
+        if nd > bdim:
+            spec[bdim] = dp
+        if p.endswith(("/k", "/v")) and nd >= bdim + 4:
+            if leaf.shape[bdim + 2] % model_size == 0:
+                spec[bdim + 2] = tp
+        elif p.endswith("/S"):
+            pass                      # rwkv wkv state: batch-sharded only
+        elif nd >= bdim + 2 and leaf.shape[-1] % model_size == 0 \
+                and not p.endswith("pos"):
+            spec[-1] = tp
+        return NamedSharding(mesh, legalize(P(*spec), leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(f, cache_shape)

@@ -1,0 +1,222 @@
+"""Step builders: sharded train / prefill / decode steps.
+
+Each builder returns ``(jitted_fn, specs)`` where ``specs`` carries the
+ShapeDtypeStructs and NamedShardings for every operand — the dry-run
+lowers against exactly these (launch/dryrun.py), and the real trainer
+(runtime/trainer.py) allocates against them, so the proven-compilable
+configuration *is* the executed one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.data import pipeline as data_pipeline
+from repro.distributed import sharding as shr
+from repro.distributed.context import axis_rules, default_rules
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.optim import (adamw, clip_by_global_norm, make_optimizer,
+                         warmup_cosine)
+from repro.optim.compress import compress_bf16
+
+
+@dataclasses.dataclass
+class StepSpecs:
+    params: Any           # ShapeDtypeStructs
+    params_sh: Any        # NamedShardings
+    opt_state: Any = None
+    opt_state_sh: Any = None
+    batch: Any = None
+    batch_sh: Any = None
+    caches: Any = None
+    caches_sh: Any = None
+    rules: dict = None
+
+
+def _rules_for(cfg: ModelConfig, mesh: Mesh, *, batch_size: int = None,
+               sequence_parallel: bool = False, layout: str = "tp") -> dict:
+    multi_pod = "pod" in mesh.shape
+    rules = default_rules(multi_pod=multi_pod, fsdp=cfg.fsdp,
+                          sequence_parallel=sequence_parallel, layout=layout)
+    rules["__mesh__"] = mesh      # lets constrain() work during AOT lower
+    if batch_size is not None and rules.get("batch"):
+        dp = rules["batch"] if isinstance(rules["batch"], tuple) \
+            else (rules["batch"],)
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        if batch_size % dp_size:
+            # e.g. long_500k decode: global_batch=1 — latency-bound
+            # serving replicates over the data axes, TP does the work
+            rules["batch"] = None
+    return rules
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, *, batch_size: int,
+                    seq_len: int, lr_fn=None, grad_wire: str = "bf16",
+                    microbatch: Optional[int] = None,
+                    sequence_parallel: bool = False, layout: str = "tp",
+                    donate: bool = True):
+    """Sharded train step: fwd + bwd + clip + optimizer update.
+
+    ``grad_wire="bf16"`` casts gradients to bf16 before the (GSPMD-
+    inserted) DP all-reduce — the reduction moves half the bytes on ICI
+    and, multi-pod, on DCN (optim/compress.py).
+    ``microbatch=k`` accumulates gradients over k sequential slices of
+    the global batch (activation-memory lever for the 1T-class cells).
+    """
+    rules = _rules_for(cfg, mesh, batch_size=batch_size,
+                       sequence_parallel=sequence_parallel, layout=layout)
+    opt = make_optimizer(cfg, lr_fn or warmup_cosine(3e-4, 2000, 100_000))
+
+    def grads_of(params, batch):
+        def lf(p):
+            return model_lib.loss_fn(p, batch, cfg)
+        (_, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        if grad_wire == "bf16":
+            grads = compress_bf16(grads)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        with axis_rules(rules):
+            if microbatch and microbatch > 1:
+                def mb_slice(b, i):
+                    return jax.tree.map(
+                        lambda x: jax.lax.dynamic_slice_in_dim(
+                            x, i * (x.shape[0] // microbatch),
+                            x.shape[0] // microbatch, 0), b)
+
+                def body(carry, i):
+                    g_acc, m_acc = carry
+                    g, m = grads_of(params, mb_slice(batch, i))
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                    m_acc = jax.tree.map(jnp.add, m_acc, m)
+                    return (g_acc, m_acc), None
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                m0 = {"loss": jnp.zeros((), jnp.float32),
+                      "tokens": jnp.zeros((), jnp.float32),
+                      "moe_aux_loss": jnp.zeros((), jnp.float32),
+                      "moe_drop_frac": jnp.zeros((), jnp.float32)}
+                (grads, metrics), _ = jax.lax.scan(
+                    body, (g0, m0), jnp.arange(microbatch))
+                grads = jax.tree.map(lambda g: g / microbatch, grads)
+                metrics = jax.tree.map(lambda m: m / microbatch, metrics)
+            else:
+                grads, metrics = grads_of(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+            new_params, new_opt = opt.update(grads, opt_state, params)
+            metrics = dict(metrics)
+            metrics["grad_norm"] = gnorm
+        return new_params, new_opt, metrics
+
+    # ---- specs -------------------------------------------------------------
+    params_s = jax.eval_shape(
+        lambda: model_lib.init_model(jax.random.PRNGKey(0), cfg))
+    opt_s = jax.eval_shape(opt.init, params_s)
+    batch_s = data_pipeline.input_specs(cfg, batch_size, seq_len)
+    specs = StepSpecs(
+        params=params_s,
+        params_sh=shr.param_shardings(params_s, cfg, mesh, rules),
+        opt_state=opt_s,
+        opt_state_sh=shr.opt_state_shardings(opt_s, cfg, mesh, rules),
+        batch=batch_s,
+        batch_sh=shr.batch_shardings(batch_s, mesh, rules),
+        rules=rules,
+    )
+    metrics_sh = NamedSharding(mesh, P())
+    fn = jax.jit(
+        train_step,
+        in_shardings=(specs.params_sh, specs.opt_state_sh, specs.batch_sh),
+        out_shardings=(specs.params_sh, specs.opt_state_sh,
+                       jax.tree.map(lambda _: metrics_sh,
+                                    {"loss": 0, "tokens": 0,
+                                     "moe_aux_loss": 0, "moe_drop_frac": 0,
+                                     "grad_norm": 0})),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return fn, specs
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, *, batch_size: int,
+                      seq_len: int, layout: str = "tp"):
+    """Forward the full prompt, fill the KV/recurrent caches, return the
+    last-position logits + caches (inference-prefill shape cells)."""
+    rules = _rules_for(cfg, mesh, batch_size=batch_size, layout=layout)
+
+    def prefill(params, batch, caches):
+        with axis_rules(rules):
+            logits, new_caches, _ = model_lib.forward(
+                params, batch, cfg, caches=caches, remat=False)
+        return logits[:, -1], new_caches
+
+    params_s = jax.eval_shape(
+        lambda: model_lib.init_model(jax.random.PRNGKey(0), cfg))
+    batch_s = data_pipeline.input_specs(cfg, batch_size, seq_len)
+    caches_s = jax.eval_shape(
+        functools.partial(model_lib.init_caches, cfg, batch_size, seq_len))
+    specs = StepSpecs(
+        params=params_s,
+        params_sh=shr.param_shardings(params_s, cfg, mesh, rules),
+        batch=batch_s,
+        batch_sh=shr.batch_shardings(batch_s, mesh, rules),
+        caches=caches_s,
+        caches_sh=shr.cache_shardings(caches_s, cfg, mesh, rules),
+        rules=rules,
+    )
+    logits_sh = NamedSharding(mesh, shr.legalize(
+        P(rules.get("batch"), "model"), (batch_size, cfg.vocab_size), mesh))
+    fn = jax.jit(prefill,
+                 in_shardings=(specs.params_sh, specs.batch_sh,
+                               specs.caches_sh),
+                 out_shardings=(logits_sh, specs.caches_sh),
+                 donate_argnums=(2,))
+    return fn, specs
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, *, batch_size: int,
+                     cache_len: int, layout: str = "tp"):
+    """One autoregressive token against a ``cache_len`` KV cache (the
+    ``decode_*`` / ``long_*`` shape cells lower this, not train_step)."""
+    rules = _rules_for(cfg, mesh, batch_size=batch_size, layout=layout)
+
+    def decode(params, tokens, caches):
+        with axis_rules(rules):
+            logits, new_caches = model_lib.decode_step(params, tokens,
+                                                       caches, cfg)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_caches
+
+    params_s = jax.eval_shape(
+        lambda: model_lib.init_model(jax.random.PRNGKey(0), cfg))
+    caches_s = jax.eval_shape(
+        functools.partial(model_lib.init_caches, cfg, batch_size, cache_len))
+    specs = StepSpecs(
+        params=params_s,
+        params_sh=shr.param_shardings(params_s, cfg, mesh, rules),
+        batch=jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+        batch_sh=NamedSharding(mesh, P(rules.get("batch"))),
+        caches=caches_s,
+        caches_sh=shr.cache_shardings(caches_s, cfg, mesh, rules),
+        rules=rules,
+    )
+    tok_sh = NamedSharding(mesh, shr.legalize(
+        P(rules.get("batch")), (batch_size,), mesh))
+    logits_sh = NamedSharding(mesh, shr.legalize(
+        P(rules.get("batch"), "model"), (batch_size, cfg.vocab_size), mesh))
+    fn = jax.jit(decode,
+                 in_shardings=(specs.params_sh, specs.batch_sh,
+                               specs.caches_sh),
+                 out_shardings=(tok_sh, logits_sh, specs.caches_sh),
+                 donate_argnums=(2,))
+    return fn, specs

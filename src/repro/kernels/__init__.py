@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the TINA hot spots (validated via interpret
+mode on CPU): matmul (MXU pointwise-conv target), complex DFT
+(3mult/4mult), sliding-window FIR, fused PFB, zero-FLOP unfold,
+VPU elementwise.  ``ops`` is the public jit'd dispatch layer; ``ref``
+holds the pure-jnp oracles."""

@@ -1,0 +1,48 @@
+"""VPU elementwise kernels — the TPU-native lowering of the TINA
+depthwise-conv elementwise mult/add mappings (paper §3.1/§3.3).
+
+Trivial by design: the point (DESIGN.md §2) is that on TPU the
+"NN-accelerator" unit for per-element work is the VPU, so the TINA
+depthwise-conv mapping lowers to a blocked elementwise kernel, not a
+convolution.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mult_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] * y_ref[...]
+
+
+def _add_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def _binary(kernel, x, y, *, bm, bn, interpret):
+    m, n = x.shape
+    assert m % bm == 0 and n % bn == 0, (x.shape, (bm, bn))
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))] * 2,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, y)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def elementwise_mult(x, y, *, bm: int = 256, bn: int = 256,
+                     interpret: bool = False):
+    return _binary(_mult_kernel, x, y, bm=bm, bn=bn, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def elementwise_add(x, y, *, bm: int = 256, bn: int = 256,
+                    interpret: bool = False):
+    return _binary(_add_kernel, x, y, bm=bm, bn=bn, interpret=interpret)

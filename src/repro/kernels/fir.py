@@ -1,0 +1,62 @@
+"""Sliding-window FIR kernel — TINA §4.3 on TPU.
+
+Direct-form cross-correlation out[b, t] = Σ_k x[b, t+k] · kern[k]
+('valid'; the public wrapper handles flip/same/full by pre-flipping and
+padding).
+
+Halo handling: the output is blocked (bb, bn) and each output block
+needs input [j·bn, j·bn + bn + K − 1).  Overlapping BlockSpecs can't
+tile an array, so the kernel takes the SAME input array through two
+blocked views — block j and block j+1 — and concatenates them in VMEM
+(requires K − 1 ≤ bn; the wrapper right-pads x by one extra block).
+This is the standard TPU halo-exchange-in-VMEM pattern and keeps every
+access a clean (bb, bn) tile in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fir_kernel(x_ref, xnext_ref, k_ref, o_ref, *, ktaps: int):
+    xcat = jnp.concatenate([x_ref[...], xnext_ref[...]], axis=1)  # (bb, 2bn)
+    bb, bn = o_ref.shape
+
+    def body(k, acc):
+        win = jax.lax.dynamic_slice(xcat, (0, k), (bb, bn))
+        return acc + k_ref[0, k] * win.astype(jnp.float32)
+
+    acc = jax.lax.fori_loop(
+        0, ktaps, body, jnp.zeros((bb, bn), jnp.float32))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bn", "interpret"))
+def fir_valid(x: jax.Array, kern: jax.Array, *, bb: int = 8, bn: int = 512,
+              interpret: bool = False) -> jax.Array:
+    """x: (B, N); kern: (K,) with K − 1 ≤ bn.  Returns (B, N − K + 1).
+    B % bb == 0 and N % bn == 0 required (ops.py pads); the tail block
+    reads one block past the valid region, so x is padded by bn here."""
+    b, n = x.shape
+    k = kern.shape[0]
+    assert b % bb == 0 and n % bn == 0, (x.shape, (bb, bn))
+    assert k - 1 <= bn, f"taps {k} exceed halo block {bn}"
+    nout = n - k + 1
+    nblocks = pl.cdiv(nout, bn)
+    xp = jnp.pad(x, ((0, 0), (0, 2 * bn)))  # halo for the last block
+    out = pl.pallas_call(
+        functools.partial(_fir_kernel, ktaps=k),
+        grid=(b // bb, nblocks),
+        in_specs=[
+            pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bb, bn), lambda i, j: (i, j + 1)),
+            pl.BlockSpec((1, k), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, nblocks * bn), x.dtype),
+        interpret=interpret,
+    )(xp, xp, kern.reshape(1, k))
+    return out[:, :nout]

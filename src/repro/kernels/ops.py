@@ -1,0 +1,162 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These are what :mod:`repro.core.functions` dispatches to for
+``lowering="pallas"``: each wrapper handles batching, padding to block
+multiples, and interpret-mode selection (kernels execute via the Pallas
+interpreter off-TPU so CPU CI validates the TPU kernel bodies).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import dft as dft_kernel
+from repro.kernels import elementwise as ew_kernel
+from repro.kernels import fir as fir_kernel
+from repro.kernels import matmul as mm_kernel
+from repro.kernels import pfb as pfb_kernel
+from repro.kernels import unfold as unfold_kernel
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: Array, mults: tuple[int, ...]) -> Array:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+# ---------------------------------------------------------------------------
+def matmul(x: Array, y: Array, *, bm: int = 128, bn: int = 128,
+           bk: int = 128) -> Array:
+    """x (..., M, L) @ y (L, N) through the MXU-tiled kernel."""
+    m, l = x.shape[-2], x.shape[-1]
+    n = y.shape[1]
+    batch = x.shape[:-2]
+    x2 = _pad_to(x.reshape((-1, l)), (bm, bk))
+    y2 = _pad_to(y, (bk, bn))
+    out = mm_kernel.matmul(x2, y2, bm=bm, bn=bn, bk=bk, interpret=_interpret())
+    rows = int(np.prod(batch)) * m if batch else m
+    return out[:rows, :n].reshape(batch + (m, n))
+
+
+def elementwise_mult(x: Array, y: Array) -> Array:
+    shape = jnp.broadcast_shapes(x.shape, y.shape)
+    xb = jnp.broadcast_to(x, shape).reshape((-1, shape[-1]))
+    yb = jnp.broadcast_to(y, shape).reshape((-1, shape[-1]))
+    bm = min(256, max(8, xb.shape[0]))
+    bn = min(256, max(128, xb.shape[1]))
+    out = ew_kernel.elementwise_mult(
+        _pad_to(xb, (bm, bn)), _pad_to(yb, (bm, bn)), bm=bm, bn=bn,
+        interpret=_interpret())
+    return out[: xb.shape[0], : xb.shape[1]].reshape(shape)
+
+
+def elementwise_add(x: Array, y: Array) -> Array:
+    shape = jnp.broadcast_shapes(x.shape, y.shape)
+    xb = jnp.broadcast_to(x, shape).reshape((-1, shape[-1]))
+    yb = jnp.broadcast_to(y, shape).reshape((-1, shape[-1]))
+    bm = min(256, max(8, xb.shape[0]))
+    bn = min(256, max(128, xb.shape[1]))
+    out = ew_kernel.elementwise_add(
+        _pad_to(xb, (bm, bn)), _pad_to(yb, (bm, bn)), bm=bm, bn=bn,
+        interpret=_interpret())
+    return out[: xb.shape[0], : xb.shape[1]].reshape(shape)
+
+
+def dft(xr: Array, xi: Array, fr: Array, fi: Array, *,
+        variant: str = "3mult", bm: int = 128, bn: int = 128,
+        bk: int = 128) -> tuple[Array, Array]:
+    """(B, L) real/imag through the blocked complex-DFT kernel."""
+    b, l = xr.shape
+    n = fr.shape[1]
+    xr2, xi2 = _pad_to(xr, (bm, bk)), _pad_to(xi, (bm, bk))
+    fr2, fi2 = _pad_to(fr, (bk, bn)), _pad_to(fi, (bk, bn))
+    zr, zi = dft_kernel.dft(xr2, xi2, fr2, fi2, variant=variant,
+                            bm=bm, bn=bn, bk=bk, interpret=_interpret())
+    return zr[:b, :n], zi[:b, :n]
+
+
+def fir(x: Array, kern: Array, *, mode: str = "valid") -> Array:
+    """Cross-correlation with ``kern`` (caller pre-flips for true FIR);
+    mode via explicit padding then the 'valid' kernel."""
+    k = kern.shape[0]
+    if mode == "same":
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [((k - 1) // 2, k // 2)])
+    elif mode == "full":
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(k - 1, k - 1)])
+    batch = x.shape[:-1]
+    n = x.shape[-1]
+    bn = max(512, 1 << (k - 1).bit_length())  # halo needs K-1 <= bn
+    x2 = _pad_to(x.reshape((-1, n)), (8, bn))
+    out = fir_kernel.fir_valid(x2, kern, bb=8, bn=bn, interpret=_interpret())
+    rows = int(np.prod(batch)) if batch else 1
+    # padded columns shift the valid length; slice to the true one
+    return out[:rows, : n - k + 1].reshape(batch + (n - k + 1,))
+
+
+def unfold(x: Array, window: int) -> Array:
+    batch = x.shape[:-1]
+    n = x.shape[-1]
+    bt = max(512, 1 << (window - 1).bit_length())
+    x2 = _pad_to(x.reshape((-1, n)), (8, bt))
+    out = unfold_kernel.unfold(x2, window, bb=8, bt=bt,
+                               interpret=_interpret())
+    rows = int(np.prod(batch)) if batch else 1
+    return out[:rows, : n - window + 1].reshape(
+        batch + (n - window + 1, window))
+
+
+def pfb_fir(frames: Array, taps: Array) -> Array:
+    """Frontend only: (..., T, P), (M, P) -> (..., T − M + 1, P).
+    Runs the fused kernel with the identity 'DFT' (F = I) so the FIR
+    path is exercised; cheaper than a separate kernel and still fused."""
+    m, p = taps.shape
+    batch = frames.shape[:-2]
+    t = frames.shape[-2]
+    f3 = frames.reshape((-1, t, p))
+    bt = min(256, t)
+    f3 = jnp.pad(f3, ((0, 0), (0, (-t) % bt), (0, 0)))
+    eye = jnp.eye(p, dtype=jnp.float32)
+    zeros = jnp.zeros((p, p), jnp.float32)
+    bn = min(128, p)
+    zr, _ = pfb_kernel.pfb_fused(f3, taps[::-1].astype(f3.dtype), eye, zeros,
+                                 bt=bt, bn=bn, interpret=_interpret())
+    tout = t - m + 1
+    return zr[:, :tout].astype(frames.dtype).reshape(batch + (tout, p))
+
+
+def pfb(x: Array, taps: Array, *, variant: str = "4mult") -> Array:
+    """Full fused PFB: (..., n_samples), (M, P) -> complex
+    (..., n_frames − M + 1, P)."""
+    m, p = taps.shape
+    if x.shape[-1] % p:
+        raise ValueError(f"n_samples {x.shape[-1]} not divisible by P={p}")
+    batch = x.shape[:-1]
+    frames = x.reshape((-1, x.shape[-1] // p, p))
+    t = frames.shape[1]
+    bt = min(256, t)
+    frames = jnp.pad(frames, ((0, 0), (0, (-t) % bt), (0, 0)))
+    lk = np.outer(np.arange(p), np.arange(p))
+    f = np.exp(-2j * np.pi * lk / p)
+    fr = jnp.asarray(f.real, jnp.float32)
+    fi = jnp.asarray(f.imag, jnp.float32)
+    bn = min(128, p)
+    zr, zi = pfb_kernel.pfb_fused(frames, taps[::-1].astype(frames.dtype),
+                                  fr, fi, variant=variant, bt=bt, bn=bn,
+                                  interpret=_interpret())
+    tout = t - m + 1
+    z = zr[:, :tout] + 1j * zi[:, :tout]
+    return z.reshape(batch + (tout, p))
+
+
+__all__ = ["matmul", "elementwise_mult", "elementwise_add", "dft", "fir",
+           "unfold", "pfb_fir", "pfb"]

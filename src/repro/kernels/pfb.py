@@ -1,0 +1,89 @@
+"""Fused polyphase filter bank kernel — TINA §5.2 on TPU, fused.
+
+The paper composes the PFB as separate NN layers (bank of FIR convs →
+DFT pointwise conv) through GPU HBM, and names memory as TINA's main
+limitation.  This kernel fuses both stages: each grid step computes a
+(bt, P) tile of subfiltered frames in VMEM (VPU: M shifted
+multiply-accumulates against the taps) and immediately feeds it to the
+branch-axis DFT matmul (MXU) — the intermediate y_p(n') never touches
+HBM.
+
+Halo over the frame axis uses the two-adjacent-blocks pattern
+(see fir.py); requires M − 1 ≤ bt.
+
+Grid: (B, T/bt, P/bn).  The FIR tile is recomputed per DFT column block
+— M·bt·P VPU MACs versus bt·P·bn MXU MACs, negligible for M ≪ P — a
+deliberate recompute-over-memory trade (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pfb_kernel(x_ref, xnext_ref, taps_ref, fr_ref, fi_ref,
+                zr_ref, zi_ref, *, m: int, variant: str):
+    bt = zr_ref.shape[1]
+    p = x_ref.shape[2]
+    xcat = jnp.concatenate([x_ref[0], xnext_ref[0]], axis=0)  # (2bt, P)
+
+    def body(k, acc):
+        win = jax.lax.dynamic_slice(xcat, (k, 0), (bt, p))
+        # taps stored pre-reversed: row k multiplies frame offset k
+        return acc + taps_ref[k, :][None, :].astype(jnp.float32) * win.astype(jnp.float32)
+
+    y = jax.lax.fori_loop(0, m, body, jnp.zeros((bt, p), jnp.float32))
+
+    fr, fi = fr_ref[...].astype(jnp.float32), fi_ref[...].astype(jnp.float32)
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+    # real input signal: the complex DFT needs only 2 real matmuls
+    # (the 3mult/4mult distinction applies to complex inputs — dft.py)
+    del variant
+    zr_ref[0] = dot(y, fr).astype(zr_ref.dtype)
+    zi_ref[0] = dot(y, fi).astype(zi_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("variant", "bt", "bn", "interpret"))
+def pfb_fused(frames: jax.Array, taps_rev: jax.Array,
+              fr: jax.Array, fi: jax.Array, *, variant: str = "4mult",
+              bt: int = 256, bn: int = 128,
+              interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """frames: (B, T, P) branch-decomposed signal; taps_rev: (M, P)
+    pre-reversed taps; fr/fi: (P, N) Fourier matrix (N == P normally).
+    Returns (zr, zi): (B, Tout_padded, N) — caller slices to T − M + 1.
+    Requires T % bt == 0, P % bn == 0 (or P < bn: caller pads), M−1 ≤ bt.
+    """
+    b, t, p = frames.shape
+    m = taps_rev.shape[0]
+    n = fr.shape[1]
+    assert t % bt == 0 and n % bn == 0 and p == fr.shape[0]
+    assert m - 1 <= bt, f"taps {m} exceed halo block {bt}"
+    tout = t - m + 1
+    tblocks = pl.cdiv(tout, bt)
+    xp = jnp.pad(frames, ((0, 0), (0, 2 * bt), (0, 0)))
+    kernel = functools.partial(_pfb_kernel, m=m, variant=variant)
+    zr, zi = pl.pallas_call(
+        kernel,
+        grid=(b, tblocks, n // bn),
+        in_specs=[
+            pl.BlockSpec((1, bt, p), lambda i, j, c: (i, j, 0)),
+            pl.BlockSpec((1, bt, p), lambda i, j, c: (i, j + 1, 0)),
+            pl.BlockSpec((m, p), lambda i, j, c: (0, 0)),
+            pl.BlockSpec((p, bn), lambda i, j, c: (0, c)),
+            pl.BlockSpec((p, bn), lambda i, j, c: (0, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, bn), lambda i, j, c: (i, j, c)),
+            pl.BlockSpec((1, bt, bn), lambda i, j, c: (i, j, c)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, tblocks * bt, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, tblocks * bt, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, xp, taps_rev, fr, fi)
+    return zr[:, :tout], zi[:, :tout]

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` matches the signature of the corresponding public op in
+:mod:`repro.kernels.ops` exactly; kernel tests sweep shapes/dtypes and
+``assert_allclose`` kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ref_matmul(x: Array, y: Array) -> Array:
+    return jnp.matmul(x, y, precision=jax.lax.Precision.HIGHEST)
+
+
+def ref_elementwise_mult(x: Array, y: Array) -> Array:
+    return x * y
+
+
+def ref_elementwise_add(x: Array, y: Array) -> Array:
+    return x + y
+
+
+def ref_dft(xr: Array, xi: Array, fr: Array, fi: Array) -> tuple[Array, Array]:
+    """Complex matmul (Xr + iXi)(Fr + iFi) as the real/imag pair."""
+    mm = ref_matmul
+    return mm(xr, fr) - mm(xi, fi), mm(xr, fi) + mm(xi, fr)
+
+
+def ref_fir_valid(x: Array, kern: Array) -> Array:
+    """Cross-correlation, 'valid': out[.., t] = sum_k x[.., t+k] kern[k]."""
+    k = kern.shape[0]
+    n = x.shape[-1]
+    idx = jnp.arange(n - k + 1)[:, None] + jnp.arange(k)[None, :]
+    return jnp.einsum("...tk,k->...t", x[..., idx], kern)
+
+
+def ref_unfold(x: Array, window: int) -> Array:
+    n = x.shape[-1]
+    idx = jnp.arange(n - window + 1)[:, None] + jnp.arange(window)[None, :]
+    return x[..., idx]
+
+
+def ref_pfb_fir(frames: Array, taps: Array) -> Array:
+    """frames (..., n', P), taps (M, P) -> (..., n'-M+1, P):
+    y[.., t, p] = sum_m taps[M-1-m, p] * frames[.., t+m, p]  (true FIR)."""
+    m = taps.shape[0]
+    nfr = frames.shape[-2]
+    idx = jnp.arange(nfr - m + 1)[:, None] + jnp.arange(m)[None, :]
+    return jnp.einsum("...tmp,mp->...tp", frames[..., idx, :], taps[::-1, :])
+
+
+def ref_pfb(x: Array, taps: Array) -> tuple[Array, Array]:
+    """Full PFB: branch decompose + FIR + DFT over branches.
+    Returns (real, imag) of shape (..., n'-M+1, P)."""
+    m, p = taps.shape
+    frames = x.reshape(x.shape[:-1] + (-1, p))
+    y = ref_pfb_fir(frames, taps)
+    z = jnp.fft.fft(y.astype(jnp.float32), axis=-1)
+    return jnp.real(z), jnp.imag(z)

@@ -1,0 +1,53 @@
+"""Unfold kernel — TINA §4.4 as pure data movement.
+
+The paper implements Y(i, j) = X(i + j) as a standard conv with an
+identity kernel: N·J² MACs for an op with zero arithmetic.  The TPU
+adaptation (DESIGN.md §2) makes unfold what it really is — an
+HBM→VMEM→HBM tiling:  each grid step loads two adjacent (bb, bt) input
+blocks (frame-axis halo, see fir.py) and writes the (bb, bt, J) window
+tile with J shifted VMEM copies.  Zero MXU FLOPs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _unfold_kernel(x_ref, xnext_ref, o_ref, *, window: int):
+    bb, bt, _ = o_ref.shape
+    xcat = jnp.concatenate([x_ref[...], xnext_ref[...]], axis=1)  # (bb, 2bt)
+
+    def body(j, _):
+        o_ref[:, :, j] = jax.lax.dynamic_slice(xcat, (0, j), (bb, bt))
+        return 0
+
+    jax.lax.fori_loop(0, window, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bb", "bt", "interpret"))
+def unfold(x: jax.Array, window: int, *, bb: int = 8, bt: int = 512,
+           interpret: bool = False) -> jax.Array:
+    """x: (B, N) -> (B, N − J + 1, J).  B % bb == 0, N % bt == 0 (ops.py
+    pads); J − 1 ≤ bt."""
+    b, n = x.shape
+    j = window
+    assert b % bb == 0 and n % bt == 0, (x.shape, (bb, bt))
+    assert j - 1 <= bt, f"window {j} exceeds halo block {bt}"
+    nout = n - j + 1
+    tblocks = pl.cdiv(nout, bt)
+    xp = jnp.pad(x, ((0, 0), (0, 2 * bt)))
+    out = pl.pallas_call(
+        functools.partial(_unfold_kernel, window=j),
+        grid=(b // bb, tblocks),
+        in_specs=[
+            pl.BlockSpec((bb, bt), lambda i, t: (i, t)),
+            pl.BlockSpec((bb, bt), lambda i, t: (i, t + 1)),
+        ],
+        out_specs=pl.BlockSpec((bb, bt, j), lambda i, t: (i, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, tblocks * bt, j), x.dtype),
+        interpret=interpret,
+    )(xp, xp)
+    return out[:, :nout]

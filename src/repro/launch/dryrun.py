@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax-importing import: jax locks the device count at
+# first init, and the production meshes need 512 placeholder devices.
+
+"""Multi-pod dry-run (deliverable e): prove every (architecture x input
+shape x mesh) combination lowers, SPMD-partitions and compiles on the
+production meshes, and extract the roofline terms (deliverable g) from
+the compiled artifact.
+
+Per cell:
+    with mesh:
+        lowered  = jit(step, in_shardings=..., out_shardings=...).lower(specs)
+        compiled = lowered.compile()
+        memory_analysis() / cost_analysis() / as_text() -> roofline row
+
+Usage:
+    python -m repro.launch.dryrun --arch olmo_1b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.analysis import roofline as roofline_lib
+from repro.configs import ARCHS, get
+from repro.distributed import step as step_lib
+from repro.launch import shapes as shapes_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_lib
+
+
+def count_params(cfg) -> tuple[float, float]:
+    """(total, active) parameter counts from eval_shape (no allocation)."""
+    params = jax.eval_shape(
+        lambda: model_lib.init_model(jax.random.PRNGKey(0), cfg))
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    total = expert = 0
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = "/".join(str(getattr(k, "key", "")) for k in path)
+        if any(w in keys for w in ("w_up", "w_gate", "w_down")):
+            expert += n
+    if cfg.moe and cfg.n_experts:
+        active = total - expert + expert * cfg.n_experts_per_token / cfg.n_experts
+    else:
+        active = total
+    return float(total), float(active)
+
+
+def build_lowered(cfg, cell, mesh, *, layout: str = "tp",
+                  microbatch=None):
+    """Lower the right step kind against ShapeDtypeStruct specs."""
+    if cell.kind == "train":
+        fn, specs = step_lib.make_train_step(
+            cfg, mesh, batch_size=cell.global_batch, seq_len=cell.seq_len,
+            layout=layout, microbatch=microbatch)
+        args = (specs.params, specs.opt_state, specs.batch)
+    elif cell.kind == "prefill":
+        fn, specs = step_lib.make_prefill_step(
+            cfg, mesh, batch_size=cell.global_batch, seq_len=cell.seq_len,
+            layout=layout)
+        args = (specs.params, specs.batch, specs.caches)
+    elif cell.kind == "decode":
+        fn, specs = step_lib.make_decode_step(
+            cfg, mesh, batch_size=cell.global_batch, cache_len=cell.seq_len,
+            layout=layout)
+        args = (specs.params, specs.batch, specs.caches)
+    else:
+        raise ValueError(cell.kind)
+    return fn.lower(*args), specs
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _cell_metrics(cfg, cell, mesh, *, layout="tp", microbatch=None):
+    """(flops, bytes, CollectiveStats, memory, compile_s) for one lower."""
+    t0 = time.time()
+    with mesh:
+        lowered, _ = build_lowered(cfg, cell, mesh, layout=layout,
+                                   microbatch=microbatch)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):           # older API: one dict per device
+            cost = cost[0]
+        memory = _memory_dict(compiled)
+        hlo = compiled.as_text()
+    stats = roofline_lib.parse_collectives(hlo)
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            stats, memory, time.time() - t0)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             mesh=None, scan_correct: bool = True, layout: str = "tp",
+             moe_dispatch: str = None, microbatch: int = None,
+             cfg_overrides: dict = None) -> dict:
+    cfg = get(arch)
+    if moe_dispatch:
+        cfg = cfg.scaled(moe_dispatch=moe_dispatch)
+    if cfg_overrides:
+        cfg = cfg.scaled(**cfg_overrides)
+    cell = shapes_lib.SHAPES[shape_name]
+    skip = shapes_lib.skip_reason(cfg, cell)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    base = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "kind": cell.kind, "status": "skip", "skip_reason": skip}
+    if skip:
+        return base
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    base["mesh_shape"] = dict(mesh.shape)
+
+    # full production program: THE dry-run artifact (memory, shardability)
+    flops, byts, stats, memory, t_full = _cell_metrics(
+        cfg, cell, mesh, layout=layout, microbatch=microbatch)
+
+    # XLA cost_analysis counts a scan body once, not x trip-count — probe
+    # 1- and 2-superblock UNROLLED programs; the delta is one superblock's
+    # true cost, then add the missing (reps - 1) copies to every metric.
+    pat_len = len(cfg.block_pattern)
+    reps = cfg.n_layers // pat_len
+    t_probe = 0.0
+    if scan_correct and reps > 1:
+        # probes run WITHOUT the microbatch scan (cost_analysis would
+        # count its body once too); per-layer cost is linear in tokens,
+        # so the full-batch delta equals the summed per-microbatch cost
+        cfg1 = cfg.scaled(n_layers=pat_len, use_scan=False, remat_group=1)
+        cfg2 = cfg.scaled(n_layers=2 * pat_len, use_scan=False,
+                          remat_group=1)
+        f1, b1, s1, _, tp1 = _cell_metrics(cfg1, cell, mesh, layout=layout)
+        f2, b2, s2, _, tp2 = _cell_metrics(cfg2, cell, mesh, layout=layout)
+        t_probe = tp1 + tp2
+        k = reps - 1
+        flops += k * max(0.0, f2 - f1)
+        byts += k * max(0.0, b2 - b1)
+        stats.wire_ici += k * max(0.0, s2.wire_ici - s1.wire_ici)
+        stats.wire_dcn += k * max(0.0, s2.wire_dcn - s1.wire_dcn)
+        for op in set(s1.op_bytes) | set(s2.op_bytes):
+            d = s2.op_bytes.get(op, 0.0) - s1.op_bytes.get(op, 0.0)
+            stats.op_bytes[op] = stats.op_bytes.get(op, 0.0) + k * max(0.0, d)
+
+    n_params, n_active = count_params(cfg)
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    rep = roofline_lib.RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts, collectives=stats,
+        model_flops=roofline_lib.model_flops(n_params, n_active, tokens,
+                                             cell.kind),
+        bytes_per_device=memory)
+    row = rep.row()
+    row.update(base, status="ok", skip_reason=None,
+               n_params=n_params, n_active=n_active, tokens=tokens,
+               t_compile_s=round(t_full, 1), t_probe_s=round(t_probe, 1),
+               memory=memory,
+               hbm_ok=bool(sum(memory.get(k, 0) for k in
+                               ("argument_size_in_bytes",
+                                "temp_size_in_bytes",
+                                "output_size_in_bytes"))
+                           <= roofline_lib.HW.hbm_bytes))
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--layout", default="tp", choices=["tp", "fsdp", "sp"])
+    ap.add_argument("--set-fsdp", action="store_true",
+                    help="force cfg.fsdp=True (ZeRO over data)")
+    ap.add_argument("--moe-dispatch", default=None,
+                    choices=[None, "gspmd", "shard_map"])
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--tag", default=None,
+                    help="suffix for variant output files (hillclimb)")
+    ap.add_argument("--dp", type=int, default=None,
+                    help="override mesh: (dp, tp) on the same chip count "
+                         "(hillclimb lever: DP/TP ratio)")
+    ap.add_argument("--tp", type=int, default=None)
+    ap.add_argument("--no-remat", action="store_true",
+                    help="disable activation checkpointing (hillclimb)")
+    ap.add_argument("--remat-group", type=int, default=None,
+                    help="sqrt-remat group size (hillclimb)")
+    args = ap.parse_args()
+
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shape_names = list(shapes_lib.SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    custom_mesh = None
+    if args.dp or args.tp:
+        import jax as _jax
+        dp, tp = args.dp or 1, args.tp or 1
+        shape = (2, dp, tp) if meshes == [True] else (dp, tp)
+        axes = ("pod", "data", "model") if meshes == [True] \
+            else ("data", "model")
+        custom_mesh = _jax.make_mesh(shape, axes)
+
+    os.makedirs(args.out, exist_ok=True)
+    mesh_cache = {}
+    if custom_mesh is not None:
+        mesh_cache = {False: custom_mesh, True: custom_mesh}
+    failures = 0
+    for multi_pod in meshes:
+        if multi_pod not in mesh_cache:
+            mesh_cache[multi_pod] = make_production_mesh(multi_pod=multi_pod)
+        for arch in archs:
+            for sname in shape_names:
+                mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+                tag = f"__{args.tag}" if args.tag else ""
+                fname = os.path.join(args.out,
+                                     f"{arch}__{sname}__{mesh_name}{tag}.json")
+                if args.skip_existing and os.path.exists(fname):
+                    print(f"[cached] {fname}")
+                    continue
+                try:
+                    row = run_cell(arch, sname, multi_pod=multi_pod,
+                                   mesh=mesh_cache[multi_pod],
+                                   layout=args.layout,
+                                   moe_dispatch=args.moe_dispatch,
+                                   microbatch=args.microbatch,
+                                   cfg_overrides={
+                                       **({"remat": False}
+                                          if args.no_remat else {}),
+                                       **({"fsdp": True}
+                                          if args.set_fsdp else {}),
+                                       **({"remat_group": args.remat_group}
+                                          if args.remat_group else {}),
+                                   } or None)
+                except Exception as e:
+                    traceback.print_exc()
+                    row = {"arch": arch, "shape": sname, "mesh": mesh_name,
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                with open(fname, "w") as f:
+                    json.dump(row, f, indent=1)
+                msg = row["status"]
+                if row["status"] == "ok":
+                    msg = (f"ok  bottleneck={row['bottleneck']:10s} "
+                           f"tc={row['t_compute_ms']:8.2f}ms "
+                           f"tm={row['t_memory_ms']:8.2f}ms "
+                           f"tx={row['t_collective_ms']:8.2f}ms "
+                           f"useful={row['useful_ratio']:.2f} "
+                           f"roofline={row['roofline_fraction']:.3f} "
+                           f"compile={row['t_compile_s']:.0f}s")
+                elif row["status"] == "skip":
+                    msg = f"SKIP ({row['skip_reason']})"
+                print(f"{arch:18s} {sname:12s} {mesh_name:10s} {msg}",
+                      flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

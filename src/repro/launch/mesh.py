@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Functions, not module-level constants, so importing this module never
+touches jax device state (the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* its
+first jax import; everything else sees the real device count).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: TPU v5e-256 as (data=16, model=16).  Multi-pod: 2 pods
+    = 512 chips as (pod=2, data=16, model=16) — the pod axis carries only
+    the DP gradient all-reduce (DCN), never layer collectives."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(*, model: int = 1):
+    """Whatever this host has (tests/examples): (data=n/model, model)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,52 @@
+"""Training launcher: ``python -m repro.launch.train --arch olmo_1b``.
+
+Defaults run the *reduced* config so the full loop (sharded step,
+checkpoint/resume, straggler detection, metrics log) executes on this
+host; ``--full`` selects the production config (real-cluster entry
+point — same code path the dry-run proves compilable).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get, get_reduced
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--workdir", default="runs/default")
+    ap.add_argument("--full", action="store_true",
+                    help="production config + production mesh")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.full:
+        cfg = get(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        cfg = get_reduced(args.arch)
+        mesh = make_local_mesh()
+
+    tcfg = TrainerConfig(
+        total_steps=args.steps, batch_size=args.batch_size,
+        seq_len=args.seq_len, ckpt_every=args.ckpt_every, lr=args.lr,
+        microbatch=args.microbatch,
+    )
+    trainer = Trainer(cfg, tcfg, mesh, workdir=args.workdir)
+    final = trainer.run()
+    print(f"final: {final}")
+
+
+if __name__ == "__main__":
+    main()

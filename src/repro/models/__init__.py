@@ -1,0 +1,4 @@
+"""Model zoo: one assembly (model.py) covering dense GQA transformers,
+MoE (kimi/arctic), RG-LRU hybrid (recurrentgemma), RWKV6, VLM and audio
+encoder stubs.  All matmuls route through the TINA mapping."""
+from repro.models.config import ModelConfig, reduced

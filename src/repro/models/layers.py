@@ -1,0 +1,301 @@
+"""Shared neural layers for the model zoo.
+
+Every matmul routes through the TINA pointwise-conv mapping
+(:func:`repro.core.functions.matmul`) — the paper's technique as the
+framework's compute substrate (DESIGN.md §3).  ``cfg.tina_lowering``
+selects the lowering: "native" (MXU dot_general), "conv" (paper-faithful
+NN layer), "pallas" (explicit kernel).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import functions as tina
+from repro.models.config import ModelConfig
+from repro.partitioning import constrain
+
+Array = jax.Array
+Params = dict
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear / dense through TINA
+# ---------------------------------------------------------------------------
+def init_linear(key, d_in: int, d_out: int, cfg: ModelConfig, *,
+                bias: bool = False, scale: float | None = None) -> Params:
+    scale = (d_in ** -0.5) if scale is None else scale
+    p = {"w": jax.random.normal(key, (d_in, d_out), pdtype(cfg)) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), pdtype(cfg))
+    return p
+
+
+def linear(p: Params, x: Array, cfg: ModelConfig) -> Array:
+    w = p["w"].astype(cdtype(cfg))
+    if cfg.use_tina:
+        shape = x.shape[:-1]
+        out = tina.matmul(x.reshape((-1, x.shape[-1])), w,
+                          lowering=cfg.tina_lowering,
+                          precision=jax.lax.Precision.DEFAULT)
+        out = out.reshape(shape + (w.shape[1],))
+    else:
+        out = jnp.matmul(x, w)
+    if "b" in p:
+        out = out + p["b"].astype(out.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, d: int | None = None) -> Params:
+    d = d or cfg.d_model
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), pdtype(cfg))}
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), pdtype(cfg)),
+                "bias": jnp.zeros((d,), pdtype(cfg))}
+    if cfg.norm_type == "nonparam_ln":       # OLMo: no affine params
+        return {}
+    raise ValueError(cfg.norm_type)
+
+
+def norm(p: Params, x: Array, cfg: ModelConfig) -> Array:
+    x32 = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + 1e-6)
+        y = y * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(x32, -1, keepdims=True)
+        var = jnp.var(x32, -1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + 1e-5)
+        if "scale" in p:
+            y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embedding (partial fraction supported — stablelm)
+# ---------------------------------------------------------------------------
+def rope(x: Array, positions: Array, cfg: ModelConfig) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) absolute positions."""
+    rd = cfg.rotary_dim
+    if rd == 0:
+        return x
+    xr, xp = x[..., :rd], x[..., rd:]
+    half = rd // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = xr[..., :half], xr[..., half:]
+    # TINA elementwise-mult mapping (depthwise-conv semantics) — VPU form
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return jnp.concatenate([rot, xp], -1) if rd < x.shape[-1] else rot
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, causal / bidirectional / sliding window, KV cache)
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": init_linear(ks[0], d, h * hd, cfg, bias=cfg.qkv_bias),
+        "wk": init_linear(ks[1], d, hkv * hd, cfg, bias=cfg.qkv_bias),
+        "wv": init_linear(ks[2], d, hkv * hd, cfg, bias=cfg.qkv_bias),
+        "wo": init_linear(ks[3], h * hd, d, cfg, scale=(h * hd) ** -0.5),
+    }
+
+
+def _online_softmax_attn(q: Array, k: Array, v: Array, *, causal: bool,
+                         window: int, chunk: int, q_offset,
+                         kv_len: Optional[Array] = None) -> Array:
+    """Flash-pattern chunked attention: scan over KV chunks with running
+    (max, denom, acc).  q: (B,Sq,H,hd); k/v: (B,Skv,Hkv,hd).
+    ``kv_len`` masks positions >= kv_len (decode with preallocated cache).
+    """
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    ck = min(chunk, skv)
+    nchunk = -(-skv // ck)
+    pad = nchunk * ck - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunk, ck, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunk, ck, hkv, hd).transpose(1, 0, 2, 3, 4)
+    scale = hd ** -0.5
+    qpos = q_offset + jnp.arange(sq)                     # (Sq,)
+
+    qh = (q * scale).reshape(b, sq, hkv, rep, hd)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        j, kj, vj = inputs
+        kvpos = j * ck + jnp.arange(ck)                  # (Ck,)
+        s = jnp.einsum("bsgrd,bcgd->bgrsc", qh.astype(jnp.float32),
+                       kj.astype(jnp.float32))           # (B,G,rep,Sq,Ck)
+        mask = kvpos[None, :] < (skv - 0)                # in-range (pre-pad)
+        mask = kvpos[None, :] < skv
+        valid = mask
+        if kv_len is not None:
+            valid = valid & (kvpos[None, :] < kv_len)
+        if causal:
+            valid = valid & (kvpos[None, :] <= qpos[:, None])
+        if window:
+            valid = valid & (qpos[:, None] - kvpos[None, :] < window)
+        s = jnp.where(valid[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))                # (B,G,rep,Sq)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bgrsc,bcgd->bgrsd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, rep, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, rep, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, rep, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(nchunk), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attention(p: Params, x: Array, cfg: ModelConfig, *, positions: Array,
+              cache: Optional[dict] = None, window: int = 0) -> tuple[Array, Optional[dict]]:
+    """x: (B, S, D).  Training/prefill when cache is None or being filled;
+    single-token decode when x.shape[1] == 1 and cache is given."""
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    # TP: constrain the flat h*hd dim (legal for any head count)
+    q = constrain(linear(p["wq"], x, cfg), ("batch", None, "tp")).reshape(b, s, h, hd)
+    k = constrain(linear(p["wk"], x, cfg), ("batch", None, "tp")).reshape(b, s, hkv, hd)
+    v = constrain(linear(p["wv"], x, cfg), ("batch", None, "tp")).reshape(b, s, hkv, hd)
+    q = rope(q, positions, cfg)
+    k = rope(k, positions, cfg)
+
+    new_cache = None
+    if cache is not None:
+        size = cache["k"].shape[1]
+        pos = cache["pos"]                       # scalar int32: tokens so far
+        if s == 1:
+            # decode: rolling write at pos % size (rolling == plain write
+            # while pos < size, which covers full-cache decode too)
+            idx = pos % size
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
+            new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+            out = _decode_attn(q, ck, cv, pos=pos, size=size, window=window,
+                               cfg=cfg)
+        else:
+            # prefill: write the (window-)tail of k/v into the cache
+            kk, vv = k, v
+            if s > size:
+                kk, vv = k[:, -size:], v[:, -size:]
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], kk.astype(cache["k"].dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], vv.astype(cache["v"].dtype), (0, 0, 0, 0))
+            new_cache = {"k": ck, "v": cv, "pos": pos + s}
+            out = _online_softmax_attn(q, k, v, causal=cfg.causal,
+                                       window=window, chunk=cfg.attn_chunk,
+                                       q_offset=positions[0, 0])
+    else:
+        out = _online_softmax_attn(q, k, v, causal=cfg.causal, window=window,
+                                   chunk=cfg.attn_chunk, q_offset=0)
+    out = constrain(out.reshape(b, s, h * hd), ("batch", None, "tp"))
+    return linear(p["wo"], out, cfg), new_cache
+
+
+def _decode_attn(q, ck, cv, *, pos, size, window, cfg):
+    """One-token attention against a (possibly rolling) cache.
+    q: (B,1,H,hd); ck/cv: (B,size,Hkv,hd)."""
+    b, _, h, hd = q.shape
+    hkv = ck.shape[2]
+    rep = h // hkv
+    qh = (q[:, 0].reshape(b, hkv, rep, hd) * hd ** -0.5)
+    s = jnp.einsum("bgrd,bcgd->bgrc", qh.astype(jnp.float32),
+                   ck.astype(jnp.float32))        # (B,G,rep,size)
+    slot = jnp.arange(size)
+    # absolute position stored in slot c (rolling): latest `size` tokens
+    n_written = jnp.minimum(pos + 1, size)
+    # slot c holds abs position: for rolling buffer, slot (pos % size) is
+    # current token; slot c holds pos - ((pos % size - c) % size)
+    abs_pos = pos - ((pos % size - slot) % size)
+    valid = abs_pos >= jnp.maximum(0, pos + 1 - n_written)
+    valid = valid & (abs_pos <= pos)
+    if window:
+        valid = valid & (pos - abs_pos < window)
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrc,bcgd->bgrd", p, cv.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, size: int, window: int = 0) -> dict:
+    eff = min(size, window) if window else size
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, eff, hkv, hd), cdtype(cfg)),
+        "v": jnp.zeros((batch, eff, hkv, hd), cdtype(cfg)),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"up": init_linear(ks[0], cfg.d_model, d_ff, cfg),
+         "down": init_linear(ks[1], d_ff, cfg.d_model, cfg, scale=d_ff ** -0.5)}
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["gate"] = init_linear(ks[2], cfg.d_model, d_ff, cfg)
+    return p
+
+
+def mlp(p: Params, x: Array, cfg: ModelConfig) -> Array:
+    up = constrain(linear(p["up"], x, cfg), ("batch", None, "tp"))
+    if cfg.mlp_type == "swiglu":
+        act = jax.nn.silu(linear(p["gate"], x, cfg)) * up
+    elif cfg.mlp_type == "geglu":
+        act = jax.nn.gelu(linear(p["gate"], x, cfg)) * up
+    elif cfg.mlp_type == "gelu":
+        act = jax.nn.gelu(up)
+    else:
+        raise ValueError(cfg.mlp_type)
+    return linear(p["down"], act, cfg)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+def init_embedding(key, cfg: ModelConfig) -> Params:
+    return {"table": jax.random.normal(
+        key, (cfg.vocab_size, cfg.d_model), pdtype(cfg)) * 0.02}
+
+
+def embed(p: Params, tokens: Array, cfg: ModelConfig) -> Array:
+    return p["table"].astype(cdtype(cfg))[tokens]
+
+
+def unembed(p: Params, x: Array, cfg: ModelConfig) -> Array:
+    """Logits in f32 (softmax stability)."""
+    return jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                      p["table"].astype(jnp.float32))

@@ -1,0 +1,393 @@
+"""Model assembly: one decoder/encoder covering all 10 assigned archs.
+
+Layer stack is organized as repeats of ``cfg.block_pattern`` (uniform for
+dense/moe/rwkv/audio, (rglru, rglru, attn) for recurrentgemma) and run
+with ``lax.scan`` over the repeats (compile-time bounded HLO for the
+61-layer MoE), plus an unrolled tail for non-divisible depths.
+
+Modality frontends (assignment: STUBS — ``input_specs`` provides
+precomputed patch/frame embeddings): a learned projection into d_model,
+plus (audio) a TINA depthwise-FIR convolutional positional embedding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import functions as tina
+from repro.models import layers, moe, rglru, rwkv6
+from repro.models.config import ModelConfig
+from repro.partitioning import constrain
+
+Array = jax.Array
+Params = dict
+
+VISION_FEAT_DIM = 1024   # InternViT output (stub)
+AUDIO_FEAT_DIM = 512     # wav2vec2/HuBERT conv-extractor output (stub)
+AUDIO_CONV_POS_WIDTH = 128
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def init_block(key, cfg: ModelConfig, kind: str) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {"ln1": layers.init_norm(cfg), "ln2": layers.init_norm(cfg)}
+    if kind == "attn":
+        p["attn"] = layers.init_attention(k1, cfg)
+        p["ffn"] = moe.init_moe(k2, cfg) if cfg.moe else layers.init_mlp(k2, cfg)
+    elif kind == "rglru":
+        p["rec"] = rglru.init_rglru_block(k1, cfg)
+        p["ffn"] = layers.init_mlp(k2, cfg)
+    elif kind == "rwkv":
+        p["tm"] = rwkv6.init_time_mix(k1, cfg)
+        p["cm"] = rwkv6.init_channel_mix(k2, cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def apply_block(p: Params, x: Array, cfg: ModelConfig, kind: str, *,
+                positions: Array, cache: Optional[dict]) -> tuple[Array, Optional[dict], dict]:
+    aux = {"moe_aux_loss": jnp.zeros((), jnp.float32),
+           "moe_drop_frac": jnp.zeros((), jnp.float32)}
+    if kind == "attn":
+        window = cfg.local_window
+        h, new_cache = layers.attention(p["attn"], layers.norm(p["ln1"], x, cfg),
+                                        cfg, positions=positions, cache=cache,
+                                        window=window)
+        x = x + h
+        z = layers.norm(p["ln2"], x, cfg)
+        if cfg.moe:
+            # pin the residual d-replicated at the MoE boundary: without
+            # this GSPMD picks a d-sharded layout for the attn->moe edge
+            # and pays 2x1.9 GB all-to-alls re-sharding into the
+            # shard_map dispatch (§Perf iteration 2)
+            z = constrain(z, ("batch", "seq", "embed"))
+            h, aux = moe.moe_block(p["ffn"], z, cfg)
+            h = constrain(h, ("batch", "seq", "embed"))
+        else:
+            h = layers.mlp(p["ffn"], z, cfg)
+        x = x + h
+    elif kind == "rglru":
+        h, new_cache = rglru.rglru_block(p["rec"], layers.norm(p["ln1"], x, cfg),
+                                         cfg, state=cache)
+        x = x + h
+        x = x + layers.mlp(p["ffn"], layers.norm(p["ln2"], x, cfg), cfg)
+    elif kind == "rwkv":
+        h, cache1 = rwkv6.time_mix(p["tm"], layers.norm(p["ln1"], x, cfg),
+                                   cfg, state=cache)
+        x = x + h
+        h, new_cache = rwkv6.channel_mix(p["cm"], layers.norm(p["ln2"], x, cfg),
+                                         cfg, state=cache1)
+        x = x + h
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int,
+                     max_len: int) -> dict:
+    if kind == "attn":
+        return layers.init_cache(cfg, batch, max_len, window=cfg.local_window)
+    if kind == "rglru":
+        return rglru.init_rglru_state(cfg, batch)
+    if kind == "rwkv":
+        return rwkv6.init_rwkv_state(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# frontends (assignment stubs)
+# ---------------------------------------------------------------------------
+def init_frontend(key, cfg: ModelConfig) -> Params:
+    if cfg.frontend == "vision_stub":
+        return {"proj": layers.init_linear(key, VISION_FEAT_DIM, cfg.d_model, cfg)}
+    if cfg.frontend == "audio_stub":
+        k1, k2 = jax.random.split(key)
+        return {
+            "proj": layers.init_linear(k1, AUDIO_FEAT_DIM, cfg.d_model, cfg),
+            "conv_pos": jax.random.normal(
+                k2, (AUDIO_CONV_POS_WIDTH, cfg.d_model),
+                layers.pdtype(cfg)) * (AUDIO_CONV_POS_WIDTH * cfg.d_model) ** -0.5,
+        }
+    return {}
+
+
+def apply_frontend(p: Params, feats: Array, cfg: ModelConfig) -> Array:
+    h = layers.linear(p["proj"], feats.astype(layers.cdtype(cfg)), cfg)
+    if cfg.frontend == "audio_stub":
+        # convolutional positional embedding == TINA depthwise FIR (§4.3)
+        pos = tina.depthwise_fir(
+            h, p["conv_pos"].astype(h.dtype), causal=True,
+            lowering=cfg.tina_lowering if cfg.tina_lowering != "pallas" else "native")
+        h = h + jax.nn.gelu(pos)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+def _pattern_layout(cfg: ModelConfig) -> tuple[tuple, int, tuple]:
+    pat = tuple(cfg.block_pattern)
+    reps = cfg.n_layers // len(pat)
+    tail = tuple(cfg.layer_kinds[reps * len(pat):])
+    return pat, reps, tail
+
+
+def init_model(key, cfg: ModelConfig) -> Params:
+    pat, reps, tail = _pattern_layout(cfg)
+    keys = jax.random.split(key, 8)
+    p: Params = {"embed": layers.init_embedding(keys[0], cfg),
+                 "final_norm": layers.init_norm(cfg)}
+    if cfg.frontend:
+        p["frontend"] = init_frontend(keys[1], cfg)
+    if not cfg.tie_embeddings:
+        p["head"] = layers.init_linear(keys[2], cfg.d_model, cfg.vocab_size,
+                                       cfg, scale=cfg.d_model ** -0.5)
+
+    def init_superblock(k):
+        sks = jax.random.split(k, len(pat))
+        return {f"sub{i}": init_block(sks[i], cfg, kind)
+                for i, kind in enumerate(pat)}
+
+    if reps > 0:
+        p["stack"] = jax.vmap(init_superblock)(jax.random.split(keys[3], reps))
+    p["tail"] = [init_block(jax.random.fold_in(keys[4], i), cfg, kind)
+                 for i, kind in enumerate(tail)]
+    return p
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    pat, reps, tail = _pattern_layout(cfg)
+
+    def one_superblock(_):
+        return {f"sub{i}": init_block_cache(cfg, kind, batch, max_len)
+                for i, kind in enumerate(pat)}
+
+    caches: dict = {}
+    if reps > 0:
+        caches["stack"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[one_superblock(i) for i in range(reps)])
+    caches["tail"] = [init_block_cache(cfg, kind, batch, max_len)
+                      for kind in tail]
+    return caches
+
+
+def _run_blocks(params: Params, x: Array, cfg: ModelConfig, *,
+                positions: Array, caches: Optional[dict],
+                remat: bool) -> tuple[Array, Optional[dict], dict]:
+    pat, reps, tail = _pattern_layout(cfg)
+    aux0 = {"moe_aux_loss": jnp.zeros((), jnp.float32),
+            "moe_drop_frac": jnp.zeros((), jnp.float32)}
+
+    def superblock(x, p_sb, c_sb):
+        aux_sum = dict(aux0)
+        new_c = {}
+        for i, kind in enumerate(pat):
+            c = None if c_sb is None else c_sb[f"sub{i}"]
+            x, nc, aux = apply_block(p_sb[f"sub{i}"], x, cfg, kind,
+                                     positions=positions, cache=c)
+            # residual stream: batch over DP; 'seq' maps to model under SP
+            x = constrain(x, ("batch", "seq", "embed"))
+            new_c[f"sub{i}"] = nc
+            aux_sum = jax.tree.map(jnp.add, aux_sum, aux)
+        return x, new_c, aux_sum
+
+    sb = superblock
+    if remat:
+        sb = jax.checkpoint(superblock,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+
+    new_caches: dict = {"tail": []}
+    if reps > 0 and not cfg.use_scan:
+        # unrolled stack (cfg.use_scan=False): used by the dry-run's
+        # roofline probes — XLA cost_analysis counts a scan body ONCE,
+        # not x trip-count, so per-layer costs are measured unrolled
+        aux = dict(aux0)
+        ncs = []
+        for i in range(reps):
+            p_sb = jax.tree.map(lambda t: t[i], params["stack"])
+            c_sb = None if caches is None else \
+                jax.tree.map(lambda t: t[i], caches["stack"])
+            x, nc, aux_l = sb(x, p_sb, c_sb)
+            aux = jax.tree.map(jnp.add, aux, aux_l)
+            ncs.append(nc)
+        if caches is not None:
+            new_caches["stack"] = jax.tree.map(
+                lambda *ts: jnp.stack(ts), *ncs)
+    elif reps > 0 and caches is None and cfg.remat_group > 1:
+        # sqrt-remat (training only): outer scan over groups of
+        # remat_group superblocks; jax.checkpoint on the *group* saves
+        # only group inputs, so peak saved residuals = reps/remat_group
+        # x |x| instead of reps x |x| — what lets the 61-layer 1T MoE
+        # fit HBM (§Perf kimi iteration 3).  A non-divisible remainder
+        # (61 = 7x8 + 5) runs as a flat per-superblock-remat scan.
+        g = cfg.remat_group
+        n_grp = reps // g
+        grouped = jax.tree.map(
+            lambda t: t[: n_grp * g].reshape((n_grp, g) + t.shape[1:]),
+            params["stack"])
+        rest = jax.tree.map(lambda t: t[n_grp * g:], params["stack"])
+
+        def group_body(x, p_grp):
+            def inner(x2, p_sb):
+                x2, _, aux_l = superblock(x2, p_sb, None)
+                return x2, aux_l
+            x, auxs = jax.lax.scan(inner, x, p_grp)
+            return x, jax.tree.map(jnp.sum, auxs)
+
+        grp = jax.checkpoint(group_body,
+                             policy=jax.checkpoint_policies.nothing_saveable)
+
+        def outer(carry, p_grp):
+            x, aux = carry
+            x, aux_g = grp(x, p_grp)
+            return (x, jax.tree.map(jnp.add, aux, aux_g)), None
+
+        (x, aux), _ = jax.lax.scan(outer, (x, dict(aux0)), grouped)
+        if reps % g:
+            def body_rest(carry, p_sb):
+                x, aux = carry
+                x, _, aux_l = sb(x, p_sb, None)
+                return (x, jax.tree.map(jnp.add, aux, aux_l)), None
+            (x, aux), _ = jax.lax.scan(body_rest, (x, aux), rest)
+    elif reps > 0:
+        if caches is None:
+            def body(carry, p_sb):
+                x, aux = carry
+                x, _, aux_l = sb(x, p_sb, None)
+                return (x, jax.tree.map(jnp.add, aux, aux_l)), None
+
+            (x, aux), _ = jax.lax.scan(body, (x, dict(aux0)), params["stack"])
+        else:
+            def body(carry, xs):
+                x, aux = carry
+                p_sb, c_sb = xs
+                x, nc, aux_l = sb(x, p_sb, c_sb)
+                return (x, jax.tree.map(jnp.add, aux, aux_l)), nc
+
+            (x, aux), nc_stack = jax.lax.scan(
+                body, (x, dict(aux0)), (params["stack"], caches["stack"]))
+            new_caches["stack"] = nc_stack
+    else:
+        aux = dict(aux0)
+
+    for i, kind in enumerate(tail):
+        c = None if caches is None else caches["tail"][i]
+        x, nc, aux_l = apply_block(params["tail"][i], x, cfg, kind,
+                                   positions=positions, cache=c)
+        new_caches["tail"].append(nc)
+        aux = jax.tree.map(jnp.add, aux, aux_l)
+
+    return x, (new_caches if caches is not None else None), aux
+
+
+def embed_inputs(params: Params, batch: dict, cfg: ModelConfig) -> tuple[Array, Array]:
+    """Returns (hidden, positions)."""
+    if cfg.frontend == "vision_stub":
+        patches = apply_frontend(params["frontend"], batch["patch_embeds"], cfg)
+        toks = layers.embed(params["embed"], batch["tokens"], cfg)
+        h = jnp.concatenate([patches, toks], axis=1)
+    elif cfg.frontend == "audio_stub":
+        h = apply_frontend(params["frontend"], batch["frames"], cfg)
+    else:
+        h = layers.embed(params["embed"], batch["tokens"], cfg)
+    b, s = h.shape[0], h.shape[1]
+    h = constrain(h, ("batch", "seq", "embed"))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return h, positions
+
+
+def forward(params: Params, batch: dict, cfg: ModelConfig, *,
+            caches: Optional[dict] = None,
+            remat: Optional[bool] = None) -> tuple[Array, Optional[dict], dict]:
+    """Full-sequence forward (train or prefill).  Returns (logits, caches,
+    aux)."""
+    h, positions = embed_inputs(params, batch, cfg)
+    remat = cfg.remat if remat is None else remat
+    h, new_caches, aux = _run_blocks(params, h, cfg, positions=positions,
+                                     caches=caches, remat=remat)
+    h = layers.norm(params["final_norm"], h, cfg)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], h, cfg)
+    else:
+        logits = layers.linear(params["head"], h.astype(jnp.float32),
+                               cfg.scaled(use_tina=False))
+    return logits, new_caches, aux
+
+
+def decode_step(params: Params, tokens: Array, caches: dict,
+                cfg: ModelConfig) -> tuple[Array, dict]:
+    """One autoregressive step.  tokens: (B,) int32.  Position comes from
+    the first attention/recurrent cache's counter."""
+    h = layers.embed(params["embed"], tokens[:, None], cfg)
+    pos = _cache_pos(caches, cfg)
+    b = h.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    h, new_caches, _ = _run_blocks(params, h, cfg, positions=positions,
+                                   caches=caches, remat=False)
+    h = layers.norm(params["final_norm"], h, cfg)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], h, cfg)
+    else:
+        logits = layers.linear(params["head"], h.astype(jnp.float32),
+                               cfg.scaled(use_tina=False))
+    return logits[:, 0], new_caches
+
+def _cache_pos(caches: dict, cfg: ModelConfig) -> Array:
+    """Global decode position: max over all attention-cache counters; falls
+    back to 0 for pure-recurrent stacks (they don't need positions)."""
+    import jax.tree_util as jtu
+    pos = [jnp.zeros((), jnp.int32)]
+    for path, leaf in jtu.tree_flatten_with_path(caches)[0]:
+        keys = [getattr(k, "key", None) for k in path]
+        if keys and keys[-1] == "pos":
+            pos.append(leaf.reshape(-1)[0].astype(jnp.int32))
+    return functools.reduce(jnp.maximum, pos)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def _ce(logits: Array, targets: Array, mask: Array) -> tuple[Array, Array]:
+    """Vocab-sharding-friendly CE: the gold logit is extracted with a
+    masked reduction over the vocab axis instead of take_along_axis —
+    a gather over a sharded axis makes GSPMD replicate the full logits
+    tensor ("involuntary full rematerialization", measured 455 GB/chip
+    of collective wire on the olmo train cell); the where-iota reduction
+    partitions cleanly (per-shard partial sum + tiny all-reduce)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                         logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_ids == targets[..., None].astype(jnp.int32),
+                             logits, 0.0), axis=-1)
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return nll.sum() / denom, denom
+
+
+def loss_fn(params: Params, batch: dict, cfg: ModelConfig) -> tuple[Array, dict]:
+    logits, _, aux = forward(params, batch, cfg)
+    if cfg.frontend == "audio_stub":
+        # masked-prediction CE (HuBERT): predict cluster ids at masked frames
+        loss, denom = _ce(logits, batch["targets"],
+                          batch["mask"].astype(jnp.float32))
+    elif cfg.frontend == "vision_stub":
+        # next-token CE on the text segment only
+        npatch = batch["patch_embeds"].shape[1]
+        text_logits = logits[:, npatch:-1]
+        targets = batch["tokens"][:, 1:]
+        mask = jnp.ones_like(targets, jnp.float32)
+        loss, denom = _ce(text_logits, targets, mask)
+    else:
+        targets = batch["tokens"][:, 1:]
+        mask = jnp.ones_like(targets, jnp.float32)
+        loss, denom = _ce(logits[:, :-1], targets, mask)
+    total = loss + 0.01 * aux["moe_aux_loss"]
+    metrics = {"loss": loss, "tokens": denom, **aux}
+    return total, metrics

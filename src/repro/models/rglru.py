@@ -1,0 +1,95 @@
+"""Griffin/RecurrentGemma recurrent block: temporal conv + RG-LRU.
+
+The temporal conv1d (width 4, depthwise, causal) is the TINA FIR mapping
+(paper §4.3) — exactly the op family TINA targets (DESIGN.md
+§Arch-applicability).  The RG-LRU is an elementwise *linear* recurrence
+h_t = a_t·h_{t−1} + b_t, so training/prefill run as a parallel
+``associative_scan`` (TPU-friendly log-depth) and decode is a one-step
+update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import functions as tina
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+Params = dict
+_C = 8.0  # RG-LRU exponent scale (Griffin)
+
+
+def init_rglru_block(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    lru = cfg.lru_width or d
+    ks = jax.random.split(key, 8)
+    pd = layers.pdtype(cfg)
+    # Λ init so that a = sigmoid(Λ)^c is in (0.9, 0.999) — Griffin appendix
+    u = jax.random.uniform(ks[0], (lru,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / _C) / (1 - u ** (1.0 / _C)))
+    return {
+        "in_x": layers.init_linear(ks[1], d, lru, cfg),
+        "in_gate": layers.init_linear(ks[2], d, lru, cfg),
+        "conv_taps": jax.random.normal(ks[3], (cfg.conv_width, lru), pd) * 0.1,
+        "w_r": layers.init_linear(ks[4], lru, lru, cfg),
+        "w_i": layers.init_linear(ks[5], lru, lru, cfg),
+        "lambda": lam.astype(pd),
+        "out": layers.init_linear(ks[6], lru, d, cfg, scale=lru ** -0.5),
+    }
+
+
+def _gates(p: Params, u: Array, cfg: ModelConfig):
+    r = jax.nn.sigmoid(layers.linear(p["w_r"], u, cfg).astype(jnp.float32))
+    i = jax.nn.sigmoid(layers.linear(p["w_i"], u, cfg).astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(p["lambda"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def rglru_block(p: Params, x: Array, cfg: ModelConfig, *,
+                state: dict | None = None) -> tuple[Array, dict | None]:
+    """x: (B, S, d).  state (decode): {"h": (B, lru), "conv": (B, w−1, lru)}."""
+    gate = jax.nn.gelu(layers.linear(p["in_gate"], x, cfg))
+    xb = layers.linear(p["in_x"], x, cfg)                  # (B, S, lru)
+    taps = p["conv_taps"].astype(xb.dtype)
+    w = taps.shape[0]
+
+    new_state = None
+    if state is None or x.shape[1] > 1:
+        # train/prefill: TINA depthwise FIR, causal
+        u = tina.depthwise_fir(xb, taps, causal=True,
+                               lowering=cfg.tina_lowering
+                               if cfg.tina_lowering != "pallas" else "native")
+        a, b = _gates(p, u, cfg)
+
+        def op(x1, x2):
+            a1, b1 = x1
+            a2, b2 = x2
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+        if state is not None:  # prefill: hand final state to decode
+            new_state = {"h": h[:, -1], "conv": xb[:, -(w - 1):]}
+        h = h.astype(x.dtype)
+    else:
+        # decode: one-step conv + recurrence
+        window = jnp.concatenate([state["conv"], xb], axis=1)  # (B, w, lru)
+        u = jnp.einsum("bwl,wl->bl", window, taps)[:, None]    # (B, 1, lru)
+        a, b = _gates(p, u, cfg)
+        h = a[:, 0] * state["h"] + b[:, 0]                     # (B, lru)
+        new_state = {"h": h, "conv": window[:, 1:]}
+        h = h[:, None].astype(x.dtype)
+
+    return layers.linear(p["out"], h * gate, cfg), new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> dict:
+    lru = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, lru), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, lru), layers.cdtype(cfg)),
+    }

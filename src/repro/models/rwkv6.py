@@ -1,0 +1,165 @@
+"""RWKV6 "Finch" — attention-free time mix with data-dependent decay.
+
+Token shift is a 2-tap causal FIR — the TINA §4.3 mapping (routed through
+``tina.depthwise_fir`` in fidelity mode, fast shift otherwise); the WKV6
+recurrence itself is a data-*dependent* scan, which the paper scopes out
+(TINA targets data-independent loops, §5.1) — implemented as a
+``lax.scan`` carrying the (B, H, hs, hs) state.  Decode carries O(1)
+state, which is what makes the ``long_500k`` cell runnable for this arch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import functions as tina
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+Params = dict
+
+
+def _shift(x: Array, cfg: ModelConfig, prev: Array | None = None) -> Array:
+    """x[t] -> x[t-1] (zero at t=0, or ``prev`` for decode continuation)."""
+    if cfg.use_tina and cfg.tina_lowering == "conv":
+        taps = jnp.zeros((2, x.shape[-1]), x.dtype).at[1].set(1.0)
+        out = tina.depthwise_fir(x, taps, causal=True, lowering="conv")
+    else:
+        out = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        out = out.at[:, 0].set(prev.astype(out.dtype))
+    return out
+
+
+def init_time_mix(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    r = cfg.rwkv_lora_rank
+    ks = jax.random.split(key, 12)
+    pd = layers.pdtype(cfg)
+    nrm = lambda k, s, sc: jax.random.normal(k, s, pd) * sc
+    return {
+        "mu_base": nrm(ks[0], (d,), 0.02),
+        "mu_rwkvg": nrm(ks[1], (5, d), 0.02),
+        "mix_w1": nrm(ks[2], (d, 5 * r), d ** -0.5),
+        "mix_w2": nrm(ks[3], (5, r, d), r ** -0.5),
+        "w0": nrm(ks[4], (d,), 0.02) - 6.0,   # decay bias: slow by default
+        "td_w1": nrm(ks[5], (d, 2 * r), d ** -0.5),
+        "td_w2": nrm(ks[6], (2 * r, d), (2 * r) ** -0.5),
+        "u": nrm(ks[7], (h, hs), 0.02),
+        "wr": layers.init_linear(ks[8], d, d, cfg),
+        "wk": layers.init_linear(ks[9], d, d, cfg),
+        "wv": layers.init_linear(ks[10], d, d, cfg),
+        "wg": layers.init_linear(ks[11], d, d, cfg),
+        "wo": layers.init_linear(jax.random.fold_in(key, 99), d, d, cfg,
+                                 scale=d ** -0.5),
+        "ln_x": jnp.ones((d,), pd),
+    }
+
+
+def _ddlerp(p: Params, x: Array, xx: Array, cfg: ModelConfig):
+    """RWKV6 data-dependent lerp: per-(r,w,k,v,g) mixed inputs."""
+    mu = p["mu_base"].astype(x.dtype)
+    xxx = x + xx * mu
+    lo = jnp.tanh(jnp.einsum("bsd,dr->bsr", xxx, p["mix_w1"].astype(x.dtype)))
+    lo = lo.reshape(*lo.shape[:-1], 5, -1)                      # (B,S,5,r)
+    delta = jnp.einsum("bsfr,frd->bsfd", lo, p["mix_w2"].astype(x.dtype))
+    mus = p["mu_rwkvg"].astype(x.dtype)                         # (5, d)
+    mixed = x[..., None, :] + xx[..., None, :] * (mus + delta)  # (B,S,5,d)
+    return tuple(mixed[..., i, :] for i in range(5))            # r,w,k,v,g
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """r/k/v/w: (B, S, H, hs) f32; u: (H, hs); state: (B, H, hs, hs).
+    Returns out (B, S, H, hs), final state."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp                       # (B, H, hs)
+        out = jnp.einsum("bhi,bhij->bhj", rt, s)
+        bonus = jnp.einsum("bhi,bhi->bh", rt, u[None] * kt)
+        out = out + bonus[..., None] * vt
+        s = wt[..., None] * s + kt[..., None] * vt[..., None, :]
+        return s, out
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))   # (S,B,H,hs)
+    state, out = jax.lax.scan(step, state, xs)
+    return out.transpose(1, 0, 2, 3), state
+
+
+def time_mix(p: Params, x: Array, cfg: ModelConfig, *,
+             state: dict | None = None) -> tuple[Array, dict | None]:
+    b, s, d = x.shape
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    prev = state["x_tm"] if state is not None else None
+    xprev = _shift(x, cfg, prev)
+    xx = xprev - x
+    xr, xw, xk, xv, xg = _ddlerp(p, x, xx, cfg)
+
+    r = layers.linear(p["wr"], xr, cfg).reshape(b, s, h, hs).astype(jnp.float32)
+    k = layers.linear(p["wk"], xk, cfg).reshape(b, s, h, hs).astype(jnp.float32)
+    v = layers.linear(p["wv"], xv, cfg).reshape(b, s, h, hs).astype(jnp.float32)
+    g = jax.nn.silu(layers.linear(p["wg"], xg, cfg))
+
+    # data-dependent decay w_t = exp(-exp(w0 + lora(x_w)))  in (0, 1)
+    td = jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["td_w1"].astype(x.dtype)))
+    wlog = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsr,rd->bsd", td.astype(jnp.float32), p["td_w2"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(wlog)).reshape(b, s, h, hs)
+
+    s0 = state["S"] if state is not None else jnp.zeros((b, h, hs, hs), jnp.float32)
+    out, s_new = _wkv_scan(r, k, v, w, p["u"].astype(jnp.float32), s0)
+
+    # per-head groupnorm (ln_x), then gate and project out
+    out = out.reshape(b, s, h, hs)
+    mu = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = (out - mu) * jax.lax.rsqrt(var + 1e-5)
+    out = out.reshape(b, s, d) * p["ln_x"].astype(jnp.float32)
+    out = out.astype(x.dtype) * g
+    new_state = None
+    if state is not None:
+        new_state = dict(state, S=s_new, x_tm=x[:, -1])
+    return layers.linear(p["wo"], out, cfg), new_state
+
+
+def init_channel_mix(key, cfg: ModelConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jax.random.normal(ks[0], (d,), layers.pdtype(cfg)) * 0.02,
+        "mu_r": jax.random.normal(ks[1], (d,), layers.pdtype(cfg)) * 0.02,
+        "wk": layers.init_linear(ks[2], d, f, cfg),
+        "wv": layers.init_linear(jax.random.fold_in(key, 1), f, d, cfg,
+                                 scale=f ** -0.5),
+        "wr": layers.init_linear(jax.random.fold_in(key, 2), d, d, cfg),
+    }
+
+
+def channel_mix(p: Params, x: Array, cfg: ModelConfig, *,
+                state: dict | None = None) -> tuple[Array, dict | None]:
+    prev = state["x_cm"] if state is not None else None
+    xprev = _shift(x, cfg, prev)
+    xx = xprev - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    kk = layers.linear(p["wk"], xk, cfg)
+    kk = jnp.square(jax.nn.relu(kk))
+    out = jax.nn.sigmoid(layers.linear(p["wr"], xr, cfg)) \
+        * layers.linear(p["wv"], kk, cfg)
+    new_state = None
+    if state is not None:
+        new_state = dict(state, x_cm=x[:, -1])
+    return out, new_state
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    return {
+        "S": jnp.zeros((batch, h, hs, hs), jnp.float32),
+        "x_tm": jnp.zeros((batch, d), layers.cdtype(cfg)),
+        "x_cm": jnp.zeros((batch, d), layers.cdtype(cfg)),
+    }

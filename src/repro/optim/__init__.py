@@ -1,0 +1,20 @@
+"""Optimizers: AdamW (default) and Adafactor (1T-class MoE), plus LR
+schedules, global-norm clipping and gradient compression.
+
+Pure-pytree implementations (no optax dependency): an optimizer is a
+pair of functions ``init(params) -> state`` and
+``update(grads, state, params, step) -> (new_params, new_state)``.
+"""
+from repro.optim.adamw import adamw, adafactor, make_optimizer
+from repro.optim.schedules import (constant, cosine_decay, linear_warmup,
+                                   warmup_cosine)
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.compress import (compress_bf16, compress_int8_ef,
+                                  decompress_int8)
+
+__all__ = [
+    "adamw", "adafactor", "make_optimizer",
+    "constant", "cosine_decay", "linear_warmup", "warmup_cosine",
+    "clip_by_global_norm", "global_norm",
+    "compress_bf16", "compress_int8_ef", "decompress_int8",
+]

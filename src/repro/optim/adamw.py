@@ -1,0 +1,144 @@
+"""AdamW and Adafactor, pure-pytree.
+
+AdamW keeps two moments per parameter (dtype = ``cfg.opt_state_dtype``
+so the 1T-class models can halve optimizer memory); Adafactor keeps
+factored row/col second-moment statistics — O(n+m) instead of O(n·m)
+state for matrices — which is what makes the kimi-k2 (1T) and
+arctic (480B) train cells fit per-chip HBM (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable      # params -> opt_state
+    update: Callable    # (grads, state, params, step) -> (new_params, new_state)
+    name: str = ""
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw(lr_fn, *, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, state_dtype=jnp.float32) -> Optimizer:
+    """Decoupled-weight-decay Adam (Loshchilov & Hutter)."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        count = state["count"] + 1
+        lr = lr_fn(count if step is None else step)
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mhat = m_new / c1
+            vhat = v_new / c2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            # decay only matrices (norm scales/biases are 1-D)
+            wd = weight_decay if p.ndim >= 2 else 0.0
+            p_new = p.astype(jnp.float32) - lr * (delta + wd * p.astype(jnp.float32))
+            return (p_new.astype(p.dtype), m_new.astype(state_dtype),
+                    v_new.astype(state_dtype))
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer(init, update, "adamw")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no momentum — Shazeer & Stern 2018)
+# ---------------------------------------------------------------------------
+def adafactor(lr_fn, *, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Factored for >=2-D leaves (row/col mean of squares over the last two
+    axes), full second moment for 1-D.  State is O(n+m) per matrix."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"s": jax.tree.map(st, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        count = state["count"] + 1
+        lr = lr_fn(count if step is None else step)
+        beta = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                # rank-1 reconstruction of 1/sqrt(v)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(vr.mean(-1, keepdims=True), eps))[..., None]
+                cfac = jax.lax.rsqrt(vc)[..., None, :]
+                u = g32 * rfac * cfac
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 * jax.lax.rsqrt(v)
+                new_s = {"v": v}
+            # update clipping (RMS of update <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            p_new = p.astype(jnp.float32) - lr * u
+            if weight_decay and p.ndim >= 2:
+                p_new = p_new - lr * weight_decay * p.astype(jnp.float32)
+            return p_new.astype(p.dtype), new_s
+
+        # map over the *state* tree (is_leaf stops at the per-param state
+        # dicts), with grads/params as aligned rest-trees whose entries at
+        # those positions are array leaves
+        is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        out = jax.tree.map(lambda s, g, p: upd(g, s, p),
+                           state["s"], grads, params, is_leaf=is_state)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_s = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"s": new_s, "count": count}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def make_optimizer(cfg, lr_fn) -> Optimizer:
+    """Config-driven optimizer choice (configs/<arch>.py sets
+    ``optimizer`` / ``opt_state_dtype``)."""
+    kind = getattr(cfg, "optimizer", "adamw")
+    if kind == "adamw":
+        return adamw(lr_fn, state_dtype=jnp.dtype(cfg.opt_state_dtype))
+    if kind == "adafactor":
+        return adafactor(lr_fn)
+    raise ValueError(kind)

@@ -1,0 +1,67 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+Two schemes (DESIGN.md §4):
+
+  * ``compress_bf16`` — cast-to-bf16 before the reduction; halves DCN
+    wire bytes, lossless enough at LM scale (default ON for the pod axis).
+  * ``compress_int8_ef`` — per-tensor symmetric int8 quantization with
+    *error feedback* (Seide et al. 1-bit-SGD residual trick): the
+    quantization residual is carried to the next step so the bias does
+    not accumulate.  4x wire-byte reduction; convergence-tested in
+    ``tests/test_optim.py``.
+
+The compressed reduction is wired into the train step as
+  g_wire = compress(g_local);  g = all_reduce(g_wire); decompress
+— under pjit, the cast happens *before* GSPMD inserts the gradient
+all-reduce, so the collective itself moves the narrow dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def compress_bf16(tree):
+    """Cast float leaves to bf16 (wire dtype).  Int leaves pass through."""
+    def c(x):
+        if jnp.issubdtype(x.dtype, jnp.floating) and x.dtype != jnp.bfloat16:
+            return x.astype(jnp.bfloat16)
+        return x
+    return jax.tree.map(c, tree)
+
+
+def _q_int8(x: Array) -> tuple[Array, Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def compress_int8_ef(grads, residuals):
+    """Quantize ``grads + residuals`` to int8; return (quantized tree of
+    (q, scale) pairs, new residual tree)."""
+    def c(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = _q_int8(g32)
+        deq = q.astype(jnp.float32) * scale
+        return (q, scale), g32 - deq
+
+    out = jax.tree.map(c, grads, residuals)
+    qt = jax.tree.map(lambda o: o[0], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda o: o[1], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return qt, res
+
+
+def decompress_int8(qtree):
+    def d(pair):
+        q, scale = pair
+        return q.astype(jnp.float32) * scale
+    return jax.tree.map(d, qtree, is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 2 and not isinstance(x[0], tuple))
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,37 @@
+"""Learning-rate schedules as pure ``step -> lr`` functions (traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        return lr * jnp.minimum(1.0, (s + 1.0) / max(1, warmup_steps))
+    return fn
+
+
+def cosine_decay(lr: float, decay_steps: int, *, min_ratio: float = 0.1):
+    def fn(step):
+        s = jnp.clip(jnp.asarray(step, jnp.float32), 0, decay_steps)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * s / max(1, decay_steps)))
+        return lr * (min_ratio + (1.0 - min_ratio) * cos)
+    return fn
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int, *,
+                  min_ratio: float = 0.1):
+    """Linear warmup then cosine decay to ``min_ratio * lr`` — the standard
+    LM pre-training schedule."""
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = lr * (s + 1.0) / max(1, warmup_steps)
+        t = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps),
+                     0.0, 1.0)
+        cos = lr * (min_ratio + (1.0 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,5 @@
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.runtime.straggler import StragglerDetector
+from repro.runtime.elastic import elastic_restore
+
+__all__ = ["Trainer", "TrainerConfig", "StragglerDetector", "elastic_restore"]

@@ -1,0 +1,38 @@
+"""Elastic re-meshing: restore a checkpoint onto a different mesh.
+
+Checkpoints are stored as host-side global arrays (checkpoint/manager),
+so restoring is: build the step specs for the *new* mesh (which yields
+new NamedShardings for every param/opt leaf) and ``device_put``
+leaf-by-leaf against them.  Scale 512 -> 256 chips after losing a pod,
+or 256 -> 512 when capacity returns, without touching the model code.
+
+The batch size per data shard changes with the mesh; the data pipeline
+re-shards by construction (SyntheticDataset.process_index), and the
+optimizer state re-shards with the params because
+``opt_state_shardings`` derives from the same rule table.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.distributed import step as step_lib
+from repro.models.config import ModelConfig
+
+
+def elastic_restore(ckpt: CheckpointManager, cfg: ModelConfig, new_mesh, *,
+                    batch_size: int, seq_len: int,
+                    step: Optional[int] = None):
+    """Returns (params, opt_state, metadata, specs) resharded for
+    ``new_mesh``; None params when no checkpoint exists."""
+    _, specs = step_lib.make_train_step(cfg, new_mesh,
+                                        batch_size=batch_size,
+                                        seq_len=seq_len)
+    target = {"params": specs.params, "opt_state": specs.opt_state}
+    shard = {"params": specs.params_sh, "opt_state": specs.opt_state_sh}
+    tree, meta = ckpt.restore(target, step=step, shardings=shard)
+    if tree is None:
+        return None, None, None, specs
+    return tree["params"], tree["opt_state"], meta, specs

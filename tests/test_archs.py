@@ -1,0 +1,106 @@
+"""Per-architecture smoke tests (deliverable f): reduced config of the
+same family, one forward/train step on CPU, output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get, get_reduced
+from repro.data.pipeline import make_batch
+from repro.models import model as M
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get(arch)
+    table = {
+        "olmo_1b": (16, 2048, 16, 16, 8192, 50304),
+        "qwen2_7b": (28, 3584, 28, 4, 18944, 152064),
+        "stablelm_3b": (32, 2560, 32, 32, 6912, 50304),
+        "stablelm_1_6b": (24, 2048, 32, 32, 5632, 100352),
+        "recurrentgemma_9b": (38, 4096, 16, 1, 12288, 256000),
+        "kimi_k2_1t_a32b": (61, 7168, 64, 8, 2048, 163840),
+        "arctic_480b": (35, 7168, 56, 8, 4864, 32000),
+        "internvl2_2b": (24, 2048, 16, 8, 8192, 92553),
+        "rwkv6_3b": (32, 2560, 40, 40, 8960, 65536),
+        "hubert_xlarge": (48, 1280, 16, 16, 5120, 504),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == table, (got, table)
+    if arch == "kimi_k2_1t_a32b":
+        assert cfg.moe and cfg.n_experts == 384 and cfg.n_experts_per_token == 8
+    if arch == "arctic_480b":
+        assert cfg.moe and cfg.n_experts == 128 and cfg.n_experts_per_token == 2
+        assert cfg.dense_residual_ff > 0
+    if arch == "recurrentgemma_9b":
+        assert cfg.block_pattern == ("rglru", "rglru", "attn")
+        assert cfg.local_window == 2048
+    if arch == "rwkv6_3b":
+        assert cfg.attention_free
+    if arch == "hubert_xlarge":
+        assert not cfg.causal and cfg.frontend == "audio_stub"
+    if arch == "internvl2_2b":
+        assert cfg.frontend == "vision_stub"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_reduced(arch)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 32
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, B, S).items()}
+
+    logits, _, _ = M.forward(params, batch, cfg, remat=False)
+    if cfg.family == "vlm":
+        assert logits.shape == (B, cfg.num_patches + (S - cfg.num_patches),
+                                cfg.vocab_size)
+    else:
+        assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+
+    # one grad step
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: M.loss_fn(p, batch, cfg), has_aux=True)(params)
+    assert np.isfinite(float(loss)), arch
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", ["olmo_1b", "recurrentgemma_9b",
+                                  "rwkv6_3b", "internvl2_2b"])
+def test_smoke_decode(arch):
+    cfg = get_reduced(arch)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, B, S).items()}
+    caches = M.init_caches(cfg, B, max_len=S + 4)
+    _, caches, _ = M.forward(params, batch, cfg, caches=caches, remat=False)
+    tok = jnp.zeros((B,), jnp.int32)
+    for _ in range(3):
+        lg, caches = M.decode_step(params, tok, caches, cfg)
+        assert lg.shape == (B, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(lg)))
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+
+
+def test_encoder_only_has_no_decode_cells():
+    from repro.launch import shapes
+    cfg = get("hubert_xlarge")
+    assert shapes.skip_reason(cfg, shapes.SHAPES["decode_32k"])
+    assert shapes.skip_reason(cfg, shapes.SHAPES["long_500k"])
+    assert shapes.skip_reason(cfg, shapes.SHAPES["train_4k"]) is None
+
+
+def test_long_context_only_subquadratic():
+    from repro.launch import shapes
+    runnable = [a for a in ARCHS
+                if shapes.skip_reason(get(a), shapes.SHAPES["long_500k"]) is None]
+    assert sorted(runnable) == ["recurrentgemma_9b", "rwkv6_3b"]
+
+
+def test_grid_has_31_runnable_cells():
+    from repro.launch import shapes
+    rows = list(shapes.cells(ARCHS))
+    assert len(rows) == 40
+    assert sum(1 for *_, skip in rows if skip is None) == 31

@@ -1,0 +1,73 @@
+"""Checkpoint manager: atomicity, keep-N, async, bitwise resume."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+
+
+def _tree():
+    return {"p": {"w": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+                  "b": jnp.ones((4,), jnp.float32)},
+            "tail": [jnp.zeros((2,), jnp.int32)],
+            "count": jnp.asarray(5, jnp.int32)}
+
+
+def test_roundtrip_bitwise(tmp_path):
+    t = _tree()
+    d = str(tmp_path / "c")
+    save_pytree(t, d, metadata={"step": 1})
+    out = load_pytree(jax.eval_shape(lambda: t), d)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(t)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_atomic_no_tmp_visible(tmp_path):
+    d = str(tmp_path / "c")
+    save_pytree(_tree(), d)
+    assert not os.path.exists(d + ".tmp")
+    assert os.path.exists(os.path.join(d, "manifest.json"))
+
+
+def test_half_written_checkpoint_ignored(tmp_path):
+    """A directory without a manifest (simulated kill mid-write) must not
+    be picked up as 'latest'."""
+    mgr = CheckpointManager(str(tmp_path), keep_n=5)
+    mgr.save(1, _tree())
+    os.makedirs(str(tmp_path / "ckpt_2"))       # torn write: no manifest
+    assert mgr.latest_step() == 1
+
+
+def test_keep_n_rotation(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree())
+    assert mgr.steps() == [3, 4]
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, async_save=True)
+    t = _tree()
+    mgr.save(7, t)
+    out, meta = mgr.restore(jax.eval_shape(lambda: t))
+    assert meta["step"] == 7
+    np.testing.assert_array_equal(np.asarray(out["p"]["b"]),
+                                  np.asarray(t["p"]["b"]))
+
+
+def test_restore_missing_returns_none(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    out, meta = mgr.restore({"x": jax.ShapeDtypeStruct((2,), jnp.float32)})
+    assert out is None and meta is None
+
+
+def test_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "c")
+    save_pytree({"w": jnp.zeros((2, 2))}, d)
+    with pytest.raises(ValueError):
+        load_pytree({"w": jax.ShapeDtypeStruct((3, 2), jnp.float32)}, d)

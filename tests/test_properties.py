@@ -1,0 +1,121 @@
+"""Property-based tests (hypothesis) on TINA's algebraic invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import functions as tina
+from repro.core import pfb as pfb_lib
+
+S = settings(max_examples=25, deadline=None)
+
+# XLA flushes f32 subnormals to zero (FTZ), so exclude them: x*1 == x
+# would otherwise fail on denormal inputs through no fault of the mapping
+floats = st.floats(-8, 8, allow_nan=False, allow_subnormal=False, width=32)
+
+
+def arr(draw, shape):
+    n = int(np.prod(shape))
+    xs = draw(st.lists(floats, min_size=n, max_size=n))
+    return jnp.asarray(np.array(xs, np.float32).reshape(shape))
+
+
+@S
+@given(st.data(), st.integers(2, 12), st.integers(2, 12))
+def test_matmul_identity_and_linearity(data, m, l):
+    x = arr(data.draw, (m, l))
+    eye = jnp.eye(l, dtype=jnp.float32)
+    np.testing.assert_allclose(tina.matmul(x, eye), x, rtol=1e-5, atol=1e-5)
+    y = arr(data.draw, (l, 3))
+    a = np.asarray(tina.matmul(2.0 * x, y))
+    b = 2.0 * np.asarray(tina.matmul(x, y))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@S
+@given(st.data(), st.integers(2, 10))
+def test_elementwise_mult_commutes(data, n):
+    x = arr(data.draw, (n, n))
+    y = arr(data.draw, (n, n))
+    np.testing.assert_allclose(tina.elementwise_mult(x, y),
+                               tina.elementwise_mult(y, x),
+                               rtol=1e-6, atol=1e-6)
+    # mult-by-ones == identity; add-zero == identity
+    ones = jnp.ones_like(x)
+    np.testing.assert_allclose(tina.elementwise_mult(x, ones), x, rtol=1e-6)
+    np.testing.assert_allclose(tina.elementwise_add(x, jnp.zeros_like(x)), x,
+                               rtol=1e-6)
+
+
+@S
+@given(st.data(), st.integers(4, 64))
+def test_dft_inverts(data, n):
+    x = arr(data.draw, (2, n))
+    z = tina.dft(x)
+    back = tina.idft(z)
+    np.testing.assert_allclose(np.asarray(back.real), np.asarray(x),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(back.imag),
+                               np.zeros_like(np.asarray(x)), atol=1e-3)
+
+
+@S
+@given(st.data(), st.integers(4, 48))
+def test_dft_parseval(data, n):
+    """Parseval: sum|x|^2 == sum|X|^2 / N."""
+    x = arr(data.draw, (n,))
+    z = np.asarray(tina.dft(x))
+    np.testing.assert_allclose(float(jnp.sum(x * x)),
+                               float((np.abs(z) ** 2).sum() / n),
+                               rtol=1e-3, atol=1e-3)
+
+
+@S
+@given(st.data(), st.integers(4, 32))
+def test_dft_variants_agree(data, n):
+    x = arr(data.draw, (3, n))
+    a = np.asarray(tina.dft(x, variant="4mult"))
+    b = np.asarray(tina.dft(x, variant="3mult"))
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+@S
+@given(st.data(), st.integers(8, 64), st.integers(1, 8))
+def test_fir_impulse_recovers_taps(data, n, k):
+    taps = arr(data.draw, (k,))
+    x = jnp.zeros((n,), jnp.float32).at[0].set(1.0)
+    y = np.asarray(tina.fir(x, taps, mode="full"))
+    np.testing.assert_allclose(y[:k], np.asarray(taps), rtol=1e-5, atol=1e-5)
+
+
+@S
+@given(st.data(), st.integers(6, 40), st.integers(2, 6))
+def test_unfold_shape_and_content(data, n, j):
+    x = arr(data.draw, (n,))
+    y = np.asarray(tina.unfold(x, j))
+    assert y.shape == (n - j + 1, j)
+    xn = np.asarray(x)
+    for i in range(0, n - j + 1, max(1, (n - j) // 3)):
+        np.testing.assert_array_equal(y[i], xn[i:i + j])
+
+
+@S
+@given(st.data(), st.integers(1, 6))
+def test_summation_matches_numpy(data, n):
+    x = arr(data.draw, (n * 7,))
+    np.testing.assert_allclose(float(tina.summation(x)),
+                               float(np.asarray(x).sum()),
+                               rtol=1e-4, atol=1e-4)
+
+
+@S
+@given(st.data(), st.sampled_from([4, 8, 16]), st.integers(2, 6))
+def test_pfb_linearity(data, p, m):
+    """PFB is linear: pfb(a+b) == pfb(a) + pfb(b)."""
+    taps = jnp.asarray(pfb_lib.pfb_window(p, m), jnp.float32)
+    a = arr(data.draw, (p * (m + 4),))
+    b = arr(data.draw, (p * (m + 4),))
+    za = np.asarray(pfb_lib.pfb(a, taps))
+    zb = np.asarray(pfb_lib.pfb(b, taps))
+    zab = np.asarray(pfb_lib.pfb(a + b, taps))
+    np.testing.assert_allclose(zab, za + zb, rtol=1e-3, atol=1e-3)

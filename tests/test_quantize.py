@@ -1,0 +1,73 @@
+"""int8-quantized TINA ops (paper §1: NN-ecosystem quantization applies
+to the mapped non-NN algorithms).  SQNR bounds: int8 symmetric
+quantization of a well-conditioned kernel should give >=30 dB."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pfb as pfb_lib
+from repro.core.quantize import (dequantize, qdft, qfir, qmatmul, qpfb,
+                                 quantize_symmetric)
+
+RNG = np.random.default_rng(7)
+
+
+def sqnr_db(ref, test):
+    ref, test = np.asarray(ref), np.asarray(test)
+    err = np.abs(ref - test) ** 2
+    return 10 * np.log10(np.abs(ref).mean() ** 2 / np.maximum(err.mean(), 1e-30))
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jnp.asarray(RNG.standard_normal((64, 64)), jnp.float32)
+    q, s = quantize_symmetric(x, axis=0)
+    assert q.dtype == jnp.int8
+    # max error <= scale/2 per element
+    err = np.abs(np.asarray(dequantize(q, s)) - np.asarray(x))
+    assert (err <= np.asarray(s) / 2 + 1e-7).all()
+
+
+@pytest.mark.parametrize("qact", [True, False])
+def test_qmatmul_sqnr(qact):
+    x = jnp.asarray(RNG.standard_normal((32, 128)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((128, 64)), jnp.float32)
+    wq, ws = quantize_symmetric(w, axis=0)
+    got = qmatmul(x, wq, ws, quantize_activations=qact)
+    want = x @ w
+    assert sqnr_db(want, got) > (30 if qact else 38), sqnr_db(want, got)
+
+
+def test_qdft_sqnr_and_parseval():
+    x = jnp.asarray(RNG.standard_normal((8, 256)), jnp.float32)
+    z = qdft(x)
+    want = np.fft.fft(np.asarray(x))
+    assert sqnr_db(want, np.asarray(z)) > 30
+    # Parseval approximately holds through quantization
+    np.testing.assert_allclose(
+        (np.abs(np.asarray(z)) ** 2).sum() / 256,
+        (np.asarray(x) ** 2).sum(), rtol=0.02)
+
+
+def test_qfir_matches_float_taps():
+    x = jnp.asarray(RNG.standard_normal(2048), jnp.float32)
+    taps = jnp.asarray(RNG.standard_normal(31), jnp.float32)
+    got = qfir(x, taps)
+    want = np.convolve(np.asarray(x), np.asarray(taps), mode="valid")
+    assert sqnr_db(want, np.asarray(got)) > 35
+
+
+def test_qpfb_preserves_channelization():
+    """int8 PFB must still channelize: a pure tone lands in the right
+    channel and leakage suppression survives quantization."""
+    p, m = 32, 8
+    taps = jnp.asarray(pfb_lib.pfb_window(p, m), jnp.float32)
+    n = p * 256
+    tone_ch = 5
+    x = jnp.asarray(np.cos(2 * np.pi * (tone_ch / p) * np.arange(n)),
+                    jnp.float32)
+    z = np.asarray(qpfb(x, taps))
+    spec = (np.abs(z) ** 2).mean(0)
+    assert spec.argmax() in (tone_ch, p - tone_ch)
+    # compare against float PFB: SQNR over spectra
+    zf = np.asarray(pfb_lib.pfb(x, taps))
+    assert sqnr_db(zf, z) > 30, sqnr_db(zf, z)

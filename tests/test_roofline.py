@@ -1,0 +1,84 @@
+"""Roofline analyzer: HLO collective parsing + cost model."""
+import numpy as np
+
+from repro.analysis.roofline import (HW, CollectiveStats, RooflineReport,
+                                     parse_collectives, model_flops)
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p = f32[32,128]{1,0} parameter(0)
+  %ag = f32[256,128]{1,0} all-gather(f32[32,128]{1,0} %p), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %ar = bf16[1024]{0} all-reduce(bf16[1024]{0} %x), replica_groups=[2,4]<=[8], to_apply=%add
+  %rs = f32[16,128]{1,0} reduce-scatter(f32[128,128]{1,0} %y), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}, to_apply=%add
+  %cp = f32[8,8]{1,0} collective-permute(f32[8,8]{1,0} %z), source_target_pairs={{0,1},{1,0}}
+  %a2a = f32[64]{0} all-to-all(f32[64]{0} %w), replica_groups={{0,1,2,3}}, dimensions={0}
+}
+"""
+
+
+def test_parse_collective_counts_and_bytes():
+    s = parse_collectives(HLO, chips_per_pod=256)
+    assert s.count == 5
+    # all-gather: out 256*128*4 = 131072 B, n=8 -> wire 7/8*131072
+    # all-reduce: out 1024*2 = 2048 B, n=4 -> wire 2*3/4*2048
+    # reduce-scatter: out 16*128*4 = 8192, n=8 -> wire 7*8192
+    # permute: 8*8*4 = 256
+    # all-to-all: 64*4=256, n=4 -> 3/4*256
+    want = 7 / 8 * 131072 + 2 * 3 / 4 * 2048 + 7 * 8192 + 256 + 3 / 4 * 256
+    np.testing.assert_allclose(s.wire_ici, want)
+    assert s.wire_dcn == 0.0
+    # operand-byte accounting (the assignment's "sum operand sizes")
+    assert s.op_bytes["all-gather"] == 32 * 128 * 4
+    assert s.op_bytes["reduce-scatter"] == 128 * 128 * 4
+
+
+def test_dcn_detection_explicit_groups():
+    hlo = ("%ar = f32[256]{0} all-reduce(f32[256]{0} %x), "
+           "replica_groups={{0,256}}, to_apply=%add")
+    s = parse_collectives(hlo, chips_per_pod=256)
+    assert s.wire_dcn > 0 and s.wire_ici == 0
+
+
+def test_dcn_detection_iota_groups():
+    # [256,2]<=[2,256]T(1,0): groups pair device i with i+256 -> crosses pods
+    hlo = ("%ar = f32[256]{0} all-reduce(f32[256]{0} %x), "
+           "replica_groups=[256,2]<=[2,256]T(1,0), to_apply=%add")
+    s = parse_collectives(hlo, chips_per_pod=256)
+    assert s.wire_dcn > 0
+    # [2,256]<=[512]: two intra-pod groups -> ICI only
+    hlo2 = ("%ar = f32[256]{0} all-reduce(f32[256]{0} %x), "
+            "replica_groups=[2,256]<=[512], to_apply=%add")
+    s2 = parse_collectives(hlo2, chips_per_pod=256)
+    assert s2.wire_dcn == 0 and s2.wire_ici > 0
+
+
+def test_async_start_ops_counted_once():
+    hlo = """
+  %ag-start = f32[256,128]{1,0} all-gather-start(f32[32,128]{1,0} %p), replica_groups={{0,1,2,3,4,5,6,7}}
+  %ag-done = f32[256,128]{1,0} all-gather-done(f32[256,128]{1,0} %ag-start)
+"""
+    s = parse_collectives(hlo)
+    assert s.count == 1
+
+
+def test_report_terms_and_bottleneck():
+    rep = RooflineReport(
+        arch="x", shape="train_4k", mesh="pod16x16", chips=256,
+        hlo_flops=197e12 * 0.1,          # 0.1 s of compute
+        hlo_bytes=819e9 * 0.02,          # 0.02 s of HBM
+        collectives=CollectiveStats(wire_ici=50e9 * 0.01),  # 0.01 s
+        model_flops=6e9 * 1e6)
+    assert abs(rep.t_compute - 0.1) < 1e-9
+    assert abs(rep.t_memory - 0.02) < 1e-9
+    assert abs(rep.t_collective - 0.01) < 1e-9
+    assert rep.bottleneck == "compute"
+    row = rep.row()
+    assert row["bottleneck"] == "compute"
+    assert 0 < row["useful_ratio"]
+
+
+def test_model_flops():
+    assert model_flops(1e9, 0, 1e6, "train") == 6e15
+    assert model_flops(1e9, 5e8, 1e6, "train") == 3e15   # MoE active
+    assert model_flops(1e9, 0, 128, "decode") == 2 * 1e9 * 128
