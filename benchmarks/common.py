@@ -3,6 +3,8 @@ NumPy CPU baseline and the direct-jnp baseline (the paper's comparison
 set, adapted to this container — DESIGN.md §8.2)."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
@@ -47,3 +49,20 @@ def us(t: float) -> str:
 
 def speedup(base: float, t: float) -> str:
     return f"{base / t:6.1f}x"
+
+
+def write_bench_json(path: str, results, **meta) -> str:
+    """Persist benchmark results as BENCH_*.json so the perf trajectory
+    accumulates across PRs.  ``results`` is a list of flat dicts; meta
+    (backend, sizes, ...) is recorded alongside."""
+    payload = {
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        **meta,
+        "results": list(results),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=False)
+        f.write("\n")
+    return os.path.abspath(path)

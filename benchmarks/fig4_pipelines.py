@@ -1,0 +1,113 @@
+"""Beyond-paper Fig. 4: compiled pipeline plans vs naive per-op dispatch.
+
+The paper composes TINA layers one framework call at a time; the graph
+subsystem compiles the whole pipeline into one cached jitted plan.
+This benchmark quantifies the difference for every built-in pipeline:
+
+  * per-op   — each graph node executed through its own jitted callable,
+               synchronizing (block_until_ready) between nodes: the
+               dispatch pattern of calling repro.core.functions by hand
+  * plan     — ``graph.compile(...)`` product: one jit region, fused
+               elementwise chains, no host round-trips
+  * plan+auto— same, with the measurement-based autotuner picking each
+               node's lowering (first run pays measurement, then cached)
+
+Emits ``BENCH_pipelines.json`` via benchmarks/common.py.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_table, speedup, timeit, us, write_bench_json
+from repro.core.registry import PIPELINES, pipelines as _load_pipelines
+from repro.graph import plan as plan_lib
+from repro.graph import compile as graph_compile
+
+
+def make_per_op_dispatch(graph):
+    """Execute the (unfused) graph node-by-node, one jitted callable and
+    one device synchronization per node — the naive dispatch baseline."""
+    fns = {}
+    for node in graph.topo():
+        if node.op in ("input", "const"):
+            continue
+        fns[node.name] = jax.jit(functools.partial(
+            lambda node, *args: plan_lib.apply_node(node, args, "native"),
+            node))
+
+    consts = {k: jnp.asarray(v) for k, v in graph.consts.items()}
+
+    def run(x):
+        env = dict(consts)
+        env[graph.inputs[0]] = x
+        out = None
+        for node in graph.topo():
+            if node.op in ("input", "const"):
+                continue
+            out = fns[node.name](*[env[i] for i in node.inputs])
+            out.block_until_ready()       # per-op host round-trip
+            env[node.name] = out
+        return env[graph.outputs[0]]
+
+    return run
+
+
+def run(sizes=(2 ** 13, 2 ** 15), repeats=10, autotune=False):
+    _load_pipelines()
+    rng = np.random.default_rng(0)
+    rows, records = [], []
+    for name, spec in sorted(PIPELINES.items()):
+        g = spec.build()
+        for n in sizes:
+            (x_np,) = spec.make_args(rng, n)
+            x = jnp.asarray(x_np)
+            naive = make_per_op_dispatch(g)
+            t_naive = timeit(naive, x, repeats=repeats)
+            p = graph_compile(g, {g.inputs[0]: x.shape})
+            t_plan = timeit(p, x, repeats=repeats)
+            row = [name, x_np.shape[-1], us(t_naive), us(t_plan),
+                   speedup(t_naive, t_plan)]
+            rec = {"pipeline": name, "n": int(x_np.shape[-1]),
+                   "t_per_op_s": t_naive, "t_plan_s": t_plan,
+                   "speedup_plan": t_naive / t_plan}
+            if autotune:
+                pa = graph_compile(g, {g.inputs[0]: x.shape},
+                                   lowering="auto")
+                t_auto = timeit(pa, x, repeats=repeats)
+                row += [us(t_auto), speedup(t_naive, t_auto)]
+                rec.update(t_plan_auto_s=t_auto,
+                           speedup_auto=t_naive / t_auto,
+                           auto_lowerings=pa.lowerings)
+            rows.append(row)
+            records.append(rec)
+
+    header = ["pipeline", "n", "per_op_us", "plan_us", "plan_vs_per_op"]
+    if autotune:
+        header += ["auto_us", "auto_vs_per_op"]
+    return fmt_table("Fig.4: compiled pipeline plans vs per-op dispatch",
+                     header, rows), records
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+",
+                    default=[2 ** 13, 2 ** 15])
+    ap.add_argument("--repeats", type=int, default=10)
+    ap.add_argument("--autotune", action="store_true",
+                    help="add an autotuned-lowering column")
+    ap.add_argument("--out", default="BENCH_pipelines.json")
+    args = ap.parse_args(argv)
+    table, records = run(tuple(args.sizes), args.repeats, args.autotune)
+    print(table)
+    path = write_bench_json(args.out, records, figure="fig4_pipelines",
+                            sizes=list(args.sizes), repeats=args.repeats)
+    print(f"\n[fig4] wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -119,4 +119,42 @@ def ops(names: Sequence[str] | None = None) -> list[TinaOp]:
     return [REGISTRY[n] for n in names]
 
 
-__all__ = ["TinaOp", "REGISTRY", "ops"]
+# ---------------------------------------------------------------------------
+# Pipelines: whole multi-op graphs registered alongside the single ops.
+# The graph subsystem (repro.graph) registers its built-ins here at import
+# time; this module stays import-light (no graph dependency) so core can
+# be used without pulling in the planner.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TinaPipeline:
+    name: str
+    section: str                 # paper section the use case comes from
+    build: Callable              # () -> repro.graph.Graph
+    oracle: Callable             # pure-numpy whole-pipeline reference
+    lowerings: tuple[str, ...]   # lowerings the sweep should cover
+    make_args: Callable          # rng, size -> (x,) stream-input tuple
+    round_len: Callable = None   # n -> nearest valid signal length
+                                 # (e.g. PFB branch divisibility); None = any
+
+    def valid_len(self, n: int) -> int:
+        return n if self.round_len is None else self.round_len(n)
+
+
+PIPELINES: dict[str, TinaPipeline] = {}
+
+
+def register_pipeline(p: TinaPipeline) -> TinaPipeline:
+    PIPELINES[p.name] = p
+    return p
+
+
+def pipelines(names: Sequence[str] | None = None) -> list[TinaPipeline]:
+    """Built-in pipelines; imports repro.graph so they are registered."""
+    import repro.graph  # noqa: F401  (registration side effect)
+    if names is None:
+        return list(PIPELINES.values())
+    return [PIPELINES[n] for n in names]
+
+
+__all__ = ["TinaOp", "REGISTRY", "ops",
+           "TinaPipeline", "PIPELINES", "register_pipeline", "pipelines"]

@@ -124,12 +124,20 @@ def make_pipeline_train_step(cfg: ModelConfig, mesh: Mesh, *,
 
         d = cfg.d_model
         h0 = jnp.zeros((mb, s, d), layers.cdtype(cfg))
+        # accumulators are shape (1,), not (): a 0-d value saved for the
+        # backward pass becomes a 0-d shard_map residual, and shard_map's
+        # partial-eval stacks residuals along a new axis 0 — a spec no
+        # scalar can satisfy (_SpecError).  1-D carries sidestep that.
         (h, loss_sum, tok_sum), _ = jax.lax.scan(
-            tick, (h0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            tick, (h0, jnp.zeros((1,), jnp.float32), jnp.zeros((1,), jnp.float32)),
             jnp.arange(nm + n_stages - 1))
         # broadcast the last stage's loss to all stages
         loss_sum = jax.lax.psum(loss_sum, "stage")
         tok_sum = jax.lax.psum(tok_sum, "stage")
+        # shape (1,) out: with check_rep=False the out_spec must carry the
+        # stage axis (an unmapped P() output can't be verified replicated
+        # and its grad transpose raises _SpecError) — each stage emits its
+        # (identical) loss and the caller averages the stacked copies.
         return loss_sum / jnp.maximum(tok_sum, 1.0)
 
     # --- shard_map wrapper -----------------------------------------------
@@ -150,8 +158,8 @@ def make_pipeline_train_step(cfg: ModelConfig, mesh: Mesh, *,
         # explicit where it matters
         fn = shard_map(pipeline_loss, mesh=mesh,
                        in_specs=(params_spec, {"tokens": repl}),
-                       out_specs=repl, check_rep=False)
-        return fn(params, batch)
+                       out_specs=stacked, check_rep=False)
+        return fn(params, batch).mean()
 
     def train_step(params, opt_state, batch):
         # batch: {"tokens": (B, S)} -> (n_micro, B/n_micro, S)

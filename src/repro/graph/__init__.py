@@ -1,0 +1,34 @@
+"""TINA pipeline-graph subsystem: composable op graphs compiled into
+cached, autotuned, streamable plans.
+
+  graph.py      declarative graph IR (nodes = TinaOp invocations)
+  plan.py       planner: shape specialization, elementwise fusion,
+                lowering selection, memoized jitted plans
+  autotune.py   measurement-based lowering autotuner, on-disk cache
+  stream.py     chunked streaming executor (offline-identical output)
+  service.py    batched fixed-shape pipeline serving
+  pipelines.py  built-in workloads (spectrogram, pfb_power, fir_decimate)
+
+Quick use::
+
+    from repro import graph
+    g = graph.build_spectrogram(window=128)
+    plan = graph.compile(g, {"x": (16384,)})      # cached on 2nd call
+    power = plan(x)
+    chunked = graph.stream_execute(g, x, chunk_len=4096)  # == power
+"""
+from repro.graph import autotune, pipelines, plan, service, stream
+from repro.graph.graph import Graph, Node
+from repro.graph.pipelines import (BUILTINS, build_fir_decimate,
+                                   build_pfb_power, build_spectrogram)
+from repro.graph.plan import Plan, cache_stats, clear_cache, compile
+from repro.graph.service import PipelineService
+from repro.graph.stream import ChunkedRunner, stream_execute, stream_spec
+
+__all__ = [
+    "Graph", "Node", "Plan", "compile", "cache_stats", "clear_cache",
+    "ChunkedRunner", "stream_execute", "stream_spec", "PipelineService",
+    "BUILTINS", "build_spectrogram", "build_pfb_power",
+    "build_fir_decimate", "autotune", "pipelines", "plan", "service",
+    "stream",
+]

@@ -1,0 +1,138 @@
+"""Measurement-based lowering autotuner with a persistent on-disk cache.
+
+For each graph node the planner asks :func:`pick_lowering`, which times
+every supported lowering on the node's *actual* shapes/dtypes (tiny
+jitted single-node benchmarks, median of a few repeats) and returns the
+fastest.  Winners persist to a JSON cache so the measurement cost is
+paid once per (op, shapes, dtype, backend) — across processes, not just
+per session.
+
+Cache location: ``$TINA_AUTOTUNE_CACHE`` if set, else
+``~/.cache/tina/autotune.json``.  The file maps key -> {lowering,
+times_us, backend}; delete it (or set the env var elsewhere) to retune.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "TINA_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "tina",
+                     "autotune.json"))
+
+
+_MEM: dict[str, dict] = {}       # path -> loaded cache dict
+_STATS = {"measured": 0, "cache_hits": 0}
+
+
+def stats() -> dict:
+    return dict(_STATS)
+
+
+def _load(path: str) -> dict:
+    if path not in _MEM:
+        try:
+            with open(path) as f:
+                _MEM[path] = json.load(f)
+        except (OSError, ValueError):
+            _MEM[path] = {}
+    return _MEM[path]
+
+
+def _save(path: str, cache: dict) -> None:
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        # merge with what's on disk so concurrent tuners (other
+        # processes tuning different nodes) don't lose each other's
+        # entries to a read-modify-write race; our entries win ties
+        try:
+            with open(path) as f:
+                merged = {**json.load(f), **cache}
+        except (OSError, ValueError):
+            merged = dict(cache)
+        cache.update(merged)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(merged, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)    # atomic replace: readers never see partials
+    except OSError:
+        pass                     # read-only FS: tuning stays in-memory
+
+
+def node_key(node, in_avals: Sequence[jax.ShapeDtypeStruct],
+             backend: str) -> str:
+    shapes = ",".join(f"{tuple(a.shape)}:{a.dtype}" for a in in_avals)
+    attrs = ";".join(f"{k}={v}" for k, v in node.attrs)
+    return f"{node.op}|{shapes}|{attrs}|{backend}"
+
+
+def _dummy(aval: jax.ShapeDtypeStruct) -> jax.Array:
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(aval.shape).astype(np.float32)
+    if np.issubdtype(aval.dtype, np.complexfloating):
+        return jnp.asarray(
+            x + 1j * rng.standard_normal(aval.shape), aval.dtype)
+    return jnp.asarray(x, aval.dtype)
+
+
+def measure(fn, args, *, repeats: int = 3, warmup: int = 1) -> float:
+    """Median seconds per call of an already-jitted fn."""
+    try:
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+    except Exception:
+        return float("inf")      # candidate doesn't lower for these shapes
+
+
+def pick_lowering(graph, node, avals: dict, *, backend: str = None,
+                  candidates: Sequence[str] | None = None,
+                  repeats: int = 3, path: str | None = None) -> str:
+    """Fastest lowering for ``node`` at its inferred shapes (cached)."""
+    from repro.graph.plan import OPS, apply_node
+
+    backend = backend or jax.default_backend()
+    supported = OPS[node.op].lowerings
+    cands = [c for c in (candidates or supported) if c in supported]
+    if len(cands) <= 1:
+        return cands[0] if cands else "native"
+
+    path = path or cache_path()
+    cache = _load(path)
+    in_avals = [avals[i] for i in node.inputs]
+    key = node_key(node, in_avals, backend)
+    hit = cache.get(key)
+    if hit and hit.get("lowering") in cands:
+        _STATS["cache_hits"] += 1
+        return hit["lowering"]
+
+    _STATS["measured"] += 1
+    args = [_dummy(a) for a in in_avals]
+    times = {}
+    for lw in cands:
+        fn = jax.jit(lambda *a, _lw=lw: apply_node(node, a, _lw))
+        times[lw] = measure(fn, args, repeats=repeats)
+    best = min(times, key=times.get)
+    cache[key] = {"lowering": best, "backend": backend,
+                  "times_us": {k: round(v * 1e6, 1)
+                               for k, v in times.items() if np.isfinite(v)}}
+    _save(path, cache)
+    return best
+
+
+__all__ = ["pick_lowering", "measure", "node_key", "cache_path", "stats"]

@@ -1,0 +1,149 @@
+"""Built-in pipelines: whole signal-processing workloads as graphs,
+registered in :data:`repro.core.registry.PIPELINES` alongside the
+single-op registry (same sweep/bench treatment).
+
+  * ``spectrogram``     unfold -> window mult -> DFT -> |·|² -> 1/J scale
+  * ``pfb_power``       polyphase filter bank -> |·|² (paper §5.2 + power)
+  * ``fir_decimate``    FIR -> ↓2 -> FIR -> ↓2 multi-stage decimation chain
+
+Each entry carries a pure-numpy oracle over the same baked constants,
+so tests sweep every pipeline x lowering against ground truth exactly
+like the per-op registry sweep.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import pfb as pfb_lib
+from repro.core.registry import TinaPipeline, register_pipeline
+from repro.graph.graph import Graph
+
+
+def _sliding(x: np.ndarray, j: int) -> np.ndarray:
+    return np.lib.stride_tricks.sliding_window_view(x, j, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# spectrogram
+# ---------------------------------------------------------------------------
+def build_spectrogram(window: int = 64, kind: str = "hanning") -> Graph:
+    win = (np.hanning(window) if kind == "hanning"
+           else np.ones(window)).astype(np.float32)
+    g = Graph(f"spectrogram_j{window}")
+    x = g.input("x")
+    w = g.const(win, "win")
+    frames = g.apply("unfold", x, window=window)
+    windowed = g.apply("window", frames, w)
+    spec = g.apply("dft", windowed)
+    power = g.apply("abs2", spec)
+    out = g.apply("scale", power, factor=1.0 / window)
+    g.output(out)
+    return g
+
+
+def spectrogram_oracle(window: int = 64, kind: str = "hanning"):
+    win = (np.hanning(window) if kind == "hanning"
+           else np.ones(window)).astype(np.float32)
+
+    def oracle(x):
+        frames = _sliding(np.asarray(x, np.float32), window) * win
+        z = np.fft.fft(frames, axis=-1)
+        return (np.abs(z) ** 2) / window
+    return oracle
+
+
+# ---------------------------------------------------------------------------
+# PFB power spectrum
+# ---------------------------------------------------------------------------
+def build_pfb_power(n_branches: int = 16, n_taps: int = 8) -> Graph:
+    taps = pfb_lib.pfb_window(n_branches, n_taps).astype(np.float32)
+    g = Graph(f"pfb_power_p{n_branches}m{n_taps}")
+    x = g.input("x")
+    t = g.const(taps, "taps")
+    z = g.apply("pfb", x, t)
+    out = g.apply("abs2", z)
+    g.output(out)
+    return g
+
+
+def pfb_power_oracle(n_branches: int = 16, n_taps: int = 8):
+    taps = pfb_lib.pfb_window(n_branches, n_taps).astype(np.float32)
+    m, p = taps.shape
+
+    def oracle(x):
+        x = np.asarray(x, np.float32)
+        frames = x.reshape(x.shape[:-1] + (-1, p))
+        nfr = frames.shape[-2]
+        idx = np.arange(nfr - m + 1)[:, None] + np.arange(m)[None, :]
+        y = np.einsum("...tmp,mp->...tp", frames[..., idx, :], taps[::-1, :])
+        return np.abs(np.fft.fft(y, axis=-1)) ** 2
+    return oracle
+
+
+# ---------------------------------------------------------------------------
+# multi-stage FIR decimation chain
+# ---------------------------------------------------------------------------
+def _lowpass(k: int) -> np.ndarray:
+    """Windowed-sinc half-band lowpass (cutoff 0.25 fs) for decimate-by-2."""
+    n = np.arange(k) - (k - 1) / 2.0
+    h = np.sinc(n / 2.0) * np.hamming(k)
+    return (h / h.sum()).astype(np.float32)
+
+
+def build_fir_decimate(taps1: int = 31, taps2: int = 15) -> Graph:
+    g = Graph(f"fir_decimate_k{taps1}_{taps2}")
+    x = g.input("x")
+    t1 = g.const(_lowpass(taps1), "taps1")
+    t2 = g.const(_lowpass(taps2), "taps2")
+    y = g.apply("fir", x, t1)
+    y = g.apply("downsample", y, factor=2)
+    y = g.apply("fir", y, t2)
+    y = g.apply("downsample", y, factor=2)
+    g.output(y)
+    return g
+
+
+def fir_decimate_oracle(taps1: int = 31, taps2: int = 15):
+    h1, h2 = _lowpass(taps1), _lowpass(taps2)
+
+    def conv_rows(x, h):
+        x2 = np.atleast_2d(x)
+        out = np.stack([np.convolve(r, h, mode="valid") for r in x2])
+        return out.reshape(x.shape[:-1] + (out.shape[-1],))
+
+    def oracle(x):
+        x = np.asarray(x, np.float32)
+        y = conv_rows(x, h1)[..., ::2]
+        return conv_rows(y, h2)[..., ::2]
+    return oracle
+
+
+# ---------------------------------------------------------------------------
+# registration
+# ---------------------------------------------------------------------------
+register_pipeline(TinaPipeline(
+    "spectrogram", "4.4+4.1",
+    build=build_spectrogram, oracle=spectrogram_oracle(),
+    lowerings=("native", "conv", "pallas"),
+    make_args=lambda rng, n: (rng.standard_normal(n).astype(np.float32),)))
+
+register_pipeline(TinaPipeline(
+    "pfb_power", "5.2",
+    build=build_pfb_power, oracle=pfb_power_oracle(),
+    lowerings=("native", "conv", "pallas"),
+    make_args=lambda rng, n: (
+        rng.standard_normal(16 * max(16, n // 16)).astype(np.float32),),
+    round_len=lambda n: 16 * max(16, n // 16)))
+
+register_pipeline(TinaPipeline(
+    "fir_decimate", "4.3",
+    build=build_fir_decimate, oracle=fir_decimate_oracle(),
+    lowerings=("native", "conv", "pallas"),
+    make_args=lambda rng, n: (rng.standard_normal(n).astype(np.float32),)))
+
+
+BUILTINS = ("spectrogram", "pfb_power", "fir_decimate")
+
+__all__ = ["BUILTINS", "build_spectrogram", "build_pfb_power",
+           "build_fir_decimate", "spectrogram_oracle", "pfb_power_oracle",
+           "fir_decimate_oracle"]

@@ -1,0 +1,426 @@
+"""Planner: shape-specialize a pipeline graph, fuse adjacent elementwise
+nodes, pick each node's lowering, and memoize the compiled jitted plan.
+
+``compile(graph, shapes)`` returns a :class:`Plan`; the cache key is
+``(graph.signature, input shapes+dtypes, backend, lowering spec)`` so a
+second identical call is a pure dict lookup — no retrace (asserted in
+tests via ``Plan.trace_count``).
+
+Lowering selection: ``lowering=`` may be a single name applied to every
+node (nodes that don't support it fall back to ``native``), a per-node
+dict, or ``"auto"`` — the measurement-based autotuner of
+:mod:`repro.graph.autotune`, which times each candidate on the node's
+actual shapes and persists the winner to an on-disk cache.
+
+Fusion: maximal runs of adjacent single-consumer elementwise nodes
+(``window``/``ew_mul``/``ew_add``/``abs2``/``scale``) collapse into one
+``fused_ew`` node — executed as a single jnp expression (native), a
+sequential paper-faithful chain (conv), or ONE Pallas kernel launch via
+:func:`repro.kernels.ops.fused_elementwise` (pallas).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import functions, pfb
+from repro.graph.graph import Graph, Node
+
+
+# ---------------------------------------------------------------------------
+# Op catalog: implementation + supported lowerings per op.
+# Implementations take (args, attrs, lowering) and must accept leading
+# batch dims the way repro.core.functions does.
+# ---------------------------------------------------------------------------
+def _kops():
+    from repro.kernels import ops
+    return ops
+
+
+def _ew_binary(fn_conv, fn_native):
+    def impl(args, attrs, lowering):
+        x, y = args
+        if lowering == "native" or x.ndim < 2:
+            return fn_native(x, jnp.broadcast_to(y, x.shape))
+        yb = jnp.broadcast_to(y, x.shape)
+        return fn_conv(x, yb, lowering=lowering)
+    return impl
+
+
+def _impl_abs2(args, attrs, lowering):
+    (x,) = args
+    re, im = jnp.real(x), jnp.imag(x)
+    if lowering == "pallas":
+        return _kops().abs2(x)
+    if lowering == "conv" and re.ndim >= 2:
+        return functions.elementwise_add(
+            functions.elementwise_mult(re, re, lowering="conv"),
+            functions.elementwise_mult(im, im, lowering="conv"),
+            lowering="conv")
+    return re * re + im * im
+
+
+def _impl_fused(args, attrs, lowering):
+    x, operands = args[0], tuple(args[1:])
+    steps = attrs["steps"]
+    if lowering == "pallas":
+        return _kops().fused_elementwise(x, operands, steps)
+    k = 0
+    acc = x
+    for step in steps:
+        tag = step[0]
+        if tag == "abs2":
+            acc = _impl_abs2((acc,), {}, lowering)
+        elif tag in ("mul", "add"):
+            op = (functions.elementwise_mult if tag == "mul"
+                  else functions.elementwise_add)
+            o = jnp.broadcast_to(operands[k], acc.shape)
+            k += 1
+            if lowering == "conv" and acc.ndim >= 2:
+                acc = op(acc, o, lowering="conv")
+            else:
+                acc = acc * o if tag == "mul" else acc + o
+        elif tag == "scale":
+            acc = acc * step[1]
+        else:
+            raise ValueError(f"unknown fused step {tag!r}")
+    return acc
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    impl: Callable                 # (args, attrs, lowering) -> Array
+    lowerings: tuple[str, ...]     # lowerings with a distinct code path
+    elementwise: bool = False      # eligible for the fusion pass
+
+
+OPS: dict[str, OpSpec] = {
+    "unfold": OpSpec(
+        lambda a, at, lw: functions.unfold(a[0], at["window"], lowering=lw),
+        ("native", "conv", "pallas")),
+    "fir": OpSpec(
+        lambda a, at, lw: functions.fir(a[0], a[1],
+                                        mode=at.get("mode", "valid"),
+                                        lowering=lw),
+        ("native", "conv", "pallas")),
+    "dft": OpSpec(
+        lambda a, at, lw: functions.dft(a[0], lowering=lw,
+                                        variant=at.get("variant", "4mult")),
+        ("native", "conv", "pallas")),
+    "idft": OpSpec(
+        lambda a, at, lw: functions.idft(a[0], lowering=lw,
+                                         variant=at.get("variant", "4mult")),
+        ("native", "conv", "pallas")),
+    "matmul": OpSpec(
+        lambda a, at, lw: functions.matmul(a[0], a[1], lowering=lw),
+        ("native", "conv", "pallas")),
+    "summation": OpSpec(
+        lambda a, at, lw: functions.summation(a[0], lowering=lw),
+        ("native",)),
+    "pfb_frontend": OpSpec(
+        lambda a, at, lw: pfb.pfb_frontend(a[0], a[1], lowering=lw),
+        ("native", "conv", "pallas")),
+    "pfb": OpSpec(
+        lambda a, at, lw: pfb.pfb(a[0], a[1], lowering=lw,
+                                  variant=at.get("variant", "4mult")),
+        ("native", "conv", "pallas")),
+    # glue primitives ------------------------------------------------------
+    "window": OpSpec(        # multiply by a const vector along the last axis
+        _ew_binary(functions.elementwise_mult, jnp.multiply),
+        ("native", "conv", "pallas"), elementwise=True),
+    "ew_mul": OpSpec(
+        _ew_binary(functions.elementwise_mult, jnp.multiply),
+        ("native", "conv", "pallas"), elementwise=True),
+    "ew_add": OpSpec(
+        _ew_binary(functions.elementwise_add, jnp.add),
+        ("native", "conv", "pallas"), elementwise=True),
+    "abs2": OpSpec(_impl_abs2, ("native", "conv", "pallas"),
+                   elementwise=True),
+    "scale": OpSpec(
+        lambda a, at, lw: a[0] * at["factor"],
+        ("native",), elementwise=True),
+    "downsample":  OpSpec(   # pure data movement: same code every lowering
+        lambda a, at, lw: a[0][..., :: at["factor"]],
+        ("native",)),
+    "fused_ew": OpSpec(_impl_fused, ("native", "conv", "pallas")),
+}
+
+# ``window``/``ew_mul`` resolve to pallas via the generic broadcast path;
+# map their pallas lowering onto the kernels.ops entry points explicitly.
+def _pallas_mul(args, attrs, lowering):
+    return _kops().elementwise_mult(args[0], args[1])
+
+
+def _pallas_add(args, attrs, lowering):
+    return _kops().elementwise_add(args[0], args[1])
+
+
+def apply_node(node: Node, args: Sequence[jax.Array], lowering: str):
+    spec = OPS[node.op]
+    if lowering not in spec.lowerings:
+        lowering = "native"
+    if lowering == "pallas" and node.op in ("window", "ew_mul"):
+        return _pallas_mul(args, node.attr, lowering)
+    if lowering == "pallas" and node.op == "ew_add":
+        return _pallas_add(args, node.attr, lowering)
+    return spec.impl(list(args), node.attr, lowering)
+
+
+# ---------------------------------------------------------------------------
+# Execution + shape inference
+# ---------------------------------------------------------------------------
+def _execute(graph: Graph, inputs: dict[str, jax.Array],
+             lowerings: dict[str, str]):
+    env: dict[str, jax.Array] = {}
+    for node in graph.topo():
+        if node.op == "input":
+            env[node.name] = inputs[node.name]
+        elif node.op == "const":
+            env[node.name] = jnp.asarray(graph.consts[node.name])
+        else:
+            args = [env[i] for i in node.inputs]
+            env[node.name] = apply_node(node, args,
+                                        lowerings.get(node.name, "native"))
+    outs = tuple(env[o] for o in graph.outputs)
+    return outs[0] if len(outs) == 1 else outs
+
+
+def infer(graph: Graph, input_specs: dict[str, jax.ShapeDtypeStruct]
+          ) -> dict[str, jax.ShapeDtypeStruct]:
+    """Abstract-eval every node (native lowering) -> name -> aval."""
+    avals: dict[str, jax.ShapeDtypeStruct] = {}
+
+    def run(inputs):
+        env = {}
+        for node in graph.topo():
+            if node.op == "input":
+                env[node.name] = inputs[node.name]
+            elif node.op == "const":
+                env[node.name] = jnp.asarray(graph.consts[node.name])
+            else:
+                env[node.name] = apply_node(
+                    node, [env[i] for i in node.inputs], "native")
+        return env
+
+    env = jax.eval_shape(run, input_specs)
+    for k, v in env.items():
+        avals[k] = jax.ShapeDtypeStruct(v.shape, v.dtype)
+    return avals
+
+
+# ---------------------------------------------------------------------------
+# Elementwise fusion pass
+# ---------------------------------------------------------------------------
+def fuse_elementwise(graph: Graph,
+                     avals: dict[str, jax.ShapeDtypeStruct]) -> Graph:
+    """Collapse maximal runs of adjacent single-consumer elementwise
+    nodes into ``fused_ew`` nodes.  A complex-input elementwise node only
+    joins as an ``abs2`` run head (the Pallas chain kernel is real)."""
+    consumers = graph.consumers()
+
+    def fusable(node: Node) -> bool:
+        if node.op not in OPS or not OPS[node.op].elementwise:
+            return False
+        if node.op != "abs2" and any(
+                np.issubdtype(avals[i].dtype, np.complexfloating)
+                for i in node.inputs if graph.nodes[i].op != "const"):
+            return False
+        return True
+
+    # group nodes into runs along the data edge (first input)
+    runs: list[list[Node]] = []
+    run_of: dict[str, int] = {}
+    for node in graph.topo():
+        if not fusable(node):
+            continue
+        prev = node.inputs[0] if node.inputs else None
+        if (prev in run_of and node.op != "abs2"
+                and len(consumers[prev]) == 1
+                and prev not in graph.outputs):
+            idx = run_of[prev]
+            runs[idx].append(node)
+            run_of[node.name] = idx
+        else:
+            run_of[node.name] = len(runs)
+            runs.append([node])
+    runs = [r for r in runs if len(r) >= 2]
+    if not runs:
+        return graph
+
+    # emit each fused node at its run TAIL's topo position: operands of
+    # later members may be declared after the run head, and by the tail
+    # every input of every member exists in the rebuilt graph
+    tail_of = {r[-1].name: r for r in runs}
+    merged = {n.name for r in runs for n in r}
+
+    out = Graph(graph.name + "+fused")
+    out.consts = dict(graph.consts)
+    renamed: dict[str, str] = {}   # old producer name -> new name
+
+    def resolve(name: str) -> str:
+        return renamed.get(name, name)
+
+    for node in graph.topo():
+        if node.name in merged and node.name not in tail_of:
+            continue                       # non-tail member: folded away
+        if node.name in tail_of:
+            run = tail_of[node.name]
+            steps: list[tuple] = []
+            operands: list[str] = []
+            data_in = resolve(run[0].inputs[0])
+            for n in run:
+                if n.op in ("window", "ew_mul"):
+                    steps.append(("mul",))
+                    operands.append(resolve(n.inputs[1]))
+                elif n.op == "ew_add":
+                    steps.append(("add",))
+                    operands.append(resolve(n.inputs[1]))
+                elif n.op == "abs2":
+                    steps.append(("abs2",))
+                elif n.op == "scale":
+                    steps.append(("scale", n.attr["factor"]))
+            fname = f"fused_{run[0].name}"
+            members = tuple(n.name for n in run)
+            out._add(Node(fname, "fused_ew", (data_in, *operands),
+                          (("members", members), ("steps", tuple(steps)))))
+            renamed[node.name] = fname     # run tail -> fused node
+        elif node.op == "input":
+            out.inputs.append(node.name)
+            out._add(node)
+        else:
+            out._add(Node(node.name, node.op,
+                          tuple(resolve(i) for i in node.inputs),
+                          node.attrs))
+    out.outputs = [resolve(o) for o in graph.outputs]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Plan cache
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Plan:
+    graph: Graph                  # post-fusion graph the plan executes
+    input_names: tuple[str, ...]
+    lowerings: dict[str, str]     # node name -> chosen lowering
+    key: tuple
+    _fn: Callable = None
+    _traces: list = dataclasses.field(default_factory=list)
+
+    @property
+    def trace_count(self) -> int:
+        """Times jax actually retraced the plan body (1 == fully cached)."""
+        return len(self._traces)
+
+    def __call__(self, *args, **kwargs):
+        arrays = list(args)
+        for name in self.input_names[len(arrays):]:
+            arrays.append(kwargs[name])
+        return self._fn(*arrays)
+
+
+_CACHE: dict[tuple, Plan] = {}
+_STATS = {"hits": 0, "misses": 0}
+
+
+def cache_stats() -> dict:
+    return dict(_STATS)
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+    _STATS.update(hits=0, misses=0)
+
+
+def _norm_specs(graph: Graph, shapes, dtype) -> dict[str, jax.ShapeDtypeStruct]:
+    """shapes: {input: shape | (shape, dtype) | ShapeDtypeStruct}."""
+    if not isinstance(shapes, dict):
+        shapes = {name: s for name, s in zip(graph.inputs, [shapes])} \
+            if len(graph.inputs) == 1 else dict(zip(graph.inputs, shapes))
+    specs = {}
+    for name in graph.inputs:
+        s = shapes[name]
+        if isinstance(s, jax.ShapeDtypeStruct):
+            specs[name] = s
+        elif (isinstance(s, tuple) and len(s) == 2 and isinstance(s[0], tuple)):
+            specs[name] = jax.ShapeDtypeStruct(s[0], jnp.dtype(s[1]))
+        else:
+            specs[name] = jax.ShapeDtypeStruct(tuple(s), jnp.dtype(dtype))
+    return specs
+
+
+def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
+            lowering="native", fuse: bool = True,
+            autotune_kwargs: dict | None = None) -> Plan:
+    """Compile ``graph`` for the given input shapes; memoized.
+
+    ``lowering``: a lowering name for every node (unsupported nodes fall
+    back to native), a {node: lowering} dict, or ``"auto"`` to let the
+    measurement-based autotuner choose per node.
+    """
+    backend = backend or jax.default_backend()
+    specs = _norm_specs(graph, shapes, dtype)
+    spec_key = tuple((n, specs[n].shape, str(specs[n].dtype))
+                     for n in graph.inputs)
+    low_key = (tuple(sorted(lowering.items()))
+               if isinstance(lowering, dict) else lowering)
+    key = (graph.signature, spec_key, backend, low_key, fuse)
+    plan = _CACHE.get(key)
+    if plan is not None:
+        _STATS["hits"] += 1
+        return plan
+    _STATS["misses"] += 1
+
+    for node in graph.topo():
+        if node.op not in ("input", "const") and node.op not in OPS:
+            raise ValueError(f"{node.name}: unknown op {node.op!r}; "
+                             f"known ops: {sorted(OPS)}")
+    avals = infer(graph, specs)
+    g = fuse_elementwise(graph, avals) if fuse else graph
+    if g is not graph:
+        avals = infer(g, specs)
+
+    lowerings: dict[str, str] = {}
+    compute = [n for n in g.topo() if n.op not in ("input", "const")]
+    if lowering == "auto":
+        from repro.graph import autotune
+        for node in compute:
+            lowerings[node.name] = autotune.pick_lowering(
+                g, node, avals, backend=backend,
+                **(autotune_kwargs or {}))
+    elif isinstance(lowering, dict):
+        for node in compute:
+            if node.name in lowering:
+                lowerings[node.name] = lowering[node.name]
+            elif node.op == "fused_ew":
+                # fusion renamed the member nodes: honor their requested
+                # lowering when the members agree, else fall back
+                req = {lowering[m] for m in node.attr.get("members", ())
+                       if m in lowering}
+                lowerings[node.name] = req.pop() if len(req) == 1 else "native"
+            else:
+                lowerings[node.name] = "native"
+    else:
+        for node in compute:
+            lowerings[node.name] = (
+                lowering if lowering in OPS[node.op].lowerings else "native")
+
+    plan = Plan(graph=g, input_names=tuple(g.inputs), lowerings=lowerings,
+                key=key)
+
+    def raw(*arrays):
+        plan._traces.append(1)      # side effect fires only while tracing
+        return _execute(g, dict(zip(g.inputs, arrays)), lowerings)
+
+    plan._fn = jax.jit(raw)
+    _CACHE[key] = plan
+    return plan
+
+
+__all__ = ["OPS", "OpSpec", "Plan", "apply_node", "compile", "infer",
+           "fuse_elementwise", "cache_stats", "clear_cache"]

@@ -1,0 +1,145 @@
+"""Batched pipeline serving: queue requests, pack them into fixed-shape
+batches, run one cached plan per batch.
+
+Fixed shapes are the whole point: every batch is padded to exactly
+``(batch_size, signal_len)``, so after the first batch every execution
+is a plan-cache hit (no retrace, no recompile) — the serving front door
+the ROADMAP's production-scale north star needs.
+
+Two modes:
+  * synchronous — ``submit()`` then ``flush()`` (deterministic, tests)
+  * background  — ``start()`` spawns a batcher thread that drains the
+    queue, waiting at most ``max_wait_ms`` to fill a batch before
+    dispatching a partial (padded) one.
+
+``submit`` returns a ``concurrent.futures.Future`` resolving to that
+request's output slice (a numpy array).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from concurrent.futures import Future
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import plan as plan_lib
+from repro.graph.graph import Graph
+
+
+class PipelineService:
+    def __init__(self, graph: Graph, signal_len: int, *,
+                 batch_size: int = 8, dtype="float32",
+                 lowering="native", max_wait_ms: float = 2.0,
+                 **compile_opts):
+        if len(graph.inputs) != 1:
+            raise ValueError("serving supports single-input graphs")
+        if len(graph.outputs) != 1:
+            # a tuple-returning plan would make out[i] index outputs,
+            # not batch rows — reject instead of corrupting responses
+            raise ValueError("serving supports single-output graphs")
+        self.graph = graph
+        self.signal_len = int(signal_len)
+        self.batch_size = int(batch_size)
+        self.dtype = np.dtype(dtype)
+        self.max_wait_ms = max_wait_ms
+        self._q: "queue.Queue[tuple[np.ndarray, Future] | None]" = \
+            queue.Queue()
+        self._thread: threading.Thread | None = None
+        self.stats = {"requests": 0, "batches": 0, "padded_slots": 0}
+        # compile the serving plan up front: requests never pay trace cost
+        self.plan = plan_lib.compile(
+            graph, {graph.inputs[0]: (self.batch_size, self.signal_len)},
+            dtype=str(self.dtype), lowering=lowering, **compile_opts)
+
+    # -- request side -------------------------------------------------------
+    def submit(self, x) -> Future:
+        x = np.asarray(x, self.dtype)
+        if x.shape != (self.signal_len,):
+            raise ValueError(
+                f"request shape {x.shape} != ({self.signal_len},) — "
+                "fixed-shape serving; open one service per signal length")
+        fut: Future = Future()
+        self.stats["requests"] += 1
+        self._q.put((x, fut))
+        return fut
+
+    # -- batch execution ----------------------------------------------------
+    def _run_batch(self, items: list[tuple[np.ndarray, Future]]) -> None:
+        n = len(items)
+        batch = np.zeros((self.batch_size, self.signal_len), self.dtype)
+        for i, (x, _) in enumerate(items):
+            batch[i] = x
+        try:
+            out = np.asarray(self.plan(jnp.asarray(batch)))
+        except Exception as e:          # noqa: BLE001 — delivered to callers
+            # fail the batch's futures, not the batcher thread: clients
+            # blocked in fut.result() must see the error, and later
+            # requests should still be served
+            for _, fut in items:
+                fut.set_exception(e)
+            self.stats["failed_batches"] = \
+                self.stats.get("failed_batches", 0) + 1
+            return
+        self.stats["batches"] += 1
+        self.stats["padded_slots"] += self.batch_size - n
+        for i, (_, fut) in enumerate(items):
+            fut.set_result(out[i])
+
+    def flush(self) -> int:
+        """Drain the queue synchronously; returns batches executed."""
+        ran = 0
+        while True:
+            items = []
+            while len(items) < self.batch_size:
+                try:
+                    item = self._q.get_nowait()
+                except queue.Empty:
+                    break
+                if item is not None:
+                    items.append(item)
+            if not items:
+                return ran
+            self._run_batch(items)
+            ran += 1
+
+    # -- background batcher -------------------------------------------------
+    def start(self) -> "PipelineService":
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._loop, daemon=True)
+            self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while True:
+            item = self._q.get()          # block for the first request
+            if item is None:
+                return
+            items = [item]
+            while len(items) < self.batch_size:
+                try:
+                    nxt = self._q.get(timeout=self.max_wait_ms / 1e3)
+                except queue.Empty:
+                    break                 # dispatch a partial batch
+                if nxt is None:
+                    self._run_batch(items)
+                    return
+                items.append(nxt)
+            self._run_batch(items)
+
+    def close(self) -> None:
+        if self._thread is not None:
+            self._q.put(None)
+            self._thread.join(timeout=30)
+            self._thread = None
+        self.flush()
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+__all__ = ["PipelineService"]

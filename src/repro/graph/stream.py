@@ -1,0 +1,170 @@
+"""Streaming executor: run chunked 1-D signals through a pipeline in
+bounded memory, with chunked output identical to offline whole-signal
+execution.
+
+Overlap-carry scheme: every streamable op advertises how it maps the
+streamed (time) axis —
+
+  * ``block``      input samples consumed per output step (stride)
+  * ``receptive``  input samples contributing to one output step
+  * ``tail``       trailing axes the op appends after the time axis
+                   (unfold/pfb emit (time, J|P) frames)
+
+These compose down the chain exactly like conv stride/kernel arithmetic
+(``R += (r-1)·B; B *= b``), giving the whole pipeline's receptive field
+R and stride B in *input* samples.  The runner keeps the last < R
+unconsumed samples as carry; each push runs the compiled plan on the
+longest prefix that yields whole output steps.  Every emitted step is
+computed from exactly the same input window the offline run uses, so
+concatenated chunked output equals offline output (valid-mode, no
+padding anywhere in the chain).
+
+Plans are compiled through :func:`repro.graph.plan.compile`, so pushes
+of equal size after warm-up are pure plan-cache hits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import plan as plan_lib
+from repro.graph.graph import Graph, Node
+
+# op classes along the streamed axis ----------------------------------------
+_POINTWISE = {"window", "ew_mul", "ew_add", "abs2", "scale", "fused_ew"}
+_FRAME_ONLY = {"dft", "idft", "matmul"}      # mix the last axis: need frames
+_TIME_OPS = {"unfold", "fir", "pfb", "pfb_frontend", "downsample"}
+
+
+def _taps_shape(graph: Graph, node: Node) -> tuple:
+    ref = node.inputs[1]
+    if graph.nodes[ref].op != "const":
+        raise ValueError(
+            f"streaming requires const taps for {node.name} ({node.op})")
+    return graph.consts[ref].shape
+
+
+def _op_spec(graph: Graph, node: Node) -> tuple[int, int, int]:
+    """(block, receptive, tail_added) for one node."""
+    at = node.attr
+    if node.op == "unfold":
+        return 1, at["window"], 1
+    if node.op == "fir":
+        if at.get("mode", "valid") != "valid":
+            raise ValueError("streaming fir supports mode='valid' only")
+        return 1, _taps_shape(graph, node)[-1], 0
+    if node.op in ("pfb", "pfb_frontend"):
+        m, p = _taps_shape(graph, node)
+        return p, m * p, 1
+    if node.op == "downsample":
+        return at["factor"], 1, 0
+    return 1, 1, 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PipeStreamSpec:
+    block: int         # pipeline stride, in input samples per output step
+    receptive: int     # input samples contributing to one output step
+    tail_dims: int     # axes after the time axis in the final output
+
+    @property
+    def concat_axis(self) -> int:
+        return -(1 + self.tail_dims)
+
+
+def stream_spec(graph: Graph) -> PipeStreamSpec:
+    """Compose per-op specs along the (unique) path from the stream input
+    to the output.  Raises if the graph isn't streamable."""
+    if len(graph.inputs) != 1:
+        raise ValueError("streaming supports single-input graphs "
+                         "(bake taps/windows as consts)")
+    if len(graph.outputs) != 1:
+        raise ValueError("streaming supports single-output graphs")
+    streamed = {graph.inputs[0]}
+    b_total, r_total, tail = 1, 1, 0
+    for node in graph.topo():
+        hot = [i for i in node.inputs if i in streamed]
+        if not hot:
+            continue
+        if len(hot) > 1 and node.op not in _POINTWISE:
+            raise ValueError(f"{node.name}: multiple streamed inputs")
+        if node.op in _TIME_OPS:
+            if tail:
+                raise ValueError(
+                    f"{node.name} ({node.op}) reads the time axis, but an "
+                    "upstream op already framed it")
+            b, r, dt = _op_spec(graph, node)
+            r_total += (r - 1) * b_total
+            b_total *= b
+            tail += dt
+        elif node.op in _FRAME_ONLY:
+            if not tail:
+                raise ValueError(
+                    f"{node.name} ({node.op}) mixes the streamed axis; "
+                    "insert an unfold/pfb first")
+        elif node.op not in _POINTWISE:
+            raise ValueError(f"{node.name} ({node.op}) is not streamable")
+        streamed.add(node.name)
+    if graph.outputs[0] not in streamed:
+        raise ValueError("output does not depend on the stream input")
+    return PipeStreamSpec(b_total, r_total, tail)
+
+
+class ChunkedRunner:
+    """Push chunks in, get output steps out; carries FIR/PFB/unfold
+    overlap state so the concatenated output equals offline execution."""
+
+    def __init__(self, graph: Graph, **compile_opts):
+        self.graph = graph
+        self.spec = stream_spec(graph)
+        self.compile_opts = compile_opts
+        self._carry: np.ndarray | None = None
+
+    @property
+    def carry_len(self) -> int:
+        return 0 if self._carry is None else self._carry.shape[-1]
+
+    def push(self, chunk) -> jax.Array | None:
+        chunk = np.asarray(chunk)
+        buf = (chunk if self._carry is None
+               else np.concatenate([self._carry, chunk], axis=-1))
+        r, b = self.spec.receptive, self.spec.block
+        if buf.shape[-1] < r:
+            self._carry = buf
+            return None
+        n_steps = (buf.shape[-1] - r) // b + 1
+        use = r + (n_steps - 1) * b
+        window = buf[..., :use]
+        p = plan_lib.compile(self.graph, {self.graph.inputs[0]: window.shape},
+                             dtype=str(window.dtype), **self.compile_opts)
+        out = p(jnp.asarray(window))
+        self._carry = buf[..., n_steps * b:]
+        return out
+
+    def run(self, x, chunk_len: int) -> jax.Array:
+        """Stream ``x`` through in ``chunk_len`` pieces; concatenate."""
+        x = np.asarray(x)
+        outs = []
+        for i in range(0, x.shape[-1], chunk_len):
+            o = self.push(x[..., i:i + chunk_len])
+            if o is not None:
+                outs.append(o)
+        if not outs:
+            raise ValueError(
+                f"signal length {x.shape[-1]} is shorter than the "
+                f"pipeline's receptive field ({self.spec.receptive}): "
+                "no output steps were produced")
+        return jnp.concatenate(outs, axis=self.spec.concat_axis)
+
+
+def stream_execute(graph: Graph, x, chunk_len: int, **compile_opts):
+    """One-shot helper: chunked execution of ``x`` (tests/benchmarks)."""
+    return ChunkedRunner(graph, **compile_opts).run(x, chunk_len)
+
+
+__all__ = ["ChunkedRunner", "PipeStreamSpec", "stream_spec",
+           "stream_execute"]

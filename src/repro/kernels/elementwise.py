@@ -46,3 +46,64 @@ def elementwise_mult(x, y, *, bm: int = 256, bn: int = 256,
 def elementwise_add(x, y, *, bm: int = 256, bn: int = 256,
                     interpret: bool = False):
     return _binary(_add_kernel, x, y, bm=bm, bn=bn, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Fused elementwise chains — the planner's fusion pass (repro.graph.plan)
+# collapses runs of adjacent elementwise nodes into ONE kernel launch so a
+# pipeline like |DFT|² · scale does a single VMEM round-trip instead of one
+# HBM round-trip per node.
+#
+# ``steps`` is a static tuple of tags applied in order to an accumulator:
+#   ("mul",)        acc *= next operand ref
+#   ("add",)        acc += next operand ref
+#   ("scale", c)    acc *= c            (python float baked into the kernel)
+# ``abs2_head=True`` means the chain starts from a complex value passed as
+# two real refs (re, im) and the first action is acc = re² + im².
+# ---------------------------------------------------------------------------
+def _chain_kernel(steps, abs2_head):
+    def kernel(*refs):
+        o_ref = refs[-1]
+        if abs2_head:
+            r, i = refs[0][...], refs[1][...]
+            acc = r * r + i * i
+            k = 2
+        else:
+            acc = refs[0][...]
+            k = 1
+        for step in steps:
+            tag = step[0]
+            if tag == "mul":
+                acc = acc * refs[k][...]
+                k += 1
+            elif tag == "add":
+                acc = acc + refs[k][...]
+                k += 1
+            elif tag == "scale":
+                acc = acc * step[1]
+            else:
+                raise ValueError(f"unknown chain step {tag!r}")
+        o_ref[...] = acc
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("steps", "abs2_head", "bm", "bn",
+                                    "interpret"))
+def elementwise_chain(inputs, *, steps, abs2_head: bool = False,
+                      bm: int = 256, bn: int = 256, interpret: bool = False):
+    """Apply a fused chain of elementwise steps in one pallas_call.
+
+    ``inputs``: tuple of same-shape 2-D real arrays — the head value
+    (re, im if ``abs2_head``) followed by one operand per mul/add step.
+    """
+    m, n = inputs[0].shape
+    assert m % bm == 0 and n % bn == 0, (inputs[0].shape, (bm, bn))
+    return pl.pallas_call(
+        _chain_kernel(steps, abs2_head),
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))] * len(inputs),
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), inputs[0].dtype),
+        interpret=interpret,
+    )(*inputs)

@@ -72,6 +72,44 @@ def elementwise_add(x: Array, y: Array) -> Array:
     return out[: xb.shape[0], : xb.shape[1]].reshape(shape)
 
 
+def fused_elementwise(x: Array, operands: tuple, steps: tuple) -> Array:
+    """Fused elementwise chain — the planner's entry point (one kernel
+    launch for a whole run of adjacent elementwise graph nodes).
+
+    ``steps``: static tuple, in order, of
+      ("abs2",)     — only as first step; x must be complex, out = re²+im²
+      ("mul",) / ("add",) — consumes the next array from ``operands``
+      ("scale", c)  — multiply by a python scalar baked into the kernel
+    Operands are broadcast to x's shape.
+    """
+    abs2_head = bool(steps) and steps[0][0] == "abs2"
+    rest = steps[1:] if abs2_head else steps
+    if abs2_head:
+        shape = x.shape
+        heads = (jnp.real(x), jnp.imag(x))
+    else:
+        if jnp.iscomplexobj(x):
+            raise ValueError("fused_elementwise: complex input requires an "
+                             "abs2 head step")
+        shape = jnp.broadcast_shapes(x.shape, *(o.shape for o in operands))
+        heads = (jnp.broadcast_to(x, shape),)
+    flat = [h.reshape((-1, shape[-1])) for h in heads]
+    for o in operands:
+        flat.append(jnp.broadcast_to(o, shape).reshape((-1, shape[-1])))
+    bm = min(256, max(8, flat[0].shape[0]))
+    bn = min(256, max(128, flat[0].shape[1]))
+    padded = tuple(_pad_to(f, (bm, bn)) for f in flat)
+    out = ew_kernel.elementwise_chain(
+        padded, steps=tuple(rest), abs2_head=abs2_head, bm=bm, bn=bn,
+        interpret=_interpret())
+    return out[: flat[0].shape[0], : flat[0].shape[1]].reshape(shape)
+
+
+def abs2(x: Array) -> Array:
+    """|x|² of a complex array in one fused kernel (re² + im²)."""
+    return fused_elementwise(x, (), (("abs2",),))
+
+
 def dft(xr: Array, xi: Array, fr: Array, fi: Array, *,
         variant: str = "3mult", bm: int = 128, bn: int = 128,
         bk: int = 128) -> tuple[Array, Array]:
@@ -158,5 +196,6 @@ def pfb(x: Array, taps: Array, *, variant: str = "4mult") -> Array:
     return z.reshape(batch + (tout, p))
 
 
-__all__ = ["matmul", "elementwise_mult", "elementwise_add", "dft", "fir",
-           "unfold", "pfb_fir", "pfb"]
+__all__ = ["matmul", "elementwise_mult", "elementwise_add",
+           "fused_elementwise", "abs2", "dft", "fir", "unfold", "pfb_fir",
+           "pfb"]

@@ -2,6 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# hypothesis is a test extra (pyproject [test]); a container without it
+# should skip these properties, not break collection of the whole suite
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import functions as tina
