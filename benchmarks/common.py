@@ -5,6 +5,7 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 import time
 from typing import Callable
 
@@ -32,6 +33,31 @@ def timeit(fn: Callable, *args, repeats: int = 20, warmup: int = 3) -> float:
     return float(np.median(ts))
 
 
+def timeit_group(fns, *args, repeats: int = 10, warmup: int = 2
+                 ) -> list[float]:
+    """Best-of-N seconds per call for several callables on the same
+    args, timed round-robin — machine drift and contention spikes hit
+    every candidate equally, and min is robust to one-sided noise
+    (median is not, on a busy box).  Use this for A-vs-B comparisons;
+    ``timeit`` for standalone numbers."""
+    def _sync(out):
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+        elif isinstance(out, (tuple, list)):
+            jax.block_until_ready(out)
+
+    for fn in fns:
+        for _ in range(warmup):
+            _sync(fn(*args))
+    best = [float("inf")] * len(fns)
+    for _ in range(repeats):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            _sync(fn(*args))
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return best
+
+
 def fmt_table(title: str, header: list[str], rows: list[list]) -> str:
     widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
               for i, h in enumerate(header)]
@@ -51,17 +77,58 @@ def speedup(base: float, t: float) -> str:
     return f"{base / t:6.1f}x"
 
 
-def write_bench_json(path: str, results, **meta) -> str:
-    """Persist benchmark results as BENCH_*.json so the perf trajectory
-    accumulates across PRs.  ``results`` is a list of flat dicts; meta
-    (backend, sizes, ...) is recorded alongside."""
-    payload = {
+def git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def _run_record(results, **meta) -> dict:
+    return {
+        "git_rev": git_rev(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "backend": jax.default_backend(),
         "jax_version": jax.__version__,
-        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         **meta,
         "results": list(results),
     }
+
+
+def write_bench_json(path: str, results, **meta) -> str:
+    """Persist benchmark results as BENCH_*.json (single run, overwrite).
+    ``results`` is a list of flat dicts; meta (backend, sizes, ...) is
+    recorded alongside."""
+    with open(path, "w") as f:
+        json.dump(_run_record(results, **meta), f, indent=1, sort_keys=False)
+        f.write("\n")
+    return os.path.abspath(path)
+
+
+def append_bench_json(path: str, results, **meta) -> str:
+    """Append one run record (git rev + timestamp + results) to a
+    BENCH_*.json so the perf trajectory accumulates across PRs instead
+    of each run overwriting the last.  A pre-existing single-run file
+    (the old ``write_bench_json`` format) is migrated to the first run
+    record."""
+    run = _run_record(results, **meta)
+    try:
+        with open(path) as f:
+            existing = json.load(f)
+    except (OSError, ValueError):
+        existing = None
+    if isinstance(existing, dict) and isinstance(existing.get("runs"), list):
+        payload = existing
+        payload["runs"].append(run)
+    elif isinstance(existing, dict) and "results" in existing:
+        payload = {"figure": existing.get("figure", meta.get("figure")),
+                   "runs": [existing, run]}
+    else:
+        payload = {"figure": meta.get("figure"), "runs": [run]}
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=False)
         f.write("\n")

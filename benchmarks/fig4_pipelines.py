@@ -1,18 +1,32 @@
-"""Beyond-paper Fig. 4: compiled pipeline plans vs naive per-op dispatch.
+"""Beyond-paper Fig. 4: compiled pipeline plans vs naive per-op dispatch,
+and block-tuned plans vs fixed-default plans.
 
 The paper composes TINA layers one framework call at a time; the graph
-subsystem compiles the whole pipeline into one cached jitted plan.
-This benchmark quantifies the difference for every built-in pipeline:
+subsystem compiles the whole pipeline into one cached jitted plan, and
+the v2 autotuner tunes each Pallas kernel's block sizes on the node's
+actual shapes.  This benchmark quantifies both for every built-in
+pipeline:
 
-  * per-op   — each graph node executed through its own jitted callable,
-               synchronizing (block_until_ready) between nodes: the
-               dispatch pattern of calling repro.core.functions by hand
-  * plan     — ``graph.compile(...)`` product: one jit region, fused
-               elementwise chains, no host round-trips
-  * plan+auto— same, with the measurement-based autotuner picking each
-               node's lowering (first run pays measurement, then cached)
+  * per-op       — each graph node executed through its own jitted
+                   callable, synchronizing (block_until_ready) between
+                   nodes: the dispatch pattern of calling
+                   repro.core.functions by hand
+  * plan         — ``graph.compile(...)`` product: one jit region, fused
+                   elementwise chains, no host round-trips
+  * pallas-def   — the all-Pallas plan with every kernel's fixed default
+                   block sizes (the pre-tuning behavior)
+  * pallas-tuned — the same plan with ``block_configs="auto"``: the
+                   autotuner searches each kernel's TuneSpace on the
+                   pipeline's actual shapes
+  * plan+auto    — (--autotune) full joint tuning: fastest lowering AND
+                   fastest tiling per node
 
-Emits ``BENCH_pipelines.json`` via benchmarks/common.py.
+When the tuner's winners equal the defaults the two plans are the same
+computation, so the default timing is reused (speedup exactly 1.0)
+instead of re-measuring noise.
+
+Appends a run record (git rev + timestamp) to ``BENCH_pipelines.json``
+via benchmarks/common.py, so the perf trajectory accumulates across PRs.
 """
 from __future__ import annotations
 
@@ -23,8 +37,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import fmt_table, speedup, timeit, us, write_bench_json
+from benchmarks.common import (append_bench_json, fmt_table, speedup,
+                               timeit_group, us)
 from repro.core.registry import PIPELINES, pipelines as _load_pipelines
+from repro.graph import autotune
 from repro.graph import plan as plan_lib
 from repro.graph import compile as graph_compile
 
@@ -57,8 +73,36 @@ def make_per_op_dispatch(graph):
     return run
 
 
-def run(sizes=(2 ** 13, 2 ** 15), repeats=10, autotune=False):
+def tuned_equals_default(plan, shapes) -> bool:
+    """True when every tuned block config equals its kernel's default —
+    the tuned plan is then the same computation as the default plan."""
+    specs = {k: jax.ShapeDtypeStruct(tuple(v), jnp.float32)
+             for k, v in shapes.items()}
+    avals = plan_lib.infer(plan.graph, specs)
+    for node in plan.graph.topo():
+        if node.op in ("input", "const"):
+            continue
+        cfg = plan.configs.get(node.name) or {}
+        if not cfg or plan.lowerings.get(node.name) != "pallas":
+            continue
+        ctx = autotune.tune_ctx(node, [avals[i] for i in node.inputs])
+        space = autotune.space_for(node.op)
+        if ctx is None or space is None:
+            continue
+        if space.check({}, ctx) != space.check(cfg, ctx):
+            return False
+    return True
+
+
+def run(sizes=(2 ** 13, 2 ** 15), repeats=10, autotune_col=False,
+        tune_repeats=3, tuned=True):
+    """``tuned=False`` skips the pallas def/tuned columns (they compile,
+    block-tune, and time all-Pallas plans — minutes of interpret-mode
+    work on CPU, and writes to the autotune cache)."""
     _load_pipelines()
+    if tuned and autotune.mode() != "on":
+        print(f"[fig4] warning: TINA_AUTOTUNE={autotune.mode()} — the "
+              "tuned-plan column will reuse cached/default configs")
     rng = np.random.default_rng(0)
     rows, records = [], []
     for name, spec in sorted(PIPELINES.items()):
@@ -66,30 +110,59 @@ def run(sizes=(2 ** 13, 2 ** 15), repeats=10, autotune=False):
         for n in sizes:
             (x_np,) = spec.make_args(rng, n)
             x = jnp.asarray(x_np)
+            shapes = {g.inputs[0]: x.shape}
             naive = make_per_op_dispatch(g)
-            t_naive = timeit(naive, x, repeats=repeats)
-            p = graph_compile(g, {g.inputs[0]: x.shape})
-            t_plan = timeit(p, x, repeats=repeats)
+            p = graph_compile(g, shapes)
+            # interleaved timing groups: drift/contention hits both
+            # sides of a comparison equally (common.timeit_group); the
+            # def-vs-tuned pair gets extra repeats — its gaps can be a
+            # few percent, which back-to-back timing can't resolve
+            t_naive, t_plan = timeit_group([naive, p], x, repeats=repeats)
             row = [name, x_np.shape[-1], us(t_naive), us(t_plan),
                    speedup(t_naive, t_plan)]
             rec = {"pipeline": name, "n": int(x_np.shape[-1]),
                    "t_per_op_s": t_naive, "t_plan_s": t_plan,
                    "speedup_plan": t_naive / t_plan}
-            if autotune:
-                pa = graph_compile(g, {g.inputs[0]: x.shape},
-                                   lowering="auto")
-                t_auto = timeit(pa, x, repeats=repeats)
+
+            if tuned:
+                # the tentpole comparison: fixed-default vs block-tuned
+                # tiling of the same all-Pallas plan
+                p_def = graph_compile(g, shapes, lowering="pallas")
+                p_tuned = graph_compile(
+                    g, shapes, lowering="pallas", block_configs="auto",
+                    autotune_kwargs={"repeats": tune_repeats})
+                same = tuned_equals_default(p_tuned, shapes)
+                if same:
+                    (t_def,) = timeit_group([p_def], x, repeats=repeats)
+                    t_tuned = t_def
+                else:
+                    t_def, t_tuned = timeit_group([p_def, p_tuned], x,
+                                                  repeats=max(repeats, 16))
+                row += [us(t_def), us(t_tuned), speedup(t_def, t_tuned)]
+                rec.update(t_pallas_default_s=t_def, t_pallas_tuned_s=t_tuned,
+                           speedup_tuned_vs_default=t_def / t_tuned,
+                           tuned_configs={k: v for k, v in
+                                          p_tuned.configs.items() if v})
+            if autotune_col:
+                pa = graph_compile(g, shapes, lowering="auto",
+                                   autotune_kwargs={"repeats": tune_repeats})
+                (t_auto,) = timeit_group([pa], x, repeats=repeats)
                 row += [us(t_auto), speedup(t_naive, t_auto)]
                 rec.update(t_plan_auto_s=t_auto,
                            speedup_auto=t_naive / t_auto,
-                           auto_lowerings=pa.lowerings)
+                           auto_lowerings=pa.lowerings,
+                           auto_configs={k: v for k, v in
+                                         pa.configs.items() if v})
             rows.append(row)
             records.append(rec)
 
     header = ["pipeline", "n", "per_op_us", "plan_us", "plan_vs_per_op"]
-    if autotune:
+    if tuned:
+        header += ["pallas_def_us", "pallas_tuned_us", "tuned_vs_def"]
+    if autotune_col:
         header += ["auto_us", "auto_vs_per_op"]
-    return fmt_table("Fig.4: compiled pipeline plans vs per-op dispatch",
+    return fmt_table("Fig.4: compiled plans vs per-op dispatch; "
+                     "block-tuned vs fixed-default plans",
                      header, rows), records
 
 
@@ -98,15 +171,18 @@ def main(argv=None):
     ap.add_argument("--sizes", type=int, nargs="+",
                     default=[2 ** 13, 2 ** 15])
     ap.add_argument("--repeats", type=int, default=10)
+    ap.add_argument("--tune-repeats", type=int, default=3,
+                    help="per-candidate repeats inside the autotuner")
     ap.add_argument("--autotune", action="store_true",
-                    help="add an autotuned-lowering column")
+                    help="add a jointly-autotuned (lowering+config) column")
     ap.add_argument("--out", default="BENCH_pipelines.json")
     args = ap.parse_args(argv)
-    table, records = run(tuple(args.sizes), args.repeats, args.autotune)
+    table, records = run(tuple(args.sizes), args.repeats, args.autotune,
+                         args.tune_repeats)
     print(table)
-    path = write_bench_json(args.out, records, figure="fig4_pipelines",
-                            sizes=list(args.sizes), repeats=args.repeats)
-    print(f"\n[fig4] wrote {path}")
+    path = append_bench_json(args.out, records, figure="fig4_pipelines",
+                             sizes=list(args.sizes), repeats=args.repeats)
+    print(f"\n[fig4] appended run to {path}")
 
 
 if __name__ == "__main__":

@@ -44,7 +44,10 @@ def main(argv=None):
         print(fig3_pfb.run(pfb_sizes, repeats=max(3, rep // 2)))
         print()
     if args.only in (None, "fig4"):
-        table, _ = fig4_pipelines.run(pipe_sizes, repeats=max(3, rep // 2))
+        # --quick skips the block-tuning columns: tuning measures every
+        # valid config per node in interpret mode (minutes on CPU)
+        table, _ = fig4_pipelines.run(pipe_sizes, repeats=max(3, rep // 2),
+                                      tuned=not args.quick)
         print(table)
         print()
     if args.only in (None, "kernels"):

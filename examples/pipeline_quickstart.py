@@ -8,11 +8,20 @@ into a cached shape-specialized plan, (3) stream a long signal through
 in chunks with overlap carry, (4) serve batched requests through one
 cached plan.
 """
+import os
+import tempfile
+
 import numpy as np
 import jax.numpy as jnp
 
 from repro import graph
 from repro.core.registry import PIPELINES, pipelines
+
+# keep the example self-contained: tune into a temp cache, not the
+# user's global ~/.cache/tina/autotune.json (respects an explicit env)
+os.environ.setdefault(
+    "TINA_AUTOTUNE_CACHE",
+    os.path.join(tempfile.gettempdir(), "tina-quickstart-autotune.json"))
 
 rng = np.random.default_rng(0)
 
@@ -38,6 +47,17 @@ plan2 = graph.compile(g, {"x": sig.shape})
 assert plan2 is plan, "second compile must be a cache hit"
 print(f"plan: out {offline.shape}, traces {plan.trace_count}, "
       f"fused graph {plan.graph}")
+
+# -- 2b. autotune the Pallas tiling for these exact shapes ------------------
+# block_configs="auto" searches each kernel's TuneSpace (valid block
+# sizes only) on the pipeline's real shapes; winners persist to the
+# on-disk cache, so a second run compiles instantly.  lowering="auto"
+# would tune lowering AND tiling jointly.
+tuned = graph.compile(g, {"x": sig.shape}, lowering="pallas",
+                      block_configs="auto", autotune_kwargs={"repeats": 1})
+np.testing.assert_allclose(np.asarray(tuned(jnp.asarray(sig))), offline,
+                           rtol=2e-3, atol=2e-3)
+print("tuned:", {k: v for k, v in tuned.configs.items() if v})
 
 # -- 3. stream it chunk-by-chunk: identical to offline ----------------------
 chunked = np.asarray(graph.stream_execute(g, sig, chunk_len=1000))

@@ -32,13 +32,19 @@ def _kernels_ops():
 # ---------------------------------------------------------------------------
 # §3.1 elementwise multiplication  — depthwise conv, Eq. (6)
 # ---------------------------------------------------------------------------
-def elementwise_mult(x: Array, y: Array, *, lowering: str = "native") -> Array:
+def elementwise_mult(x: Array, y: Array, *, lowering: str = "native",
+                     block: Optional[dict] = None) -> Array:
     """Elementwise x*y of same-shape arrays via a depthwise conv whose
-    H = W = 1 and C_out = H*W (paper Eq. 6).  Batched over x.shape[:-2]."""
+    H = W = 1 and C_out = H*W (paper Eq. 6).  Batched over x.shape[:-2].
+
+    ``block``: optional Pallas block-size overrides (e.g. ``{"bm": 8,
+    "bn": 512}``) forwarded to :mod:`repro.kernels.ops`; ignored by the
+    non-pallas lowerings.  Same for every ``block=`` below.
+    """
     if x.shape[-2:] != y.shape[-2:]:
         raise ValueError(f"shape mismatch {x.shape} vs {y.shape}")
     if lowering == "pallas":
-        return _kernels_ops().elementwise_mult(x, y)
+        return _kernels_ops().elementwise_mult(x, y, **(block or {}))
     h, w = x.shape[-2:]
     batch = x.shape[:-2]
     c = h * w
@@ -57,11 +63,12 @@ def elementwise_mult(x: Array, y: Array, *, lowering: str = "native") -> Array:
 # §3.3 elementwise addition  — depthwise conv, ones kernel, addend as bias,
 # Eq. (10)
 # ---------------------------------------------------------------------------
-def elementwise_add(x: Array, y: Array, *, lowering: str = "native") -> Array:
+def elementwise_add(x: Array, y: Array, *, lowering: str = "native",
+                    block: Optional[dict] = None) -> Array:
     if x.shape[-2:] != y.shape[-2:]:
         raise ValueError(f"shape mismatch {x.shape} vs {y.shape}")
     if lowering == "pallas":
-        return _kernels_ops().elementwise_add(x, y)
+        return _kernels_ops().elementwise_add(x, y, **(block or {}))
     h, w = x.shape[-2:]
     batch = x.shape[:-2]
     c = h * w
@@ -80,11 +87,12 @@ def elementwise_add(x: Array, y: Array, *, lowering: str = "native") -> Array:
 # §3.2 matrix–matrix multiplication  — pointwise conv, Eq. (9)
 # ---------------------------------------------------------------------------
 def matmul(x: Array, y: Array, *, lowering: str = "native",
-           precision=jax.lax.Precision.HIGHEST) -> Array:
+           precision=jax.lax.Precision.HIGHEST,
+           block: Optional[dict] = None) -> Array:
     """Z = X @ Y via pointwise conv: reshape X (.., M, L) into the conv
     input (T, C_in=L, 1, W=M); kernel = Y (L, N) (paper Eq. 9)."""
     if lowering == "pallas":
-        return _kernels_ops().matmul(x, y)
+        return _kernels_ops().matmul(x, y, **(block or {}))
     if y.ndim != 2:
         raise ValueError("TINA matmul kernel (conv weight) must be 2-D")
     if lowering == "native":
@@ -131,7 +139,7 @@ def _split(x: Array) -> tuple[Array, Array]:
 
 
 def dft(x: Array, *, inverse: bool = False, lowering: str = "native",
-        variant: str = "4mult") -> Array:
+        variant: str = "4mult", block: Optional[dict] = None) -> Array:
     """(I)DFT over the last axis as a TINA matmul with the (I)DFM kernel
     (paper Eq. 12–14).  Complex arithmetic is the real/imag block matmul:
 
@@ -147,7 +155,8 @@ def dft(x: Array, *, inverse: bool = False, lowering: str = "native",
     xr = xr.reshape((-1, n))
     xi = xi.reshape((-1, n))
     if lowering == "pallas":
-        zr, zi = _kernels_ops().dft(xr, xi, fr, fi, variant=variant)
+        zr, zi = _kernels_ops().dft(xr, xi, fr, fi, variant=variant,
+                                    **(block or {}))
     else:
         mm = functools.partial(matmul, lowering=lowering)
         if variant == "4mult":
@@ -167,15 +176,18 @@ def dft(x: Array, *, inverse: bool = False, lowering: str = "native",
     return (zr + 1j * zi).reshape(shp[:-1] + (n,))
 
 
-def idft(z: Array, *, lowering: str = "native", variant: str = "4mult") -> Array:
-    return dft(z, inverse=True, lowering=lowering, variant=variant)
+def idft(z: Array, *, lowering: str = "native", variant: str = "4mult",
+         block: Optional[dict] = None) -> Array:
+    return dft(z, inverse=True, lowering=lowering, variant=variant,
+               block=block)
 
 
 # ---------------------------------------------------------------------------
 # §4.3 FIR filter  — standard conv with taps as weights, Eq. (16)
 # ---------------------------------------------------------------------------
 def fir(x: Array, taps: Array, *, mode: str = "valid",
-        lowering: str = "native", flip: bool = True) -> Array:
+        lowering: str = "native", flip: bool = True,
+        block: Optional[dict] = None) -> Array:
     """FIR filter y(i) = Σ_k a(k) x(i−k) over the last axis.
 
     The paper's Eq. (16) is a cross-correlation (``I(w+n)``); true FIR
@@ -195,7 +207,7 @@ def fir(x: Array, taps: Array, *, mode: str = "valid",
     else:
         raise ValueError(f"unknown mode {mode!r}")
     if lowering == "pallas":
-        return _kernels_ops().fir(x, kern, mode=mode)
+        return _kernels_ops().fir(x, kern, mode=mode, **(block or {}))
     batch = x.shape[:-1]
     w = x.shape[-1]
     xi = x.reshape((-1, 1, 1, w))                        # (T,1,1,W)
@@ -225,7 +237,8 @@ def depthwise_fir(x: Array, taps: Array, *, causal: bool = True,
 # ---------------------------------------------------------------------------
 # §4.4 unfolding  — standard conv with identity kernel, Eq. (19)
 # ---------------------------------------------------------------------------
-def unfold(x: Array, window: int, *, lowering: str = "native") -> Array:
+def unfold(x: Array, window: int, *, lowering: str = "native",
+           block: Optional[dict] = None) -> Array:
     """Y(i, j) = X(i + j): (.., N) -> (.., N-J+1, J).
 
     ``conv`` is the paper-faithful identity-kernel conv (burns N·J² MACs);
@@ -237,7 +250,7 @@ def unfold(x: Array, window: int, *, lowering: str = "native") -> Array:
     if j > n:
         raise ValueError(f"window {j} > length {n}")
     if lowering == "pallas":
-        return _kernels_ops().unfold(x, j)
+        return _kernels_ops().unfold(x, j, **(block or {}))
     batch = x.shape[:-1]
     if lowering == "native":
         idx = jnp.arange(n - j + 1)[:, None] + jnp.arange(j)[None, :]

@@ -46,12 +46,16 @@ def pfb_window(n_branches: int, n_taps: int, kind: str = "hamming") -> np.ndarra
     return (sinc * win).reshape(m, p)
 
 
-def pfb_frontend(x: Array, taps: Array, *, lowering: str = "native") -> Array:
+def pfb_frontend(x: Array, taps: Array, *, lowering: str = "native",
+                 block: Optional[dict] = None) -> Array:
     """Subfiltered signals y_p(n') (paper Fig. 3 "left column").
 
     x: (..., n_samples) with n_samples divisible by P.
     taps: (M, P) per-branch FIR coefficients.
     returns: (..., n_frames − M + 1, P)
+
+    ``block``: optional Pallas block-size overrides ({"bt", "bn"}),
+    forwarded to the fused kernel; ignored by non-pallas lowerings.
     """
     m, p = taps.shape
     if x.shape[-1] % p:
@@ -60,7 +64,7 @@ def pfb_frontend(x: Array, taps: Array, *, lowering: str = "native") -> Array:
     frames = x.reshape(batch + (-1, p))            # (..., n', P): branch decomp
     if lowering == "pallas":
         from repro.kernels import ops
-        return ops.pfb_fir(frames, taps)
+        return ops.pfb_fir(frames, taps, **(block or {}))
     # TINA mapping: unfold over the frame axis + depthwise reduction ==
     # P parallel FIRs (the paper's bank of standard convs).
     # windows: (..., n'-M+1, M, P)
@@ -77,12 +81,12 @@ def pfb_frontend(x: Array, taps: Array, *, lowering: str = "native") -> Array:
 
 
 def pfb(x: Array, taps: Array, *, lowering: str = "native",
-        variant: str = "4mult") -> Array:
+        variant: str = "4mult", block: Optional[dict] = None) -> Array:
     """Full PFB: frontend + DFT across branches (paper Fig. 3 "right
     column").  Returns complex spectra (..., n_frames − M + 1, P)."""
     if lowering == "pallas":
         from repro.kernels import ops
-        return ops.pfb(x, taps, variant=variant)
+        return ops.pfb(x, taps, variant=variant, **(block or {}))
     y = pfb_frontend(x, taps, lowering=lowering)
     # y is (..., n_frames', P): the DFT runs across the branch axis P,
     # which is already the last axis.

@@ -1,15 +1,40 @@
-"""Measurement-based lowering autotuner with a persistent on-disk cache.
+"""Measurement-based autotuner: lowering choice AND Pallas block sizes,
+with a persistent on-disk cache.
 
-For each graph node the planner asks :func:`pick_lowering`, which times
-every supported lowering on the node's *actual* shapes/dtypes (tiny
-jitted single-node benchmarks, median of a few repeats) and returns the
-fastest.  Winners persist to a JSON cache so the measurement cost is
+For each graph node the planner asks :func:`pick`, which times every
+supported candidate on the node's *actual* shapes/dtypes (tiny jitted
+single-node benchmarks, median of a few repeats) and returns the
+fastest ``(lowering, block_config)``.  Pallas candidates are expanded
+through the kernel's own :class:`repro.kernels.tune.TuneSpace` —
+candidate block configs filtered by the kernel's validity predicate, so
+an invalid tiling (FIR taps exceeding the halo block, a non-dividing
+PFB column block) is never even measured.  Early pruning keeps the
+search cheap: a candidate slower than the incumbent after its first
+timed repeat is abandoned immediately.
+
+Winners persist to a JSON cache (schema v2) so the measurement cost is
 paid once per (op, shapes, dtype, backend) — across processes, not just
-per session.
+per session.  v1 caches (flat ``key -> {lowering, ...}`` maps from the
+lowering-only tuner) are migrated on load; their entries keep their
+lowering and fall back to default block configs.
 
-Cache location: ``$TINA_AUTOTUNE_CACHE`` if set, else
-``~/.cache/tina/autotune.json``.  The file maps key -> {lowering,
-times_us, backend}; delete it (or set the env var elsewhere) to retune.
+Environment:
+  ``TINA_AUTOTUNE``        ``on`` (default: measure & persist),
+                           ``cached`` (never measure: cache hit or
+                           fixed defaults — deterministic, for CI and
+                           production serving), ``off`` (fixed defaults,
+                           no cache reads at all).
+  ``TINA_AUTOTUNE_CACHE``  cache file path (default
+                           ``~/.cache/tina/autotune.json``).
+
+The in-process cache mirror is invalidated when the file's mtime
+changes, so concurrent tuner processes pick up each other's entries
+without a restart.
+
+CLI (used by the CI autotune smoke job)::
+
+    PYTHONPATH=src python -m repro.graph.autotune \\
+        --pipeline spectrogram --n 512 --repeats 2
 """
 from __future__ import annotations
 
@@ -17,11 +42,13 @@ import json
 import os
 import tempfile
 import time
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+SCHEMA_VERSION = 2
 
 
 def cache_path() -> str:
@@ -31,40 +58,74 @@ def cache_path() -> str:
                      "autotune.json"))
 
 
-_MEM: dict[str, dict] = {}       # path -> loaded cache dict
-_STATS = {"measured": 0, "cache_hits": 0}
+def mode() -> str:
+    """Autotune mode from ``$TINA_AUTOTUNE``: off | cached | on."""
+    m = os.environ.get("TINA_AUTOTUNE", "on").strip().lower()
+    if m not in ("off", "cached", "on"):
+        raise ValueError(
+            f"TINA_AUTOTUNE={m!r}: expected off, cached, or on")
+    return m
+
+
+# path -> {"mtime": int | None, "entries": {key: entry}}
+_MEM: dict[str, dict] = {}
+_STATS = {"measured": 0, "cache_hits": 0, "pruned": 0}
 
 
 def stats() -> dict:
     return dict(_STATS)
 
 
+def _mtime(path: str) -> int | None:
+    try:
+        return os.stat(path).st_mtime_ns
+    except OSError:
+        return None
+
+
+def _read_file(path: str) -> dict:
+    """Read + migrate a cache file into a flat entries dict."""
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    if not isinstance(raw, dict):
+        return {}
+    if raw.get("schema") == SCHEMA_VERSION:
+        entries = raw.get("entries", {})
+        return entries if isinstance(entries, dict) else {}
+    # v1: a flat key -> {lowering, ...} map (no schema marker).  Keep the
+    # tuned lowering; block configs default until re-measured.
+    return {k: {"config": {}, **v}
+            for k, v in raw.items() if isinstance(v, dict)}
+
+
 def _load(path: str) -> dict:
-    if path not in _MEM:
-        try:
-            with open(path) as f:
-                _MEM[path] = json.load(f)
-        except (OSError, ValueError):
-            _MEM[path] = {}
-    return _MEM[path]
+    """Entries for ``path``, reloading whenever the file changed on disk
+    (concurrent tuner processes must see each other's merged saves)."""
+    mt = _mtime(path)
+    slot = _MEM.get(path)
+    if slot is None or slot["mtime"] != mt:
+        slot = {"mtime": mt, "entries": _read_file(path)}
+        _MEM[path] = slot
+    return slot["entries"]
 
 
-def _save(path: str, cache: dict) -> None:
+def _save(path: str, entries: dict) -> None:
     try:
         os.makedirs(os.path.dirname(path), exist_ok=True)
         # merge with what's on disk so concurrent tuners (other
         # processes tuning different nodes) don't lose each other's
         # entries to a read-modify-write race; our entries win ties
-        try:
-            with open(path) as f:
-                merged = {**json.load(f), **cache}
-        except (OSError, ValueError):
-            merged = dict(cache)
-        cache.update(merged)
+        merged = {**_read_file(path), **entries}
+        entries.update(merged)
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
         with os.fdopen(fd, "w") as f:
-            json.dump(merged, f, indent=1, sort_keys=True)
+            json.dump({"schema": SCHEMA_VERSION, "entries": merged}, f,
+                      indent=1, sort_keys=True)
         os.replace(tmp, path)    # atomic replace: readers never see partials
+        _MEM[path] = {"mtime": _mtime(path), "entries": merged}
     except OSError:
         pass                     # read-only FS: tuning stays in-memory
 
@@ -76,6 +137,71 @@ def node_key(node, in_avals: Sequence[jax.ShapeDtypeStruct],
     return f"{node.op}|{shapes}|{attrs}|{backend}"
 
 
+# ---------------------------------------------------------------------------
+# graph op -> kernel TuneSpace + measurement context
+# ---------------------------------------------------------------------------
+_OP_SPACE = {"fir": "fir", "unfold": "unfold", "matmul": "matmul",
+             "dft": "dft", "idft": "dft", "pfb": "pfb",
+             "pfb_frontend": "pfb", "window": "elementwise",
+             "ew_mul": "elementwise", "ew_add": "elementwise",
+             "abs2": "elementwise", "fused_ew": "elementwise"}
+
+
+def _rows(shape) -> int:
+    from repro.kernels import tune
+    return tune.leading_rows(shape)
+
+
+def tune_ctx(node, in_avals: Sequence[jax.ShapeDtypeStruct]) -> dict | None:
+    """The shape facts the node's TuneSpace needs (None: nothing tunable)."""
+    op = node.op
+    if op == "fir":
+        x, taps = in_avals[0], in_avals[1]
+        return {"k": int(taps.shape[-1]), "n": int(x.shape[-1]),
+                "rows": _rows(x.shape)}
+    if op == "unfold":
+        x = in_avals[0]
+        return {"j": int(node.attr["window"]), "n": int(x.shape[-1]),
+                "rows": _rows(x.shape)}
+    if op == "matmul":
+        x, y = in_avals[0], in_avals[1]
+        return {"m": _rows(x.shape), "n": int(y.shape[-1]),
+                "k": int(x.shape[-1])}
+    if op in ("dft", "idft"):
+        x = in_avals[0]
+        n = int(x.shape[-1])
+        return {"m": _rows(x.shape), "n": n, "k": n}
+    if op in ("pfb", "pfb_frontend"):
+        x, taps = in_avals[0], in_avals[1]
+        m, p = int(taps.shape[0]), int(taps.shape[1])
+        return {"m": m, "p": p, "t": int(x.shape[-1]) // p}
+    if op in ("window", "ew_mul", "ew_add"):
+        shape = np.broadcast_shapes(in_avals[0].shape, in_avals[1].shape)
+        return {"rows": _rows(shape), "cols": int(shape[-1]), "n_in": 2}
+    if op == "abs2":
+        x = in_avals[0]
+        return {"rows": _rows(x.shape), "cols": int(x.shape[-1]), "n_in": 2}
+    if op == "fused_ew":
+        x = in_avals[0]
+        steps = node.attr["steps"]
+        heads = 2 if (steps and steps[0][0] == "abs2") else 1
+        return {"rows": _rows(x.shape), "cols": int(x.shape[-1]),
+                "n_in": heads + len(in_avals) - 1}
+    return None
+
+
+def space_for(op: str):
+    """The TuneSpace tuning a graph op's kernel (None: not tunable)."""
+    name = _OP_SPACE.get(op)
+    if name is None:
+        return None
+    from repro.kernels import tune
+    return tune.space(name)
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
 def _dummy(aval: jax.ShapeDtypeStruct) -> jax.Array:
     rng = np.random.default_rng(0)
     x = rng.standard_normal(aval.shape).astype(np.float32)
@@ -85,54 +211,269 @@ def _dummy(aval: jax.ShapeDtypeStruct) -> jax.Array:
     return jnp.asarray(x, aval.dtype)
 
 
-def measure(fn, args, *, repeats: int = 3, warmup: int = 1) -> float:
-    """Median seconds per call of an already-jitted fn."""
+def measure(fn, args, *, repeats: int = 3, warmup: int = 1,
+            prune_above: float | None = None) -> float:
+    """Best-of-N seconds per call of an already-jitted fn (min, not
+    median: on a contended box spikes inflate the median one-sidedly,
+    and the fastest observed run is the least-noisy estimate).
+
+    ``prune_above``: early-pruning threshold — if the first timed repeat
+    is already slower than this (the incumbent's time), skip the
+    remaining repeats and return immediately; the candidate can't win.
+    """
     try:
         for _ in range(warmup):
             jax.block_until_ready(fn(*args))
         ts = []
-        for _ in range(repeats):
+        for i in range(repeats):
             t0 = time.perf_counter()
             jax.block_until_ready(fn(*args))
             ts.append(time.perf_counter() - t0)
-        return float(np.median(ts))
+            if i == 0 and prune_above is not None and ts[0] > prune_above:
+                _STATS["pruned"] += 1
+                break
+        return float(min(ts))
     except Exception:
         return float("inf")      # candidate doesn't lower for these shapes
 
 
-def pick_lowering(graph, node, avals: dict, *, backend: str = None,
-                  candidates: Sequence[str] | None = None,
-                  repeats: int = 3, path: str | None = None) -> str:
-    """Fastest lowering for ``node`` at its inferred shapes (cached)."""
+# a non-default config must beat the default by this margin in the
+# playoff to be selected — hysteresis against measurement noise (a
+# marginal "win" that is really noise would make tuned plans randomly
+# slower than default plans)
+PLAYOFF_MARGIN = 0.97
+
+
+def _playoff(fn_a, fn_b, args, *, repeats: int = 5) -> tuple[float, float]:
+    """Interleaved best-of-N head-to-head: alternating calls cancel the
+    machine drift that back-to-back scans are exposed to."""
+    best_a = best_b = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(*args))
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b(*args))
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a, best_b
+
+
+def _cfg_label(lowering: str, cfg: dict) -> str:
+    if not cfg:
+        return lowering
+    inner = ",".join(f"{k}={v}" for k, v in sorted(cfg.items()))
+    return f"{lowering}[{inner}]"
+
+
+# ---------------------------------------------------------------------------
+# the tuner
+# ---------------------------------------------------------------------------
+def pick(graph, node, avals: dict, *, backend: str = None,
+         lowerings: Sequence[str] | None = None,
+         candidates: Sequence[str] | None = None,
+         tune_configs: bool = True, repeats: int = 3,
+         path: str | None = None) -> tuple[str, dict]:
+    """Fastest (lowering, block_config) for ``node`` at its inferred
+    shapes (cached).
+
+    ``lowerings``/``candidates`` restrict the lowering search (e.g.
+    ``("pallas",)`` to tune only block configs for a fixed lowering);
+    ``tune_configs=False`` reverts to lowering-only v1 behavior.
+    Honors ``$TINA_AUTOTUNE``: off -> fixed defaults, cached -> cache
+    hit or defaults (never measures), on -> measure & persist.
+    """
     from repro.graph.plan import OPS, apply_node
 
     backend = backend or jax.default_backend()
     supported = OPS[node.op].lowerings
-    cands = [c for c in (candidates or supported) if c in supported]
-    if len(cands) <= 1:
-        return cands[0] if cands else "native"
+    restrict = lowerings if lowerings is not None else candidates
+    cands = [c for c in (restrict or supported) if c in supported]
+    if not cands:
+        return "native", {}
+
+    in_avals = [avals[i] for i in node.inputs]
+    ctx = tune_ctx(node, in_avals) if tune_configs else None
+    space = space_for(node.op) if ctx is not None else None
+    # fixed-defaults fallback — must stay inside the caller's candidate
+    # set (a restricted search must never answer with an excluded
+    # lowering)
+    default = ("native" if "native" in cands else cands[0], {})
+
+    # nothing to search: one lowering and no tunable pallas configs
+    pallas_tunable = space is not None and "pallas" in cands
+    if len(cands) == 1 and not (pallas_tunable and cands[0] == "pallas"):
+        return cands[0], {}
+
+    m = mode()
+    if m == "off":
+        return default
 
     path = path or cache_path()
     cache = _load(path)
-    in_avals = [avals[i] for i in node.inputs]
     key = node_key(node, in_avals, backend)
+    if restrict is not None and list(restrict) != list(supported):
+        # a restricted search answers a different question; don't let it
+        # collide with (or clobber) the full-auto winner for this node
+        key += f"|only={','.join(cands)}"
     hit = cache.get(key)
     if hit and hit.get("lowering") in cands:
-        _STATS["cache_hits"] += 1
-        return hit["lowering"]
+        cfg = dict(hit.get("config") or {})
+        if cfg and space is not None:
+            try:
+                space.check(cfg, ctx)
+            except ValueError:
+                # stale entry: the kernel's TuneSpace changed (renamed
+                # params, tightened predicate) since it was written —
+                # fall through to defaults / re-measurement
+                hit, cfg = None, {}
+        if hit:
+            _STATS["cache_hits"] += 1
+            return hit["lowering"], cfg
+    if m == "cached":
+        return default
 
     _STATS["measured"] += 1
     args = [_dummy(a) for a in in_avals]
-    times = {}
+    times: dict[str, float] = {}
+    results: list[tuple[float, str, dict]] = []
+    fns: dict[str, Callable] = {}    # label -> jitted fn (playoff reuse)
+    incumbent = float("inf")
+
+    def _jit(label, lw, cfg):
+        if label not in fns:
+            fns[label] = jax.jit(
+                lambda *a, _lw=lw, _cfg=cfg: apply_node(node, a, _lw, _cfg))
+        return fns[label]
+
+    default_cfg: dict = {}
     for lw in cands:
-        fn = jax.jit(lambda *a, _lw=lw: apply_node(node, a, _lw))
-        times[lw] = measure(fn, args, repeats=repeats)
-    best = min(times, key=times.get)
-    cache[key] = {"lowering": best, "backend": backend,
+        if lw == "pallas" and pallas_tunable:
+            # valid candidates only; when the space filters everything
+            # (predicate too conservative for this shape), still measure
+            # pallas with its trusted kernel defaults ({}) — dropping
+            # the lowering entirely would regress vs the v1 tuner
+            cfgs = space.configs(ctx) or ({},)
+            # the playoff's hysteresis anchor is the kernel default —
+            # only when it survived validation (configs() lists it
+            # first); otherwise there is no default to prefer
+            default_cfg = (dict(cfgs[0])
+                           if cfgs[0] and cfgs[0] == space.default(ctx)
+                           else {})
+        else:
+            cfgs = ({},)
+        for cfg in cfgs:
+            label = _cfg_label(lw, cfg)
+            t = measure(_jit(label, lw, cfg), args, repeats=repeats,
+                        prune_above=incumbent)
+            times[label] = t
+            results.append((t, lw, dict(cfg)))
+            incumbent = min(incumbent, t)
+
+    if not results:
+        # every candidate was filtered (e.g. a shape no tiling in the
+        # space fits): run the kernel defaults rather than failing
+        return default
+
+    # collapse the pallas configs to one survivor: the scan times
+    # candidates back-to-back, so machine drift can crown a marginal
+    # (noise) winner — re-measure the scan winner against the default
+    # tiling interleaved, and keep the default unless the winner is
+    # decisively faster
+    pallas_rs = [r for r in results if r[1] == "pallas"]
+    if default_cfg and pallas_rs:
+        t_scan, _, cfg_scan = min(pallas_rs, key=lambda r: r[0])
+        t_def_scan = next((r[0] for r in pallas_rs if r[2] == default_cfg),
+                          float("inf"))
+        if (cfg_scan != default_cfg and np.isfinite(t_scan)
+                and np.isfinite(t_def_scan)):
+            t_def, t_win = _playoff(
+                _jit(_cfg_label("pallas", default_cfg), "pallas",
+                     default_cfg),
+                _jit(_cfg_label("pallas", cfg_scan), "pallas", cfg_scan),
+                args, repeats=max(repeats, 5))
+            times["playoff:" + _cfg_label("pallas", default_cfg)] = t_def
+            times["playoff:" + _cfg_label("pallas", cfg_scan)] = t_win
+            survivor = ((t_win, "pallas", cfg_scan)
+                        if t_win < PLAYOFF_MARGIN * t_def
+                        else (t_def, "pallas", default_cfg))
+        else:
+            survivor = (t_scan, "pallas", cfg_scan)
+        results = [r for r in results if r[1] != "pallas"] + [survivor]
+
+    best_t, best_lw, best_cfg = min(results, key=lambda r: r[0])
+    best = (best_lw, best_cfg) if np.isfinite(best_t) else default
+    cache[key] = {"lowering": best[0], "config": best[1], "backend": backend,
                   "times_us": {k: round(v * 1e6, 1)
                                for k, v in times.items() if np.isfinite(v)}}
     _save(path, cache)
     return best
 
 
-__all__ = ["pick_lowering", "measure", "node_key", "cache_path", "stats"]
+def pick_lowering(graph, node, avals: dict, *, backend: str = None,
+                  candidates: Sequence[str] | None = None,
+                  repeats: int = 3, path: str | None = None) -> str:
+    """v1 compatibility wrapper: lowering only, default block configs."""
+    return pick(graph, node, avals, backend=backend, candidates=candidates,
+                tune_configs=False, repeats=repeats, path=path)[0]
+
+
+# ---------------------------------------------------------------------------
+# CLI: tune a built-in pipeline and verify the cache roundtrip
+# ---------------------------------------------------------------------------
+def main(argv=None):
+    import argparse
+
+    from repro.core.registry import PIPELINES, pipelines
+    from repro.graph import autotune as at   # the canonical module: under
+    # ``python -m repro.graph.autotune`` this file runs as __main__, but
+    # the planner talks to the instance imported by the package — use
+    # that one's stats/caches so the roundtrip check is real
+    from repro.graph import plan as plan_lib
+
+    ap = argparse.ArgumentParser(
+        description="Tune one built-in pipeline's lowerings + block "
+                    "configs; verify the on-disk cache roundtrip.")
+    ap.add_argument("--pipeline", default="spectrogram",
+                    choices=sorted(p.name for p in pipelines()))
+    ap.add_argument("--n", type=int, default=512)
+    ap.add_argument("--repeats", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    if at.mode() != "on":
+        print(f"[autotune] warning: TINA_AUTOTUNE={at.mode()} — nothing will "
+              "be measured")
+    spec = PIPELINES[args.pipeline]
+    g = spec.build()
+    n = spec.valid_len(args.n)
+    plan = plan_lib.compile(g, {g.inputs[0]: (n,)}, lowering="auto",
+                            autotune_kwargs={"repeats": args.repeats})
+    print(f"[autotune] {args.pipeline} @ n={n} "
+          f"(cache: {at.cache_path()}, mode: {at.mode()})")
+    for name, lw in plan.lowerings.items():
+        print(f"  {name:24s} -> {_cfg_label(lw, plan.configs.get(name, {}))}")
+    st = at.stats()
+    print(f"[autotune] measured={st['measured']} pruned={st['pruned']} "
+          f"cache_hits={st['cache_hits']}")
+
+    # roundtrip: a fresh in-process cache + a fresh plan cache must
+    # resolve every node from disk without re-measuring
+    at._MEM.clear()
+    plan_lib.clear_cache()
+    before = at.stats()["measured"]
+    plan2 = plan_lib.compile(g, {g.inputs[0]: (n,)}, lowering="auto",
+                             autotune_kwargs={"repeats": args.repeats})
+    after = at.stats()["measured"]
+    ok = (after == before and plan2.lowerings == plan.lowerings
+          and plan2.configs == plan.configs)
+    print(f"[autotune] cache roundtrip: "
+          f"{'OK' if ok else 'FAILED'} (re-measured {after - before})")
+    if at.mode() == "on" and not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()
+
+
+__all__ = ["pick", "pick_lowering", "measure", "node_key", "tune_ctx",
+           "space_for", "cache_path", "mode", "stats", "main"]

@@ -12,6 +12,14 @@ dict, or ``"auto"`` — the measurement-based autotuner of
 :mod:`repro.graph.autotune`, which times each candidate on the node's
 actual shapes and persists the winner to an on-disk cache.
 
+Block-config selection: ``block_configs=`` picks the Pallas block sizes
+each node's kernel runs with — ``None`` (kernel defaults), ``"auto"``
+(the autotuner searches each kernel's declared
+:class:`repro.kernels.tune.TuneSpace` on the node's actual shapes), or
+a ``{node: {param: int}}`` dict.  With ``lowering="auto"`` the tuner
+searches lowerings and configs *jointly*, so the plan is not just "the
+fastest lowering" but "the fastest tiling of the fastest lowering".
+
 Fusion: maximal runs of adjacent single-consumer elementwise nodes
 (``window``/``ew_mul``/``ew_add``/``abs2``/``scale``) collapse into one
 ``fused_ew`` node — executed as a single jnp expression (native), a
@@ -34,8 +42,10 @@ from repro.graph.graph import Graph, Node
 
 # ---------------------------------------------------------------------------
 # Op catalog: implementation + supported lowerings per op.
-# Implementations take (args, attrs, lowering) and must accept leading
-# batch dims the way repro.core.functions does.
+# Implementations take (args, attrs, lowering, block) and must accept
+# leading batch dims the way repro.core.functions does.  ``block`` is the
+# node's Pallas block-size config ({} / None = kernel defaults); non-
+# pallas lowerings ignore it.
 # ---------------------------------------------------------------------------
 def _kops():
     from repro.kernels import ops
@@ -43,20 +53,20 @@ def _kops():
 
 
 def _ew_binary(fn_conv, fn_native):
-    def impl(args, attrs, lowering):
+    def impl(args, attrs, lowering, block=None):
         x, y = args
         if lowering == "native" or x.ndim < 2:
             return fn_native(x, jnp.broadcast_to(y, x.shape))
         yb = jnp.broadcast_to(y, x.shape)
-        return fn_conv(x, yb, lowering=lowering)
+        return fn_conv(x, yb, lowering=lowering, block=block)
     return impl
 
 
-def _impl_abs2(args, attrs, lowering):
+def _impl_abs2(args, attrs, lowering, block=None):
     (x,) = args
     re, im = jnp.real(x), jnp.imag(x)
     if lowering == "pallas":
-        return _kops().abs2(x)
+        return _kops().abs2(x, **(block or {}))
     if lowering == "conv" and re.ndim >= 2:
         return functions.elementwise_add(
             functions.elementwise_mult(re, re, lowering="conv"),
@@ -65,11 +75,12 @@ def _impl_abs2(args, attrs, lowering):
     return re * re + im * im
 
 
-def _impl_fused(args, attrs, lowering):
+def _impl_fused(args, attrs, lowering, block=None):
     x, operands = args[0], tuple(args[1:])
     steps = attrs["steps"]
     if lowering == "pallas":
-        return _kops().fused_elementwise(x, operands, steps)
+        return _kops().fused_elementwise(x, operands, steps,
+                                         **(block or {}))
     k = 0
     acc = x
     for step in steps:
@@ -94,40 +105,43 @@ def _impl_fused(args, attrs, lowering):
 
 @dataclasses.dataclass(frozen=True)
 class OpSpec:
-    impl: Callable                 # (args, attrs, lowering) -> Array
+    impl: Callable                 # (args, attrs, lowering, block) -> Array
     lowerings: tuple[str, ...]     # lowerings with a distinct code path
     elementwise: bool = False      # eligible for the fusion pass
 
 
 OPS: dict[str, OpSpec] = {
     "unfold": OpSpec(
-        lambda a, at, lw: functions.unfold(a[0], at["window"], lowering=lw),
+        lambda a, at, lw, b=None: functions.unfold(
+            a[0], at["window"], lowering=lw, block=b),
         ("native", "conv", "pallas")),
     "fir": OpSpec(
-        lambda a, at, lw: functions.fir(a[0], a[1],
-                                        mode=at.get("mode", "valid"),
-                                        lowering=lw),
+        lambda a, at, lw, b=None: functions.fir(
+            a[0], a[1], mode=at.get("mode", "valid"), lowering=lw, block=b),
         ("native", "conv", "pallas")),
     "dft": OpSpec(
-        lambda a, at, lw: functions.dft(a[0], lowering=lw,
-                                        variant=at.get("variant", "4mult")),
+        lambda a, at, lw, b=None: functions.dft(
+            a[0], lowering=lw, variant=at.get("variant", "4mult"), block=b),
         ("native", "conv", "pallas")),
     "idft": OpSpec(
-        lambda a, at, lw: functions.idft(a[0], lowering=lw,
-                                         variant=at.get("variant", "4mult")),
+        lambda a, at, lw, b=None: functions.idft(
+            a[0], lowering=lw, variant=at.get("variant", "4mult"), block=b),
         ("native", "conv", "pallas")),
     "matmul": OpSpec(
-        lambda a, at, lw: functions.matmul(a[0], a[1], lowering=lw),
+        lambda a, at, lw, b=None: functions.matmul(a[0], a[1], lowering=lw,
+                                                   block=b),
         ("native", "conv", "pallas")),
     "summation": OpSpec(
-        lambda a, at, lw: functions.summation(a[0], lowering=lw),
+        lambda a, at, lw, b=None: functions.summation(a[0], lowering=lw),
         ("native",)),
     "pfb_frontend": OpSpec(
-        lambda a, at, lw: pfb.pfb_frontend(a[0], a[1], lowering=lw),
+        lambda a, at, lw, b=None: pfb.pfb_frontend(a[0], a[1], lowering=lw,
+                                                   block=b),
         ("native", "conv", "pallas")),
     "pfb": OpSpec(
-        lambda a, at, lw: pfb.pfb(a[0], a[1], lowering=lw,
-                                  variant=at.get("variant", "4mult")),
+        lambda a, at, lw, b=None: pfb.pfb(
+            a[0], a[1], lowering=lw, variant=at.get("variant", "4mult"),
+            block=b),
         ("native", "conv", "pallas")),
     # glue primitives ------------------------------------------------------
     "window": OpSpec(        # multiply by a const vector along the last axis
@@ -142,40 +156,43 @@ OPS: dict[str, OpSpec] = {
     "abs2": OpSpec(_impl_abs2, ("native", "conv", "pallas"),
                    elementwise=True),
     "scale": OpSpec(
-        lambda a, at, lw: a[0] * at["factor"],
+        lambda a, at, lw, b=None: a[0] * at["factor"],
         ("native",), elementwise=True),
     "downsample":  OpSpec(   # pure data movement: same code every lowering
-        lambda a, at, lw: a[0][..., :: at["factor"]],
+        lambda a, at, lw, b=None: a[0][..., :: at["factor"]],
         ("native",)),
     "fused_ew": OpSpec(_impl_fused, ("native", "conv", "pallas")),
 }
 
 # ``window``/``ew_mul`` resolve to pallas via the generic broadcast path;
 # map their pallas lowering onto the kernels.ops entry points explicitly.
-def _pallas_mul(args, attrs, lowering):
-    return _kops().elementwise_mult(args[0], args[1])
+def _pallas_mul(args, attrs, block=None):
+    return _kops().elementwise_mult(args[0], args[1], **(block or {}))
 
 
-def _pallas_add(args, attrs, lowering):
-    return _kops().elementwise_add(args[0], args[1])
+def _pallas_add(args, attrs, block=None):
+    return _kops().elementwise_add(args[0], args[1], **(block or {}))
 
 
-def apply_node(node: Node, args: Sequence[jax.Array], lowering: str):
+def apply_node(node: Node, args: Sequence[jax.Array], lowering: str,
+               block: dict | None = None):
     spec = OPS[node.op]
     if lowering not in spec.lowerings:
         lowering = "native"
     if lowering == "pallas" and node.op in ("window", "ew_mul"):
-        return _pallas_mul(args, node.attr, lowering)
+        return _pallas_mul(args, node.attr, block)
     if lowering == "pallas" and node.op == "ew_add":
-        return _pallas_add(args, node.attr, lowering)
-    return spec.impl(list(args), node.attr, lowering)
+        return _pallas_add(args, node.attr, block)
+    return spec.impl(list(args), node.attr, lowering, block)
 
 
 # ---------------------------------------------------------------------------
 # Execution + shape inference
 # ---------------------------------------------------------------------------
 def _execute(graph: Graph, inputs: dict[str, jax.Array],
-             lowerings: dict[str, str]):
+             lowerings: dict[str, str],
+             configs: dict[str, dict] | None = None):
+    configs = configs or {}
     env: dict[str, jax.Array] = {}
     for node in graph.topo():
         if node.op == "input":
@@ -185,7 +202,8 @@ def _execute(graph: Graph, inputs: dict[str, jax.Array],
         else:
             args = [env[i] for i in node.inputs]
             env[node.name] = apply_node(node, args,
-                                        lowerings.get(node.name, "native"))
+                                        lowerings.get(node.name, "native"),
+                                        configs.get(node.name))
     outs = tuple(env[o] for o in graph.outputs)
     return outs[0] if len(outs) == 1 else outs
 
@@ -309,6 +327,8 @@ class Plan:
     input_names: tuple[str, ...]
     lowerings: dict[str, str]     # node name -> chosen lowering
     key: tuple
+    configs: dict[str, dict] = dataclasses.field(default_factory=dict)
+    # node name -> chosen Pallas block config ({} = kernel defaults)
     _fn: Callable = None
     _traces: list = dataclasses.field(default_factory=list)
 
@@ -355,13 +375,19 @@ def _norm_specs(graph: Graph, shapes, dtype) -> dict[str, jax.ShapeDtypeStruct]:
 
 
 def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
-            lowering="native", fuse: bool = True,
+            lowering="native", block_configs=None, fuse: bool = True,
             autotune_kwargs: dict | None = None) -> Plan:
     """Compile ``graph`` for the given input shapes; memoized.
 
     ``lowering``: a lowering name for every node (unsupported nodes fall
     back to native), a {node: lowering} dict, or ``"auto"`` to let the
     measurement-based autotuner choose per node.
+
+    ``block_configs``: Pallas block sizes per node — ``None`` (kernel
+    defaults; with ``lowering="auto"`` the autotuner picks them jointly
+    with the lowering), ``"auto"`` (tune configs for whatever lowering
+    each node ends up with), or a ``{node: {param: int}}`` dict
+    (post-fusion node names; explicit entries win over tuned ones).
     """
     backend = backend or jax.default_backend()
     specs = _norm_specs(graph, shapes, dtype)
@@ -369,7 +395,22 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
                      for n in graph.inputs)
     low_key = (tuple(sorted(lowering.items()))
                if isinstance(lowering, dict) else lowering)
-    key = (graph.signature, spec_key, backend, low_key, fuse)
+    cfg_key = (tuple(sorted((n, tuple(sorted(c.items())))
+                            for n, c in block_configs.items()))
+               if isinstance(block_configs, dict) else block_configs)
+    tune_key = None
+    if lowering == "auto" or block_configs == "auto":
+        # tuned selections depend on the autotune mode, the cache file
+        # (path AND content — another process tuning entries must reach
+        # plans compiled after its write, hence the mtime), and the
+        # tuner kwargs (path/lowerings/repeats all change the answer);
+        # none of these may return a stale memoized plan
+        from repro.graph import autotune
+        path = (autotune_kwargs or {}).get("path") or autotune.cache_path()
+        tune_key = (autotune.mode(), path, autotune._mtime(path),
+                    repr(sorted((autotune_kwargs or {}).items())))
+    key = (graph.signature, spec_key, backend, low_key, cfg_key, fuse,
+           tune_key)
     plan = _CACHE.get(key)
     if plan is not None:
         _STATS["hits"] += 1
@@ -386,13 +427,15 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
         avals = infer(g, specs)
 
     lowerings: dict[str, str] = {}
+    configs: dict[str, dict] = {}
     compute = [n for n in g.topo() if n.op not in ("input", "const")]
     if lowering == "auto":
         from repro.graph import autotune
         for node in compute:
-            lowerings[node.name] = autotune.pick_lowering(
-                g, node, avals, backend=backend,
-                **(autotune_kwargs or {}))
+            lw, cfg = autotune.pick(g, node, avals, backend=backend,
+                                    **(autotune_kwargs or {}))
+            lowerings[node.name] = lw
+            configs[node.name] = cfg
     elif isinstance(lowering, dict):
         for node in compute:
             if node.name in lowering:
@@ -410,12 +453,32 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
             lowerings[node.name] = (
                 lowering if lowering in OPS[node.op].lowerings else "native")
 
+    if block_configs == "auto" and lowering != "auto":
+        # tune block configs for the already-chosen lowerings
+        from repro.graph import autotune
+        for node in compute:
+            _, cfg = autotune.pick(g, node, avals, backend=backend,
+                                   lowerings=(lowerings[node.name],),
+                                   **(autotune_kwargs or {}))
+            configs[node.name] = cfg
+    elif isinstance(block_configs, dict):
+        configs.update({n: dict(c) for n, c in block_configs.items()})
+
+    if tune_key is not None:
+        # tuning above may have written the cache file (bumping its
+        # mtime); store the plan under the post-save key so the next
+        # identical compile is the cache hit stream.py promises
+        from repro.graph import autotune
+        path = tune_key[1]
+        key = key[:-1] + ((tune_key[0], path, autotune._mtime(path),
+                           tune_key[3]),)
+
     plan = Plan(graph=g, input_names=tuple(g.inputs), lowerings=lowerings,
-                key=key)
+                key=key, configs=configs)
 
     def raw(*arrays):
         plan._traces.append(1)      # side effect fires only while tracing
-        return _execute(g, dict(zip(g.inputs, arrays)), lowerings)
+        return _execute(g, dict(zip(g.inputs, arrays)), lowerings, configs)
 
     plan._fn = jax.jit(raw)
     _CACHE[key] = plan

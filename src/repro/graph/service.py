@@ -31,8 +31,8 @@ from repro.graph.graph import Graph
 class PipelineService:
     def __init__(self, graph: Graph, signal_len: int, *,
                  batch_size: int = 8, dtype="float32",
-                 lowering="native", max_wait_ms: float = 2.0,
-                 **compile_opts):
+                 lowering="native", block_configs=None,
+                 max_wait_ms: float = 2.0, **compile_opts):
         if len(graph.inputs) != 1:
             raise ValueError("serving supports single-input graphs")
         if len(graph.outputs) != 1:
@@ -48,10 +48,13 @@ class PipelineService:
             queue.Queue()
         self._thread: threading.Thread | None = None
         self.stats = {"requests": 0, "batches": 0, "padded_slots": 0}
-        # compile the serving plan up front: requests never pay trace cost
+        # compile the serving plan up front: requests never pay trace
+        # cost — and with lowering="auto" (or block_configs="auto") the
+        # whole batch path runs the autotuner's tuned kernels
         self.plan = plan_lib.compile(
             graph, {graph.inputs[0]: (self.batch_size, self.signal_len)},
-            dtype=str(self.dtype), lowering=lowering, **compile_opts)
+            dtype=str(self.dtype), lowering=lowering,
+            block_configs=block_configs, **compile_opts)
 
     # -- request side -------------------------------------------------------
     def submit(self, x) -> Future:

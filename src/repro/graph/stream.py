@@ -20,7 +20,10 @@ concatenated chunked output equals offline output (valid-mode, no
 padding anywhere in the chain).
 
 Plans are compiled through :func:`repro.graph.plan.compile`, so pushes
-of equal size after warm-up are pure plan-cache hits.
+of equal size after warm-up are pure plan-cache hits.  ``compile_opts``
+pass through verbatim — ``lowering="auto"`` / ``block_configs="auto"``
+make every chunk run the autotuner's tuned kernels (tuned once per push
+shape, then cached).
 """
 from __future__ import annotations
 

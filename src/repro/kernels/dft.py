@@ -19,6 +19,28 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tune
+
+# ctx: {"m": rows, "n": out cols, "k": inner}.  Like matmul but every
+# buffer is doubled (real + imag inputs, F matrices, accumulators,
+# outputs), which halves the VMEM-feasible block volume.
+TUNE_SPACE = tune.register(tune.TuneSpace(
+    kernel="dft",
+    params=("bm", "bn", "bk"),
+    candidates=lambda ctx: (
+        {"bm": 128, "bn": 128, "bk": 128},
+        {"bm": 64, "bn": 128, "bk": 128},
+        {"bm": 256, "bn": 128, "bk": 128},
+        {"bm": 256, "bn": 256, "bk": 128},
+        {"bm": 512, "bn": 128, "bk": 128},
+    ),
+    valid=lambda cfg, ctx: (
+        min(cfg.values()) >= 1
+        and 8 * (cfg["bm"] * cfg["bk"] + cfg["bk"] * cfg["bn"]
+                 + 2 * cfg["bm"] * cfg["bn"]) <= tune.VMEM_BUDGET),
+    default=lambda ctx: {"bm": 128, "bn": 128, "bk": 128},
+))
+
 
 def _dft_kernel(xr_ref, xi_ref, fr_ref, fi_ref, zr_ref, zi_ref,
                 accr_ref, acci_ref, *, nk: int, variant: str):

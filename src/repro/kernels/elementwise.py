@@ -14,6 +14,31 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import tune
+
+# ctx: {"rows", "cols", "n_in": input refs incl. chain operands}.  The
+# wrapper pads both dims to block multiples, so the only hard constraint
+# is all n_in input blocks plus the output block fitting VMEM.
+TUNE_SPACE = tune.register(tune.TuneSpace(
+    kernel="elementwise",
+    params=("bm", "bn"),
+    candidates=lambda ctx: (
+        {"bm": 8, "bn": 512},
+        {"bm": 8, "bn": 1024},
+        {"bm": 64, "bn": 256},
+        {"bm": 128, "bn": 128},
+        {"bm": 256, "bn": 256},
+        {"bm": 256, "bn": 512},
+        {"bm": 512, "bn": 512},
+    ),
+    valid=lambda cfg, ctx: (
+        cfg["bm"] >= 1 and cfg["bn"] >= 1
+        and 4 * (ctx.get("n_in", 2) + 1) * cfg["bm"] * cfg["bn"]
+        <= tune.VMEM_BUDGET),
+    default=lambda ctx: {"bm": min(256, max(8, ctx["rows"])),
+                         "bn": min(256, max(128, ctx["cols"]))},
+))
+
 
 def _mult_kernel(x_ref, y_ref, o_ref):
     o_ref[...] = x_ref[...] * y_ref[...]

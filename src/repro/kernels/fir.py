@@ -20,6 +20,27 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import tune
+
+# ctx: {"k": taps, "n": signal length, "rows": flattened batch rows}.
+# Hard constraint is the halo: each output block's window must fit the
+# two adjacent input blocks in VMEM (K − 1 ≤ bn); the wrapper's padding
+# makes every other shape work.
+TUNE_SPACE = tune.register(tune.TuneSpace(
+    kernel="fir",
+    params=("bb", "bn"),
+    candidates=lambda ctx: tuple(
+        {"bb": bb, "bn": bn}
+        for bb in (8, 16) for bn in (256, 512, 1024, 2048)),
+    valid=lambda cfg, ctx: (
+        cfg["bb"] >= 1 and cfg["bn"] >= 1
+        and ctx["k"] - 1 <= cfg["bn"]
+        # x block + halo block + out block + f32 accumulator, all (bb, bn)
+        and 4 * (4 * cfg["bb"] * cfg["bn"] + ctx["k"]) <= tune.VMEM_BUDGET),
+    default=lambda ctx: {"bb": 8,
+                         "bn": max(512, tune.pow2_at_least(ctx["k"] - 1))},
+))
+
 
 def _fir_kernel(x_ref, xnext_ref, k_ref, o_ref, *, ktaps: int):
     xcat = jnp.concatenate([x_ref[...], xnext_ref[...]], axis=1)  # (bb, 2bn)

@@ -13,6 +13,31 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tune
+
+# ctx: {"m": rows, "n": cols, "k": inner}.  The wrapper pads every dim
+# up to its block multiple, so divisibility always holds after padding;
+# the hard constraint is the per-step working set fitting VMEM
+# (x, y, out blocks + the f32 accumulator scratch).
+TUNE_SPACE = tune.register(tune.TuneSpace(
+    kernel="matmul",
+    params=("bm", "bn", "bk"),
+    candidates=lambda ctx: (
+        {"bm": 128, "bn": 128, "bk": 128},
+        {"bm": 64, "bn": 128, "bk": 128},
+        {"bm": 256, "bn": 128, "bk": 128},
+        {"bm": 128, "bn": 256, "bk": 128},
+        {"bm": 128, "bn": 128, "bk": 256},
+        {"bm": 256, "bn": 256, "bk": 256},
+        {"bm": 512, "bn": 256, "bk": 128},
+    ),
+    valid=lambda cfg, ctx: (
+        min(cfg.values()) >= 1
+        and 4 * (cfg["bm"] * cfg["bk"] + cfg["bk"] * cfg["bn"]
+                 + 2 * cfg["bm"] * cfg["bn"]) <= tune.VMEM_BUDGET),
+    default=lambda ctx: {"bm": 128, "bn": 128, "bk": 128},
+))
+
 
 def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
     @pl.when(pl.program_id(2) == 0)

@@ -4,6 +4,15 @@ These are what :mod:`repro.core.functions` dispatches to for
 ``lowering="pallas"``: each wrapper handles batching, padding to block
 multiples, and interpret-mode selection (kernels execute via the Pallas
 interpreter off-TPU so CPU CI validates the TPU kernel bodies).
+
+Block sizes: every wrapper takes its kernel's block-size kwargs
+explicitly (``None`` = the kernel's :class:`~repro.kernels.tune.TuneSpace`
+default, which reproduces the historical hardcoded values).  Explicit
+configs are validated against the TuneSpace *here*, at the kernel
+boundary — an invalid config (e.g. FIR taps exceeding the halo block)
+raises ValueError instead of tripping a mid-trace kernel assert.  The
+graph autotuner (:mod:`repro.graph.autotune`) searches these same
+spaces and threads its winners back through these kwargs.
 """
 from __future__ import annotations
 
@@ -18,6 +27,7 @@ from repro.kernels import elementwise as ew_kernel
 from repro.kernels import fir as fir_kernel
 from repro.kernels import matmul as mm_kernel
 from repro.kernels import pfb as pfb_kernel
+from repro.kernels import tune
 from repro.kernels import unfold as unfold_kernel
 
 Array = jax.Array
@@ -34,45 +44,63 @@ def _pad_to(x: Array, mults: tuple[int, ...]) -> Array:
     return x
 
 
+def _resolve(space: tune.TuneSpace, ctx: dict, **explicit) -> dict:
+    """Fill missing block params from the space default and validate the
+    result (ValueError on an invalid explicit config)."""
+    return space.check(
+        {k: v for k, v in explicit.items() if v is not None}, ctx)
+
+
 # ---------------------------------------------------------------------------
-def matmul(x: Array, y: Array, *, bm: int = 128, bn: int = 128,
-           bk: int = 128) -> Array:
+def matmul(x: Array, y: Array, *, bm: int | None = None,
+           bn: int | None = None, bk: int | None = None) -> Array:
     """x (..., M, L) @ y (L, N) through the MXU-tiled kernel."""
     m, l = x.shape[-2], x.shape[-1]
     n = y.shape[1]
     batch = x.shape[:-2]
-    x2 = _pad_to(x.reshape((-1, l)), (bm, bk))
-    y2 = _pad_to(y, (bk, bn))
-    out = mm_kernel.matmul(x2, y2, bm=bm, bn=bn, bk=bk, interpret=_interpret())
-    rows = int(np.prod(batch)) * m if batch else m
+    rows = tune.leading_rows(x.shape)          # prod(batch) * m
+    cfg = _resolve(mm_kernel.TUNE_SPACE, {"m": rows, "n": n, "k": l},
+                   bm=bm, bn=bn, bk=bk)
+    x2 = _pad_to(x.reshape((-1, l)), (cfg["bm"], cfg["bk"]))
+    y2 = _pad_to(y, (cfg["bk"], cfg["bn"]))
+    out = mm_kernel.matmul(x2, y2, interpret=_interpret(), **cfg)
     return out[:rows, :n].reshape(batch + (m, n))
 
 
-def elementwise_mult(x: Array, y: Array) -> Array:
+def _ew_flat(shape, *, bm, bn, n_in):
+    ctx = {"rows": tune.leading_rows(shape), "cols": shape[-1],
+           "n_in": n_in}
+    return _resolve(ew_kernel.TUNE_SPACE, ctx, bm=bm, bn=bn)
+
+
+def elementwise_mult(x: Array, y: Array, *, bm: int | None = None,
+                     bn: int | None = None) -> Array:
     shape = jnp.broadcast_shapes(x.shape, y.shape)
+    cfg = _ew_flat(shape, bm=bm, bn=bn, n_in=2)
     xb = jnp.broadcast_to(x, shape).reshape((-1, shape[-1]))
     yb = jnp.broadcast_to(y, shape).reshape((-1, shape[-1]))
-    bm = min(256, max(8, xb.shape[0]))
-    bn = min(256, max(128, xb.shape[1]))
     out = ew_kernel.elementwise_mult(
-        _pad_to(xb, (bm, bn)), _pad_to(yb, (bm, bn)), bm=bm, bn=bn,
-        interpret=_interpret())
+        _pad_to(xb, (cfg["bm"], cfg["bn"])),
+        _pad_to(yb, (cfg["bm"], cfg["bn"])),
+        interpret=_interpret(), **cfg)
     return out[: xb.shape[0], : xb.shape[1]].reshape(shape)
 
 
-def elementwise_add(x: Array, y: Array) -> Array:
+def elementwise_add(x: Array, y: Array, *, bm: int | None = None,
+                    bn: int | None = None) -> Array:
     shape = jnp.broadcast_shapes(x.shape, y.shape)
+    cfg = _ew_flat(shape, bm=bm, bn=bn, n_in=2)
     xb = jnp.broadcast_to(x, shape).reshape((-1, shape[-1]))
     yb = jnp.broadcast_to(y, shape).reshape((-1, shape[-1]))
-    bm = min(256, max(8, xb.shape[0]))
-    bn = min(256, max(128, xb.shape[1]))
     out = ew_kernel.elementwise_add(
-        _pad_to(xb, (bm, bn)), _pad_to(yb, (bm, bn)), bm=bm, bn=bn,
-        interpret=_interpret())
+        _pad_to(xb, (cfg["bm"], cfg["bn"])),
+        _pad_to(yb, (cfg["bm"], cfg["bn"])),
+        interpret=_interpret(), **cfg)
     return out[: xb.shape[0], : xb.shape[1]].reshape(shape)
 
 
-def fused_elementwise(x: Array, operands: tuple, steps: tuple) -> Array:
+def fused_elementwise(x: Array, operands: tuple, steps: tuple, *,
+                      bm: int | None = None, bn: int | None = None) -> Array:
     """Fused elementwise chain — the planner's entry point (one kernel
     launch for a whole run of adjacent elementwise graph nodes).
 
@@ -96,34 +124,38 @@ def fused_elementwise(x: Array, operands: tuple, steps: tuple) -> Array:
     flat = [h.reshape((-1, shape[-1])) for h in heads]
     for o in operands:
         flat.append(jnp.broadcast_to(o, shape).reshape((-1, shape[-1])))
-    bm = min(256, max(8, flat[0].shape[0]))
-    bn = min(256, max(128, flat[0].shape[1]))
-    padded = tuple(_pad_to(f, (bm, bn)) for f in flat)
+    cfg = _ew_flat(shape, bm=bm, bn=bn, n_in=len(flat))
+    padded = tuple(_pad_to(f, (cfg["bm"], cfg["bn"])) for f in flat)
     out = ew_kernel.elementwise_chain(
-        padded, steps=tuple(rest), abs2_head=abs2_head, bm=bm, bn=bn,
-        interpret=_interpret())
+        padded, steps=tuple(rest), abs2_head=abs2_head,
+        interpret=_interpret(), **cfg)
     return out[: flat[0].shape[0], : flat[0].shape[1]].reshape(shape)
 
 
-def abs2(x: Array) -> Array:
+def abs2(x: Array, *, bm: int | None = None, bn: int | None = None) -> Array:
     """|x|² of a complex array in one fused kernel (re² + im²)."""
-    return fused_elementwise(x, (), (("abs2",),))
+    return fused_elementwise(x, (), (("abs2",),), bm=bm, bn=bn)
 
 
 def dft(xr: Array, xi: Array, fr: Array, fi: Array, *,
-        variant: str = "3mult", bm: int = 128, bn: int = 128,
-        bk: int = 128) -> tuple[Array, Array]:
+        variant: str = "3mult", bm: int | None = None,
+        bn: int | None = None, bk: int | None = None) -> tuple[Array, Array]:
     """(B, L) real/imag through the blocked complex-DFT kernel."""
     b, l = xr.shape
     n = fr.shape[1]
-    xr2, xi2 = _pad_to(xr, (bm, bk)), _pad_to(xi, (bm, bk))
-    fr2, fi2 = _pad_to(fr, (bk, bn)), _pad_to(fi, (bk, bn))
+    cfg = _resolve(dft_kernel.TUNE_SPACE, {"m": b, "n": n, "k": l},
+                   bm=bm, bn=bn, bk=bk)
+    xr2 = _pad_to(xr, (cfg["bm"], cfg["bk"]))
+    xi2 = _pad_to(xi, (cfg["bm"], cfg["bk"]))
+    fr2 = _pad_to(fr, (cfg["bk"], cfg["bn"]))
+    fi2 = _pad_to(fi, (cfg["bk"], cfg["bn"]))
     zr, zi = dft_kernel.dft(xr2, xi2, fr2, fi2, variant=variant,
-                            bm=bm, bn=bn, bk=bk, interpret=_interpret())
+                            interpret=_interpret(), **cfg)
     return zr[:b, :n], zi[:b, :n]
 
 
-def fir(x: Array, kern: Array, *, mode: str = "valid") -> Array:
+def fir(x: Array, kern: Array, *, mode: str = "valid",
+        bb: int | None = None, bn: int | None = None) -> Array:
     """Cross-correlation with ``kern`` (caller pre-flips for true FIR);
     mode via explicit padding then the 'valid' kernel."""
     k = kern.shape[0]
@@ -133,46 +165,52 @@ def fir(x: Array, kern: Array, *, mode: str = "valid") -> Array:
         x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(k - 1, k - 1)])
     batch = x.shape[:-1]
     n = x.shape[-1]
-    bn = max(512, 1 << (k - 1).bit_length())  # halo needs K-1 <= bn
-    x2 = _pad_to(x.reshape((-1, n)), (8, bn))
-    out = fir_kernel.fir_valid(x2, kern, bb=8, bn=bn, interpret=_interpret())
-    rows = int(np.prod(batch)) if batch else 1
+    cfg = _resolve(fir_kernel.TUNE_SPACE,
+                   {"k": k, "n": n, "rows": tune.leading_rows(x.shape)},
+                   bb=bb, bn=bn)
+    x2 = _pad_to(x.reshape((-1, n)), (cfg["bb"], cfg["bn"]))
+    out = fir_kernel.fir_valid(x2, kern, interpret=_interpret(), **cfg)
+    rows = tune.leading_rows(x.shape)
     # padded columns shift the valid length; slice to the true one
     return out[:rows, : n - k + 1].reshape(batch + (n - k + 1,))
 
 
-def unfold(x: Array, window: int) -> Array:
+def unfold(x: Array, window: int, *, bb: int | None = None,
+           bt: int | None = None) -> Array:
     batch = x.shape[:-1]
     n = x.shape[-1]
-    bt = max(512, 1 << (window - 1).bit_length())
-    x2 = _pad_to(x.reshape((-1, n)), (8, bt))
-    out = unfold_kernel.unfold(x2, window, bb=8, bt=bt,
-                               interpret=_interpret())
-    rows = int(np.prod(batch)) if batch else 1
+    cfg = _resolve(unfold_kernel.TUNE_SPACE,
+                   {"j": window, "n": n, "rows": tune.leading_rows(x.shape)},
+                   bb=bb, bt=bt)
+    x2 = _pad_to(x.reshape((-1, n)), (cfg["bb"], cfg["bt"]))
+    out = unfold_kernel.unfold(x2, window, interpret=_interpret(), **cfg)
+    rows = tune.leading_rows(x.shape)
     return out[:rows, : n - window + 1].reshape(
         batch + (n - window + 1, window))
 
 
-def pfb_fir(frames: Array, taps: Array) -> Array:
+def pfb_fir(frames: Array, taps: Array, *, bt: int | None = None,
+            bn: int | None = None) -> Array:
     """Frontend only: (..., T, P), (M, P) -> (..., T − M + 1, P).
     Runs the fused kernel with the identity 'DFT' (F = I) so the FIR
     path is exercised; cheaper than a separate kernel and still fused."""
     m, p = taps.shape
     batch = frames.shape[:-2]
     t = frames.shape[-2]
+    cfg = _resolve(pfb_kernel.TUNE_SPACE, {"m": m, "p": p, "t": t},
+                   bt=bt, bn=bn)
     f3 = frames.reshape((-1, t, p))
-    bt = min(256, t)
-    f3 = jnp.pad(f3, ((0, 0), (0, (-t) % bt), (0, 0)))
+    f3 = jnp.pad(f3, ((0, 0), (0, (-t) % cfg["bt"]), (0, 0)))
     eye = jnp.eye(p, dtype=jnp.float32)
     zeros = jnp.zeros((p, p), jnp.float32)
-    bn = min(128, p)
     zr, _ = pfb_kernel.pfb_fused(f3, taps[::-1].astype(f3.dtype), eye, zeros,
-                                 bt=bt, bn=bn, interpret=_interpret())
+                                 interpret=_interpret(), **cfg)
     tout = t - m + 1
     return zr[:, :tout].astype(frames.dtype).reshape(batch + (tout, p))
 
 
-def pfb(x: Array, taps: Array, *, variant: str = "4mult") -> Array:
+def pfb(x: Array, taps: Array, *, variant: str = "4mult",
+        bt: int | None = None, bn: int | None = None) -> Array:
     """Full fused PFB: (..., n_samples), (M, P) -> complex
     (..., n_frames − M + 1, P)."""
     m, p = taps.shape
@@ -181,16 +219,16 @@ def pfb(x: Array, taps: Array, *, variant: str = "4mult") -> Array:
     batch = x.shape[:-1]
     frames = x.reshape((-1, x.shape[-1] // p, p))
     t = frames.shape[1]
-    bt = min(256, t)
-    frames = jnp.pad(frames, ((0, 0), (0, (-t) % bt), (0, 0)))
+    cfg = _resolve(pfb_kernel.TUNE_SPACE, {"m": m, "p": p, "t": t},
+                   bt=bt, bn=bn)
+    frames = jnp.pad(frames, ((0, 0), (0, (-t) % cfg["bt"]), (0, 0)))
     lk = np.outer(np.arange(p), np.arange(p))
     f = np.exp(-2j * np.pi * lk / p)
     fr = jnp.asarray(f.real, jnp.float32)
     fi = jnp.asarray(f.imag, jnp.float32)
-    bn = min(128, p)
     zr, zi = pfb_kernel.pfb_fused(frames, taps[::-1].astype(frames.dtype),
-                                  fr, fi, variant=variant, bt=bt, bn=bn,
-                                  interpret=_interpret())
+                                  fr, fi, variant=variant,
+                                  interpret=_interpret(), **cfg)
     tout = t - m + 1
     z = zr[:, :tout] + 1j * zi[:, :tout]
     return z.reshape(batch + (tout, p))

@@ -23,6 +23,38 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import tune
+
+# ctx: {"m": taps per branch, "p": branches, "t": frames}.  Hard
+# constraints: the frame-axis halo (M − 1 ≤ bt) and the DFT column
+# blocking dividing P (the wrapper pads the frame axis but not the
+# Fourier matrix).  Working set: two (bt, P) frame views, the taps, two
+# (P, bn) F-matrix blocks, the (bt, P) f32 subfilter accumulator and
+# two (bt, bn) outputs.
+TUNE_SPACE = tune.register(tune.TuneSpace(
+    kernel="pfb",
+    params=("bt", "bn"),
+    candidates=lambda ctx: tuple(
+        {"bt": bt, "bn": bn}
+        for bt in (64, 128, 256, 512)
+        for bn in (8, 16, 32, 64, 128, 256)
+        if bn <= ctx["p"] and ctx["p"] % bn == 0),
+    valid=lambda cfg, ctx: (
+        cfg["bt"] >= 1 and cfg["bn"] >= 1
+        and ctx["m"] - 1 <= cfg["bt"]
+        and ctx["p"] % cfg["bn"] == 0
+        and 4 * (3 * cfg["bt"] * ctx["p"] + ctx["m"] * ctx["p"]
+                 + 2 * ctx["p"] * cfg["bn"]
+                 + 2 * cfg["bt"] * cfg["bn"]) <= tune.VMEM_BUDGET),
+    # bn: the largest divisor of P that is <= 128 — for P <= 128 that is
+    # P itself (the historical min(128, P) default); for larger P it is
+    # the biggest column block the n % bn == 0 constraint allows
+    default=lambda ctx: {
+        "bt": min(256, ctx["t"]),
+        "bn": max(d for d in range(1, min(128, ctx["p"]) + 1)
+                  if ctx["p"] % d == 0)},
+))
+
 
 def _pfb_kernel(x_ref, xnext_ref, taps_ref, fr_ref, fi_ref,
                 zr_ref, zi_ref, *, m: int, variant: str):

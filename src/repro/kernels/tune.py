@@ -1,0 +1,109 @@
+"""Per-kernel block-size tuning spaces.
+
+Every Pallas kernel in this package hardcodes TPU-friendly default block
+sizes, but the *fastest* tiling depends on the problem shape (GPTPU-style
+frameworks tune exactly this).  A :class:`TuneSpace` is the kernel's own
+declaration of what is tunable:
+
+  * ``params``      the block-size kwarg names the kernel accepts
+  * ``candidates``  shape-aware candidate configs (TPU-aligned: lane
+                    dims in multiples of 128, sublane dims of 8)
+  * ``valid``       the kernel's HARD constraints (what its asserts
+                    would reject — halo fits, divisibility, VMEM) so the
+                    autotuner filters instead of crashing
+  * ``default``     the config the public wrapper uses when none is
+                    given (reproduces the pre-tuning behavior exactly)
+
+Spaces are declared next to each kernel (``fir.TUNE_SPACE``, …) and
+registered here; :func:`space` is the lookup the ops wrappers and the
+graph autotuner (:mod:`repro.graph.autotune`) share.  ``ctx`` dicts
+carry the shape facts a space needs (tap count, rows, branch count —
+see each kernel's declaration).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+# Budget for one grid step's working set: half a TPU core's ~16 MB VMEM,
+# leaving headroom for double buffering (pallas_guide.md).
+VMEM_BUDGET = 8 * 2 ** 20
+LANE = 128      # last-dim tile multiple (f32)
+SUBLANE = 8     # second-to-last-dim tile multiple (f32)
+
+
+def pow2_at_least(v: int) -> int:
+    """Smallest power of two >= v (>= 1)."""
+    return 1 << max(0, int(v) - 1).bit_length()
+
+
+def leading_rows(shape) -> int:
+    """Flattened row count of an array viewed as 2-D: product of every
+    dim but the last (1 for 0-D/1-D) — the ``rows`` every ctx uses."""
+    out = 1
+    for d in shape[:-1]:
+        out *= int(d)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneSpace:
+    kernel: str                                  # registry key
+    params: tuple[str, ...]                      # tunable kwarg names
+    candidates: Callable[[dict], tuple]          # ctx -> candidate cfgs
+    valid: Callable[[dict, dict], bool]          # (cfg, ctx) -> ok?
+    default: Callable[[dict], dict]              # ctx -> default cfg
+
+    def check(self, cfg: dict, ctx: dict) -> dict:
+        """Merge ``cfg`` over the defaults and validate — the kernel
+        boundary's input check.  Raises ValueError (not a mid-trace
+        kernel assert) on an invalid config.
+
+        An *empty* cfg is trusted without validation: the default is
+        the wrapper's historical behavior and must keep working even
+        for shapes the (TPU-feasibility-minded) predicate is too
+        conservative about — only explicit overrides are gated."""
+        unknown = set(cfg) - set(self.params)
+        if unknown:
+            raise ValueError(
+                f"{self.kernel}: unknown block param(s) {sorted(unknown)}; "
+                f"tunable: {list(self.params)}")
+        full = {**self.default(ctx), **{k: int(v) for k, v in cfg.items()}}
+        if cfg and not self.valid(full, ctx):
+            raise ValueError(
+                f"{self.kernel}: invalid block config {full} for {ctx}")
+        return full
+
+    def configs(self, ctx: dict) -> tuple[dict, ...]:
+        """Valid candidate configs for ``ctx`` — default first, then the
+        declared candidates, deduplicated; invalid ones are filtered out
+        here so the autotuner never even measures them."""
+        out, seen = [], set()
+        for cfg in (self.default(ctx), *self.candidates(ctx)):
+            key = tuple(sorted(cfg.items()))
+            if key in seen:
+                continue
+            seen.add(key)
+            if self.valid(cfg, ctx):
+                out.append(dict(cfg))
+        return tuple(out)
+
+
+SPACES: dict[str, TuneSpace] = {}
+
+
+def register(sp: TuneSpace) -> TuneSpace:
+    SPACES[sp.kernel] = sp
+    return sp
+
+
+def space(kernel: str) -> TuneSpace | None:
+    """Look up a kernel's TuneSpace (importing the kernel modules so
+    their declarations have run)."""
+    from repro.kernels import (dft, elementwise, fir, matmul,  # noqa: F401
+                               pfb, unfold)
+    return SPACES.get(kernel)
+
+
+__all__ = ["TuneSpace", "SPACES", "register", "space", "pow2_at_least",
+           "VMEM_BUDGET", "LANE", "SUBLANE"]

@@ -15,6 +15,24 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import tune
+
+# ctx: {"j": window, "n": signal length, "rows"}.  Halo: J − 1 ≤ bt;
+# VMEM: two (bb, bt) input views plus the (bb, bt, J) window tile —
+# the output tile dominates, so large windows force small bt.
+TUNE_SPACE = tune.register(tune.TuneSpace(
+    kernel="unfold",
+    params=("bb", "bt"),
+    candidates=lambda ctx: tuple(
+        {"bb": bb, "bt": bt} for bb in (8,) for bt in (256, 512, 1024, 2048)),
+    valid=lambda cfg, ctx: (
+        cfg["bb"] >= 1 and cfg["bt"] >= 1
+        and ctx["j"] - 1 <= cfg["bt"]
+        and 4 * cfg["bb"] * cfg["bt"] * (ctx["j"] + 2) <= tune.VMEM_BUDGET),
+    default=lambda ctx: {"bb": 8,
+                         "bt": max(512, tune.pow2_at_least(ctx["j"] - 1))},
+))
+
 
 def _unfold_kernel(x_ref, xnext_ref, o_ref, *, window: int):
     bb, bt, _ = o_ref.shape

@@ -30,6 +30,10 @@ def main(argv=None):
     ap.add_argument("--signal-len", type=int, default=4096)
     ap.add_argument("--lowering", default="native",
                     choices=["native", "conv", "pallas", "auto"])
+    ap.add_argument("--tune-blocks", action="store_true",
+                    help="autotune Pallas block sizes for the chosen "
+                         "lowering (lowering=auto already tunes them "
+                         "jointly)")
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--check", type=int, default=4,
                     help="responses to validate against the numpy oracle")
@@ -46,10 +50,13 @@ def main(argv=None):
     t0 = time.perf_counter()
     svc = PipelineService(g, signal_len=n, batch_size=args.batch,
                           lowering=args.lowering,
+                          block_configs="auto" if args.tune_blocks else None,
                           max_wait_ms=args.max_wait_ms)
     t_compile = time.perf_counter() - t0
+    tuned = {k: v for k, v in svc.plan.configs.items() if v}
     print(f"[dsp_serve] {args.pipeline}: plan compiled in {t_compile:.2f}s "
-          f"(lowerings: {svc.plan.lowerings})")
+          f"(lowerings: {svc.plan.lowerings}"
+          + (f", block configs: {tuned}" if tuned else "") + ")")
 
     signals = [rng.standard_normal(n).astype(np.float32)
                for _ in range(args.requests)]

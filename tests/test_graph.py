@@ -171,6 +171,7 @@ def test_streaming_incremental_pushes():
 def test_autotune_persists_and_reuses(tmp_path, monkeypatch):
     cache = tmp_path / "autotune.json"
     monkeypatch.setenv("TINA_AUTOTUNE_CACHE", str(cache))
+    monkeypatch.setenv("TINA_AUTOTUNE", "on")
     autotune._MEM.clear()
     spec, x = _args("fir_decimate", 256)
     g = spec.build()
@@ -297,11 +298,15 @@ def test_unknown_op_raises_cleanly():
 
 
 def test_autotune_save_merges_concurrent_entries(tmp_path, monkeypatch):
-    """_save must not clobber entries another process persisted."""
+    """_save must not clobber entries another process persisted — and a
+    v1-format file on disk must survive the merge (migrated to v2)."""
     import json
     cache_file = tmp_path / "tune.json"
     cache_file.write_text(json.dumps({"other_proc_key": {"lowering": "conv"}}))
     autotune._MEM.clear()
-    autotune._save(str(cache_file), {"my_key": {"lowering": "native"}})
-    merged = json.loads(cache_file.read_text())
-    assert set(merged) == {"other_proc_key", "my_key"}
+    autotune._save(str(cache_file), {"my_key": {"lowering": "native",
+                                                "config": {"bn": 512}}})
+    raw = json.loads(cache_file.read_text())
+    assert raw["schema"] == autotune.SCHEMA_VERSION
+    assert set(raw["entries"]) == {"other_proc_key", "my_key"}
+    assert raw["entries"]["other_proc_key"]["lowering"] == "conv"
