@@ -6,6 +6,7 @@ from __future__ import annotations
 import json
 import os
 import subprocess
+import tempfile
 import time
 from typing import Callable
 
@@ -99,13 +100,41 @@ def _run_record(results, **meta) -> dict:
     }
 
 
+def _atomic_dump(path: str, payload) -> None:
+    """Serialize to a temp file in the target dir, then ``os.replace``:
+    a crash mid-write leaves the previous file intact (truncate-then-dump
+    would destroy the accumulated perf trajectory), and readers never see
+    a partial JSON."""
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        # mkstemp creates 0600; keep the target's mode (or a fresh
+        # umask-based one) so the replaced file stays world-readable
+        try:
+            mode = os.stat(path).st_mode & 0o777
+        except OSError:
+            um = os.umask(0)
+            os.umask(um)
+            mode = 0o666 & ~um
+        os.chmod(tmp, mode)
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=False)
+            f.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
 def write_bench_json(path: str, results, **meta) -> str:
     """Persist benchmark results as BENCH_*.json (single run, overwrite).
     ``results`` is a list of flat dicts; meta (backend, sizes, ...) is
     recorded alongside."""
-    with open(path, "w") as f:
-        json.dump(_run_record(results, **meta), f, indent=1, sort_keys=False)
-        f.write("\n")
+    _atomic_dump(path, _run_record(results, **meta))
     return os.path.abspath(path)
 
 
@@ -129,7 +158,5 @@ def append_bench_json(path: str, results, **meta) -> str:
                    "runs": [existing, run]}
     else:
         payload = {"figure": meta.get("figure"), "runs": [run]}
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=False)
-        f.write("\n")
+    _atomic_dump(path, payload)
     return os.path.abspath(path)

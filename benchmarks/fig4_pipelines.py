@@ -95,11 +95,20 @@ def tuned_equals_default(plan, shapes) -> bool:
 
 
 def run(sizes=(2 ** 13, 2 ** 15), repeats=10, autotune_col=False,
-        tune_repeats=3, tuned=True):
+        tune_repeats=3, tuned=True, sharded="auto"):
     """``tuned=False`` skips the pallas def/tuned columns (they compile,
     block-tune, and time all-Pallas plans — minutes of interpret-mode
-    work on CPU, and writes to the autotune cache)."""
+    work on CPU, and writes to the autotune cache).
+
+    ``sharded``: "auto" adds a sharded-vs-single-device throughput
+    comparison when this process sees more than one device (run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU);
+    "on"/"off" force it.  The comparison runs a batch of one signal per
+    device through the same plan compiled single-device and mesh-sharded
+    (batch axis split across all devices)."""
     _load_pipelines()
+    n_dev = len(jax.devices())
+    do_sharded = sharded == "on" or (sharded == "auto" and n_dev > 1)
     if tuned and autotune.mode() != "on":
         print(f"[fig4] warning: TINA_AUTOTUNE={autotune.mode()} — the "
               "tuned-plan column will reuse cached/default configs")
@@ -153,6 +162,26 @@ def run(sizes=(2 ** 13, 2 ** 15), repeats=10, autotune_col=False,
                            auto_lowerings=pa.lowerings,
                            auto_configs={k: v for k, v in
                                          pa.configs.items() if v})
+
+            if do_sharded:
+                # one signal per device: the same batch through the plan
+                # compiled single-device vs batch-sharded over the mesh
+                xb = jnp.asarray(np.stack(
+                    [spec.make_args(rng, n)[0] for _ in range(n_dev)]))
+                bshapes = {g.inputs[0]: xb.shape}
+                p_single = graph_compile(g, bshapes)
+                p_shard = graph_compile(g, bshapes, shard="batch")
+                xb_sharded = p_shard.shard_inputs(xb)
+                t_single, t_shard = timeit_group(
+                    [lambda: p_single(xb), lambda: p_shard(xb_sharded)],
+                    repeats=repeats)
+                row += [n_dev, us(t_single), us(t_shard),
+                        speedup(t_single, t_shard)]
+                rec.update(
+                    batch=n_dev, n_devices=n_dev,
+                    mesh={a: int(s) for a, s in p_shard.mesh.shape.items()},
+                    t_batch_single_s=t_single, t_batch_sharded_s=t_shard,
+                    speedup_sharded_vs_single=t_single / t_shard)
             rows.append(row)
             records.append(rec)
 
@@ -161,6 +190,9 @@ def run(sizes=(2 ** 13, 2 ** 15), repeats=10, autotune_col=False,
         header += ["pallas_def_us", "pallas_tuned_us", "tuned_vs_def"]
     if autotune_col:
         header += ["auto_us", "auto_vs_per_op"]
+    if do_sharded:
+        header += ["batch", "batch_single_us", "sharded_us",
+                   "sharded_vs_single"]
     return fmt_table("Fig.4: compiled plans vs per-op dispatch; "
                      "block-tuned vs fixed-default plans",
                      header, rows), records
@@ -175,13 +207,18 @@ def main(argv=None):
                     help="per-candidate repeats inside the autotuner")
     ap.add_argument("--autotune", action="store_true",
                     help="add a jointly-autotuned (lowering+config) column")
+    ap.add_argument("--sharded", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="sharded-vs-single-device throughput columns "
+                         "(auto: when >1 device is visible)")
     ap.add_argument("--out", default="BENCH_pipelines.json")
     args = ap.parse_args(argv)
     table, records = run(tuple(args.sizes), args.repeats, args.autotune,
-                         args.tune_repeats)
+                         args.tune_repeats, sharded=args.sharded)
     print(table)
     path = append_bench_json(args.out, records, figure="fig4_pipelines",
-                             sizes=list(args.sizes), repeats=args.repeats)
+                             sizes=list(args.sizes), repeats=args.repeats,
+                             n_devices=len(jax.devices()))
     print(f"\n[fig4] appended run to {path}")
 
 

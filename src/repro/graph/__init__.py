@@ -16,6 +16,8 @@ Quick use::
     plan = graph.compile(g, {"x": (16384,)})      # cached on 2nd call
     power = plan(x)
     chunked = graph.stream_execute(g, x, chunk_len=4096)  # == power
+    sharded = graph.compile(g, {"x": (64, 16384)}, shard="batch")
+    # batch axis split across local devices; == unsharded numerics
 """
 from repro.graph import autotune, pipelines, plan, service, stream
 from repro.graph.graph import Graph, Node

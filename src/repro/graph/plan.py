@@ -25,6 +25,18 @@ Fusion: maximal runs of adjacent single-consumer elementwise nodes
 ``fused_ew`` node — executed as a single jnp expression (native), a
 sequential paper-faithful chain (conv), or ONE Pallas kernel launch via
 :func:`repro.kernels.ops.fused_elementwise` (pallas).
+
+Mesh sharding: ``compile(..., mesh=...)`` (or ``shard="batch"``) places
+the plan's batch axis — the leading dim of every graph input — across a
+device mesh built via :mod:`repro.launch.mesh`.  The plan body runs
+under ``shard_map``, so each device executes the *per-shard* problem:
+shape inference, fusion, and the autotuner all see per-shard shapes
+(tuned block configs fit the per-device workload, not the global one).
+Outputs are batch-sharded on the same axis.  Every batch row is
+computed independently, so a sharded plan is bit-identical to the
+single-device plan compiled at the per-shard shape (and allclose to the
+global-batch plan — XLA's contraction tiling can vary with batch size,
+so *global* bitwise equality is not something the hardware guarantees).
 """
 from __future__ import annotations
 
@@ -35,6 +47,9 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
 
 from repro.core import functions, pfb
 from repro.graph.graph import Graph, Node
@@ -329,6 +344,9 @@ class Plan:
     key: tuple
     configs: dict[str, dict] = dataclasses.field(default_factory=dict)
     # node name -> chosen Pallas block config ({} = kernel defaults)
+    mesh: Mesh | None = None      # device mesh of a sharded plan
+    batch_axis: str | None = None  # mesh axis carrying the batch dim
+    input_shardings: tuple = ()   # NamedSharding per input (sharded plans)
     _fn: Callable = None
     _traces: list = dataclasses.field(default_factory=list)
 
@@ -336,6 +354,15 @@ class Plan:
     def trace_count(self) -> int:
         """Times jax actually retraced the plan body (1 == fully cached)."""
         return len(self._traces)
+
+    def shard_inputs(self, *arrays):
+        """Place inputs onto the plan's mesh (batch-sharded) ahead of the
+        call, so execution doesn't pay the reshard; no-op when unsharded."""
+        if not self.input_shardings:
+            return arrays if len(arrays) > 1 else arrays[0]
+        out = tuple(jax.device_put(a, s)
+                    for a, s in zip(arrays, self.input_shardings))
+        return out if len(out) > 1 else out[0]
 
     def __call__(self, *args, **kwargs):
         arrays = list(args)
@@ -357,6 +384,35 @@ def clear_cache() -> None:
     _STATS.update(hits=0, misses=0)
 
 
+def _norm_mesh(mesh, shard) -> tuple[Mesh | None, str | None]:
+    """Normalize ``(mesh=, shard=)`` into (Mesh, batch-axis name).
+
+    ``mesh`` may be a Mesh, a device count (a 1-D batch mesh over that
+    many local devices via :func:`repro.launch.mesh.make_batch_mesh`),
+    or None; ``shard="batch"`` alone shards over every local device.
+    The batch axis is ``"batch"`` when the mesh has one, else ``"data"``,
+    else the mesh's first axis (other axes replicate the computation).
+    """
+    if mesh is None and shard is None:
+        return None, None
+    if shard not in (None, "batch"):
+        raise ValueError(
+            f"shard={shard!r}: only 'batch' (data-parallel over the "
+            "leading input dim) is supported")
+    from repro.launch.mesh import make_batch_mesh
+    if mesh is None:
+        mesh = make_batch_mesh()
+    elif isinstance(mesh, int):
+        mesh = make_batch_mesh(mesh)
+    elif not isinstance(mesh, Mesh):
+        raise TypeError(f"mesh= expects a jax Mesh, an int device count, "
+                        f"or None; got {type(mesh).__name__}")
+    for axis in ("batch", "data"):
+        if axis in mesh.axis_names:
+            return mesh, axis
+    return mesh, mesh.axis_names[0]
+
+
 def _norm_specs(graph: Graph, shapes, dtype) -> dict[str, jax.ShapeDtypeStruct]:
     """shapes: {input: shape | (shape, dtype) | ShapeDtypeStruct}."""
     if not isinstance(shapes, dict):
@@ -376,6 +432,7 @@ def _norm_specs(graph: Graph, shapes, dtype) -> dict[str, jax.ShapeDtypeStruct]:
 
 def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
             lowering="native", block_configs=None, fuse: bool = True,
+            mesh=None, shard: str | None = None,
             autotune_kwargs: dict | None = None) -> Plan:
     """Compile ``graph`` for the given input shapes; memoized.
 
@@ -388,9 +445,36 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
     with the lowering), ``"auto"`` (tune configs for whatever lowering
     each node ends up with), or a ``{node: {param: int}}`` dict
     (post-fusion node names; explicit entries win over tuned ones).
+
+    ``mesh`` / ``shard``: ``mesh=`` (a Mesh or a device count) shards
+    the batch axis — the leading dim of every input — across the mesh's
+    batch axis via ``shard_map``; ``shard="batch"`` alone shards over
+    all local devices.  Every input needs ``ndim >= 2`` with a batch dim
+    divisible by the shard count.  Shape inference, fusion, and the
+    autotuner run on the *per-shard* shapes, so tuned block configs fit
+    the per-device problem; the plan cache is keyed on the mesh topology
+    (axes, sizes, device ids).
     """
     backend = backend or jax.default_backend()
     specs = _norm_specs(graph, shapes, dtype)
+    mesh, batch_axis = _norm_mesh(mesh, shard)
+    mesh_key = None
+    if mesh is not None:
+        n_shards = int(mesh.shape[batch_axis])
+        for name in graph.inputs:
+            s = specs[name]
+            if len(s.shape) < 2:
+                raise ValueError(
+                    f"sharded plans need a batch axis: input {name!r} has "
+                    f"shape {s.shape}; provide (batch, ...) inputs")
+            if s.shape[0] % n_shards != 0:
+                raise ValueError(
+                    f"batch divisibility: input {name!r} batch dim "
+                    f"{s.shape[0]} is not divisible by the mesh's "
+                    f"{batch_axis!r} axis ({n_shards} shards)")
+        mesh_key = (batch_axis,
+                    tuple((a, int(mesh.shape[a])) for a in mesh.axis_names),
+                    tuple(int(d.id) for d in mesh.devices.flat))
     spec_key = tuple((n, specs[n].shape, str(specs[n].dtype))
                      for n in graph.inputs)
     low_key = (tuple(sorted(lowering.items()))
@@ -410,7 +494,7 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
         tune_key = (autotune.mode(), path, autotune._mtime(path),
                     repr(sorted((autotune_kwargs or {}).items())))
     key = (graph.signature, spec_key, backend, low_key, cfg_key, fuse,
-           tune_key)
+           mesh_key, tune_key)
     plan = _CACHE.get(key)
     if plan is not None:
         _STATS["hits"] += 1
@@ -421,10 +505,18 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
         if node.op not in ("input", "const") and node.op not in OPS:
             raise ValueError(f"{node.name}: unknown op {node.op!r}; "
                              f"known ops: {sorted(OPS)}")
-    avals = infer(graph, specs)
+    # sharded plans trace/fuse/tune on the per-shard problem: the body
+    # runs under shard_map, so that's what each device actually executes
+    body_specs = specs
+    if mesh is not None:
+        body_specs = {
+            n: jax.ShapeDtypeStruct((s.shape[0] // n_shards,)
+                                    + tuple(s.shape[1:]), s.dtype)
+            for n, s in specs.items()}
+    avals = infer(graph, body_specs)
     g = fuse_elementwise(graph, avals) if fuse else graph
     if g is not graph:
-        avals = infer(g, specs)
+        avals = infer(g, body_specs)
 
     lowerings: dict[str, str] = {}
     configs: dict[str, dict] = {}
@@ -474,13 +566,26 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
                            tune_key[3]),)
 
     plan = Plan(graph=g, input_names=tuple(g.inputs), lowerings=lowerings,
-                key=key, configs=configs)
+                key=key, configs=configs, mesh=mesh, batch_axis=batch_axis)
 
     def raw(*arrays):
         plan._traces.append(1)      # side effect fires only while tracing
         return _execute(g, dict(zip(g.inputs, arrays)), lowerings, configs)
 
-    plan._fn = jax.jit(raw)
+    if mesh is None:
+        plan._fn = jax.jit(raw)
+    else:
+        from repro.distributed.sharding import batch_shardings
+        shardings = batch_shardings(
+            {n: specs[n] for n in g.inputs}, mesh, {"batch": batch_axis})
+        plan.input_shardings = tuple(shardings[n] for n in g.inputs)
+        fn = shard_map(raw, mesh=mesh,
+                       in_specs=tuple(P(batch_axis) for _ in g.inputs),
+                       out_specs=(P(batch_axis) if len(g.outputs) == 1
+                                  else tuple(P(batch_axis)
+                                             for _ in g.outputs)),
+                       check_rep=False)
+        plan._fn = jax.jit(fn, in_shardings=plan.input_shardings)
     _CACHE[key] = plan
     return plan
 

@@ -14,11 +14,24 @@ Two modes:
 
 ``submit`` returns a ``concurrent.futures.Future`` resolving to that
 request's output slice (a numpy array).
+
+Sharded mode: ``mesh=`` (a Mesh or device count) compiles the serving
+plan with its batch axis placed across the mesh, so each fixed-shape
+batch is split over the devices (``batch_size`` must divide evenly).
+
+Lifecycle (defined order: ``start`` -> ``submit``/... -> ``close``):
+``flush()`` on a *started* service raises — the batcher thread is the
+queue's only consumer while it runs, and a second drain would split one
+logical batch across two consumers.  ``close()`` stops the thread
+(verifying it actually exited before draining the remainder) and marks
+the service closed: ``submit()``/``start()`` afterwards raise
+RuntimeError instead of enqueuing requests no consumer will ever serve.
 """
 from __future__ import annotations
 
 import queue
 import threading
+import time
 from concurrent.futures import Future
 
 import jax.numpy as jnp
@@ -31,8 +44,9 @@ from repro.graph.graph import Graph
 class PipelineService:
     def __init__(self, graph: Graph, signal_len: int, *,
                  batch_size: int = 8, dtype="float32",
-                 lowering="native", block_configs=None,
-                 max_wait_ms: float = 2.0, **compile_opts):
+                 lowering="native", block_configs=None, mesh=None,
+                 max_wait_ms: float = 2.0, close_timeout: float = 30.0,
+                 **compile_opts):
         if len(graph.inputs) != 1:
             raise ValueError("serving supports single-input graphs")
         if len(graph.outputs) != 1:
@@ -44,17 +58,26 @@ class PipelineService:
         self.batch_size = int(batch_size)
         self.dtype = np.dtype(dtype)
         self.max_wait_ms = max_wait_ms
+        self.close_timeout = close_timeout
         self._q: "queue.Queue[tuple[np.ndarray, Future] | None]" = \
             queue.Queue()
         self._thread: threading.Thread | None = None
+        self._closed = False
+        self._drain_lock = threading.Lock()  # the single-consumer claim
+        # makes check-closed + enqueue atomic against close(): without
+        # it a submit racing close can enqueue after the final drain,
+        # recreating the hung-future bug the flag exists to prevent
+        self._lifecycle = threading.Lock()
         self.stats = {"requests": 0, "batches": 0, "padded_slots": 0}
         # compile the serving plan up front: requests never pay trace
         # cost — and with lowering="auto" (or block_configs="auto") the
-        # whole batch path runs the autotuner's tuned kernels
+        # whole batch path runs the autotuner's tuned kernels.  compile
+        # validates mesh divisibility on the (batch_size, signal_len)
+        # spec, so an indivisible batch_size fails here, not at runtime
         self.plan = plan_lib.compile(
             graph, {graph.inputs[0]: (self.batch_size, self.signal_len)},
             dtype=str(self.dtype), lowering=lowering,
-            block_configs=block_configs, **compile_opts)
+            block_configs=block_configs, mesh=mesh, **compile_opts)
 
     # -- request side -------------------------------------------------------
     def submit(self, x) -> Future:
@@ -64,8 +87,13 @@ class PipelineService:
                 f"request shape {x.shape} != ({self.signal_len},) — "
                 "fixed-shape serving; open one service per signal length")
         fut: Future = Future()
-        self.stats["requests"] += 1
-        self._q.put((x, fut))
+        with self._lifecycle:
+            if self._closed:
+                # the consumer is gone (thread joined, final flush ran):
+                # enqueuing would leave the caller hanging in fut.result()
+                raise RuntimeError("service closed")
+            self.stats["requests"] += 1
+            self._q.put((x, fut))
         return fut
 
     # -- batch execution ----------------------------------------------------
@@ -91,7 +119,33 @@ class PipelineService:
             fut.set_result(out[i])
 
     def flush(self) -> int:
-        """Drain the queue synchronously; returns batches executed."""
+        """Drain the queue synchronously; returns batches executed.
+
+        Only legal while no other consumer exists: a background batcher
+        or a second concurrent ``flush()`` would split one logical batch
+        between two consumers (each dispatching a padded partial).  The
+        single-consumer claim is registered under the lifecycle lock but
+        the drain itself runs outside it, so batch execution never
+        blocks ``submit()`` and a Future done-callback that re-enters
+        the service cannot deadlock.
+        """
+        with self._lifecycle:    # claim + thread check atomic vs start()
+            t = self._thread
+            if t is not None and t.is_alive():
+                raise RuntimeError(
+                    "flush() while the background batcher is running "
+                    "would split batches across two consumers; close() "
+                    "the service to drain it")
+            if not self._drain_lock.acquire(blocking=False):
+                raise RuntimeError(
+                    "flush() while another flush() is draining would "
+                    "split batches across two consumers")
+        try:
+            return self._drain_queue()
+        finally:
+            self._drain_lock.release()
+
+    def _drain_queue(self) -> int:
         ran = 0
         while True:
             items = []
@@ -109,9 +163,17 @@ class PipelineService:
 
     # -- background batcher -------------------------------------------------
     def start(self) -> "PipelineService":
-        if self._thread is None:
-            self._thread = threading.Thread(target=self._loop, daemon=True)
-            self._thread.start()
+        with self._lifecycle:
+            if self._closed:
+                raise RuntimeError("service closed")
+            if self._drain_lock.locked():
+                raise RuntimeError(
+                    "start() while flush() is draining would spawn a "
+                    "second consumer mid-batch")
+            if self._thread is None:
+                self._thread = threading.Thread(target=self._loop,
+                                                daemon=True)
+                self._thread.start()
         return self
 
     def _loop(self) -> None:
@@ -132,17 +194,51 @@ class PipelineService:
             self._run_batch(items)
 
     def close(self) -> None:
-        if self._thread is not None:
-            self._q.put(None)
-            self._thread.join(timeout=30)
-            self._thread = None
-        self.flush()
+        """Stop the batcher (if started), drain the queue, and reject all
+        future ``submit``/``start`` calls.  Idempotent on success; if the
+        batcher doesn't stop within ``close_timeout`` (e.g. a slow
+        interpret-mode batch) it raises but stays retryable — a second
+        ``close()`` re-joins the thread rather than no-opping."""
+        with self._lifecycle:
+            self._closed = True      # new submits now raise, not enqueue
+            t = self._thread
+        if t is not None:
+            self._q.put(None)        # extra sentinels on retry are inert
+            t.join(timeout=self.close_timeout)
+            if t.is_alive():
+                # the thread may still be draining the queue: flushing
+                # now would make two concurrent consumers — refuse, but
+                # leave _thread set so a retry can finish the shutdown
+                raise RuntimeError(
+                    f"batcher thread did not stop within "
+                    f"{self.close_timeout}s (slow batch in flight?); "
+                    "call close() again to retry the shutdown")
+            with self._lifecycle:
+                self._thread = None
+        self._drain_lock.acquire()   # waits out a legal in-flight flush
+        try:
+            self._drain_queue()
+        finally:
+            self._drain_lock.release()
 
     def __enter__(self):
         return self.start()
 
     def __exit__(self, *exc):
-        self.close()
+        # the with-form has no retry path: wait out slow (not hung)
+        # batches rather than replacing the body's exception with the
+        # retryable close-timeout error and stranding pending futures.
+        # Bounded (20 x close_timeout, 10 min at defaults) so a batch
+        # that is genuinely hung — not slow — still surfaces the error.
+        for _ in range(20):
+            try:
+                self.close()
+                return
+            except RuntimeError:
+                if self._thread is None:
+                    raise            # not a batcher timeout: genuine error
+                time.sleep(0.01)     # slow batch in flight: keep waiting
+        self.close()                 # final attempt: let the timeout raise
 
 
 __all__ = ["PipelineService"]

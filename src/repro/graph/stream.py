@@ -24,6 +24,13 @@ of equal size after warm-up are pure plan-cache hits.  ``compile_opts``
 pass through verbatim — ``lowering="auto"`` / ``block_configs="auto"``
 make every chunk run the autotuner's tuned kernels (tuned once per push
 shape, then cached).
+
+Sharded batched streams: a runner built with ``mesh=`` accepts chunks
+with a leading batch dim (``(batch, chunk_len)``) and compiles every
+push's plan with the batch axis sharded across the mesh — the carry
+arithmetic is identical (overlap lives on the *time* axis; the batch
+axis just rides along), so chunked sharded output still equals offline
+output.  The batch dim must divide by the mesh's shard count.
 """
 from __future__ import annotations
 
@@ -121,10 +128,15 @@ class ChunkedRunner:
     """Push chunks in, get output steps out; carries FIR/PFB/unfold
     overlap state so the concatenated output equals offline execution."""
 
-    def __init__(self, graph: Graph, **compile_opts):
+    def __init__(self, graph: Graph, *, mesh=None, **compile_opts):
         self.graph = graph
         self.spec = stream_spec(graph)
-        self.compile_opts = compile_opts
+        self.compile_opts = dict(compile_opts)
+        if mesh is not None:
+            # normalize (int -> Mesh) once: every push re-enters
+            # plan.compile, and steady-state pushes must stay pure
+            # cache hits, not rebuild a Mesh per chunk
+            self.compile_opts["mesh"] = plan_lib._norm_mesh(mesh, None)[0]
         self._carry: np.ndarray | None = None
 
     @property

@@ -9,22 +9,24 @@ thread, validates a sample of responses against the pipeline's numpy
 oracle, and reports throughput + batching efficiency.  ``--lowering
 auto`` engages the measurement-based autotuner (winners persist to the
 on-disk tuning cache, so a second launch skips the measurements).
+
+Mesh serving: ``--mesh N`` shards every batch across N devices (batch
+must divide evenly); ``--devices N`` forces the host platform to expose
+N virtual devices (CPU dev boxes / CI — set before jax initializes, so
+it must be a flag here, not an afterthought env var).
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
-import numpy as np
-
-from repro.core.registry import PIPELINES, pipelines
-from repro.graph.service import PipelineService
+import numpy as np    # jax-free: safe before the --devices flag lands
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--pipeline", default="spectrogram",
-                    choices=sorted(p.name for p in pipelines()))
+    ap.add_argument("--pipeline", default="spectrogram")
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--signal-len", type=int, default=4096)
@@ -34,11 +36,42 @@ def main(argv=None):
                     help="autotune Pallas block sizes for the chosen "
                          "lowering (lowering=auto already tunes them "
                          "jointly)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="shard each batch across N devices (0 = "
+                         "single-device plan)")
+    ap.add_argument("--devices", type=int, default=0, metavar="N",
+                    help="force the host platform to expose N virtual "
+                         "devices (must run before jax initializes; "
+                         "for CPU dev boxes and CI mesh jobs)")
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--check", type=int, default=4,
                     help="responses to validate against the numpy oracle")
-    args = ap.parse_args(argv)
+    return ap
 
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    if args.devices:
+        # must precede the first jax import: jax locks the device count
+        # at backend init, which is why the imports below are deferred
+        import sys
+        if "jax" in sys.modules:
+            raise SystemExit(
+                "--devices has no effect once jax is imported (the "
+                "device count locks at backend init); set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={args.devices} "
+                "in the environment instead")
+        flag = f"--xla_force_host_platform_device_count={args.devices}"
+        os.environ["XLA_FLAGS"] = \
+            (os.environ.get("XLA_FLAGS", "") + " " + flag).strip()
+
+    from repro.core.registry import PIPELINES, pipelines
+    from repro.graph.service import PipelineService
+
+    pipelines()
+    if args.pipeline not in PIPELINES:
+        raise SystemExit(f"unknown pipeline {args.pipeline!r}; "
+                         f"choices: {sorted(PIPELINES)}")
     spec = PIPELINES[args.pipeline]
     g = spec.build()
     n = spec.valid_len(args.signal_len)   # e.g. PFB branch divisibility
@@ -51,12 +84,19 @@ def main(argv=None):
     svc = PipelineService(g, signal_len=n, batch_size=args.batch,
                           lowering=args.lowering,
                           block_configs="auto" if args.tune_blocks else None,
+                          mesh=args.mesh or None,
                           max_wait_ms=args.max_wait_ms)
     t_compile = time.perf_counter() - t0
     tuned = {k: v for k, v in svc.plan.configs.items() if v}
+    sharded = ""
+    if svc.plan.mesh is not None:
+        m = svc.plan.mesh
+        sharded = (f", mesh {dict(m.shape)} "
+                   f"({args.batch // m.shape[svc.plan.batch_axis]} "
+                   "rows/device)")
     print(f"[dsp_serve] {args.pipeline}: plan compiled in {t_compile:.2f}s "
           f"(lowerings: {svc.plan.lowerings}"
-          + (f", block configs: {tuned}" if tuned else "") + ")")
+          + (f", block configs: {tuned}" if tuned else "") + sharded + ")")
 
     signals = [rng.standard_normal(n).astype(np.float32)
                for _ in range(args.requests)]

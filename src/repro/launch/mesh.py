@@ -28,3 +28,17 @@ def make_local_mesh(*, model: int = 1):
     n = len(jax.devices())
     model = min(model, n)
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_batch_mesh(n_devices: int | None = None, *, axis: str = "batch"):
+    """1-D mesh for batch-axis data parallelism (sharded pipeline plans):
+    the first ``n_devices`` local devices on one ``axis``.  ``None`` uses
+    every device this process sees."""
+    devices = jax.devices()
+    if n_devices is None:
+        n_devices = len(devices)
+    if not 1 <= n_devices <= len(devices):
+        raise ValueError(
+            f"make_batch_mesh: {n_devices} devices requested, "
+            f"{len(devices)} available")
+    return jax.make_mesh((n_devices,), (axis,), devices=devices[:n_devices])

@@ -297,6 +297,89 @@ def test_unknown_op_raises_cleanly():
         graph.compile(g, {"x": (8,)})
 
 
+def test_service_submit_after_close_raises():
+    """A closed service has no consumer left (thread joined, final flush
+    ran): enqueuing would hang the caller in fut.result() forever."""
+    g = PIPELINES["spectrogram"].build()
+    svc = graph.PipelineService(g, signal_len=256, batch_size=2)
+    with svc:
+        f = svc.submit(np.zeros(256, np.float32))
+        f.result(timeout=60)
+    with pytest.raises(RuntimeError, match="service closed"):
+        svc.submit(np.zeros(256, np.float32))
+    with pytest.raises(RuntimeError, match="service closed"):
+        svc.start()
+
+
+def test_service_close_is_idempotent():
+    g = PIPELINES["spectrogram"].build()
+    svc = graph.PipelineService(g, signal_len=256, batch_size=2)
+    f = svc.submit(np.zeros(256, np.float32))
+    svc.close()                      # never started: close just drains
+    assert f.result(timeout=5).shape
+    svc.close()                      # second close: no-op, no error
+
+
+def test_service_flush_while_started_raises():
+    """flush() racing the batcher thread would split one logical batch
+    between two consumers (each dispatching a padded partial)."""
+    g = PIPELINES["spectrogram"].build()
+    svc = graph.PipelineService(g, signal_len=256, batch_size=2)
+    svc.start()
+    try:
+        with pytest.raises(RuntimeError, match="two consumers"):
+            svc.flush()
+    finally:
+        svc.close()
+    # after close the thread is gone: flush is legal again (and empty)
+    assert svc.flush() == 0
+
+
+def test_service_close_timeout_is_retryable():
+    """A close() that times out on a slow (not hung) batch raises but
+    leaves the service retryable: the next close() re-joins the thread
+    and finishes the shutdown instead of silently no-opping."""
+    import time as time_lib
+
+    g = PIPELINES["spectrogram"].build()
+    svc = graph.PipelineService(g, signal_len=256, batch_size=2,
+                                close_timeout=0.05)
+    real_plan = svc.plan
+    svc.plan = lambda x: (time_lib.sleep(0.4), real_plan(x))[1]
+    svc.start()
+    f = svc.submit(np.zeros(256, np.float32))
+    with pytest.raises(RuntimeError, match="retry"):
+        svc.close()
+    svc.close_timeout = 30
+    svc.close()                       # retry joins the finishing thread
+    assert f.result(timeout=5).shape  # the slow batch still completed
+    with pytest.raises(RuntimeError, match="service closed"):
+        svc.submit(np.zeros(256, np.float32))
+
+
+def test_append_bench_json_atomic_on_crash(tmp_path, monkeypatch):
+    """A crash mid-write must not destroy the accumulated trajectory:
+    the dump goes to a temp file and lands via os.replace."""
+    import json as json_lib
+
+    from benchmarks import common
+    path = tmp_path / "BENCH_z.json"
+    common.append_bench_json(str(path), [{"t": 1.0}], figure="f")
+    before = path.read_text()
+
+    def boom(*a, **k):
+        raise KeyboardInterrupt("simulated crash mid-dump")
+
+    monkeypatch.setattr(common.json, "dump", boom)
+    with pytest.raises(KeyboardInterrupt):
+        common.append_bench_json(str(path), [{"t": 2.0}], figure="f")
+    assert path.read_text() == before          # previous file intact
+    assert not list(tmp_path.glob("*.tmp"))    # temp file cleaned up
+    monkeypatch.undo()
+    data = json_lib.loads(path.read_text())
+    assert len(data["runs"]) == 1
+
+
 def test_autotune_save_merges_concurrent_entries(tmp_path, monkeypatch):
     """_save must not clobber entries another process persisted — and a
     v1-format file on disk must survive the merge (migrated to v2)."""
