@@ -76,4 +76,13 @@ print(f"service: {svc.stats}, plan traces {svc.plan.trace_count}")
 
 # the built-ins come with numpy oracles — verify one response
 xs = np.asarray(outs[0])
+
+# -- 5. every op above is ONE OpDef declaration ------------------------------
+# core/opdefs.py is the single registry the planner, fuser, autotuner,
+# streaming executor, and Table-1 sweep all derive from.
+from repro.core.opdefs import OPDEFS
+used = sorted({n.op for n in g.topo() if n.op not in ("input", "const")})
+print("ops used:", {op: (f"§{OPDEFS[op].section}" if OPDEFS[op].section
+                         else "glue") for op in used})
+
 print("pipeline quickstart: all stages verified" if xs.shape else "")

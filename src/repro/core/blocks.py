@@ -196,6 +196,48 @@ def pointwise_conv(
 
 
 # ---------------------------------------------------------------------------
+# transposed (fractionally-strided) convolution — beyond-paper block
+# ---------------------------------------------------------------------------
+def transposed_conv(
+    x: Array,
+    kernel: Array,
+    *,
+    stride: int = 1,
+    lowering: str = "conv",
+    precision=lax.Precision.HIGHEST,
+) -> Array:
+    """Scatter semantics: out[n, t·s + w, o] += x[n, t, i] · kernel[w, i, o].
+
+    x: (T, W, C_in); kernel: (K, C_in, C_out); output (T, (W−1)·s + K,
+    C_out).  The NN "deconvolution" layer — what overlap-add synthesis
+    lowers to (an identity kernel scatters each frame back onto the time
+    axis).  ``conv`` is the literal ``lax.conv_transpose`` layer (whose
+    convention convolves, so the kernel is pre-flipped to keep the
+    scatter semantics above); ``native`` is the zero-FLOP gather/scatter
+    form.
+    """
+    if x.ndim != 3 or kernel.ndim != 3:
+        raise ValueError(f"transposed_conv expects (T, W, C_in) x and "
+                         f"(K, C_in, C_out) kernel, got {x.shape} "
+                         f"{kernel.shape}")
+    if lowering == "conv":
+        return lax.conv_transpose(
+            x, kernel[::-1], strides=(stride,), padding="VALID",
+            dimension_numbers=("NWC", "WIO", "NWC"), precision=precision)
+    if lowering == "native":
+        t, w, _ = x.shape
+        k, _, c_out = kernel.shape
+        contrib = jnp.einsum("nti,wio->ntwo", x, kernel,
+                             precision=precision)
+        length = (w - 1) * stride + k
+        idx = (jnp.arange(w)[:, None] * stride
+               + jnp.arange(k)[None, :]).reshape(-1)
+        out = jnp.zeros((t, length, c_out), contrib.dtype)
+        return out.at[:, idx, :].add(contrib.reshape(t, w * k, c_out))
+    raise ValueError(f"unknown lowering {lowering!r}")
+
+
+# ---------------------------------------------------------------------------
 # §2.4 fully connected layer
 # ---------------------------------------------------------------------------
 def fully_connected(
@@ -217,5 +259,6 @@ __all__ = [
     "standard_conv",
     "depthwise_conv",
     "pointwise_conv",
+    "transposed_conv",
     "fully_connected",
 ]

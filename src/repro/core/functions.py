@@ -235,6 +235,51 @@ def depthwise_fir(x: Array, taps: Array, *, causal: bool = True,
 
 
 # ---------------------------------------------------------------------------
+# overlap-add synthesis  — transposed conv with identity kernel
+# (beyond paper: the inverse of §4.4 unfolding, what ISTFT needs)
+# ---------------------------------------------------------------------------
+def overlap_add(frames: Array, hop: int, *, lowering: str = "native",
+                block: Optional[dict] = None) -> Array:
+    """Valid-mode overlap-add: frames (..., T, J) at stride ``hop`` back
+    onto the time axis, emitting only output samples covered by the full
+    complement of K = J/hop overlapping frames — so chunked streaming
+    output equals offline output with no partial-sum edges.
+
+    Requires ``hop`` to divide the frame length J.  Returns
+    (..., (T − K + 1)·hop).  Output sample s (of the returned array)
+    equals Σ_m frames[s//hop + m, J − (m+1)·hop + s%hop].
+
+    ``conv`` is the NN-layer form: a transposed standard conv whose
+    identity kernel scatters each frame at its hop offset
+    (:func:`repro.core.blocks.transposed_conv`), sliced to the valid
+    region.  ``native`` sums the K diagonal sub-block contributions
+    directly (pure data movement + adds).
+    """
+    t, j = frames.shape[-2], frames.shape[-1]
+    h = int(hop)
+    if h <= 0 or j % h:
+        raise ValueError(f"hop {h} must divide the frame length {j}")
+    k = j // h
+    if t < k:
+        raise ValueError(f"overlap_add needs >= {k} frames of length {j} "
+                         f"at hop {h}, got {t}")
+    nt = t - k + 1
+    batch = frames.shape[:-2]
+    if lowering == "conv":
+        xi = frames.reshape((-1, t, j))
+        eye = jnp.eye(j, dtype=frames.dtype)[:, :, None]   # (K=J, I=J, O=1)
+        full = blocks.transposed_conv(xi, eye, stride=h, lowering="conv")
+        out = full[:, (k - 1) * h:(k - 1) * h + nt * h, 0]
+        return out.reshape(batch + (nt * h,))
+    # native / fallback: o_t = Σ_m f_{t+m}[(K−1−m)·h : (K−m)·h]
+    fk = frames.reshape(batch + (t, k, h))
+    acc = fk[..., 0:nt, k - 1, :]
+    for m in range(1, k):
+        acc = acc + fk[..., m:m + nt, k - 1 - m, :]
+    return acc.reshape(batch + (nt * h,))
+
+
+# ---------------------------------------------------------------------------
 # §4.4 unfolding  — standard conv with identity kernel, Eq. (19)
 # ---------------------------------------------------------------------------
 def unfold(x: Array, window: int, *, lowering: str = "native",
@@ -263,5 +308,5 @@ def unfold(x: Array, window: int, *, lowering: str = "native",
 
 __all__ = [
     "elementwise_mult", "elementwise_add", "matmul", "summation",
-    "dft", "idft", "fir", "depthwise_fir", "unfold",
+    "dft", "idft", "fir", "depthwise_fir", "unfold", "overlap_add",
 ]

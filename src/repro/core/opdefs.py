@@ -1,0 +1,537 @@
+"""Unified op definitions: ONE declaration per TINA op, feeding every
+layer that used to keep its own parallel catalog.
+
+TINA's thesis is that a signal-processing algorithm is one declaration —
+a short stack of conv/FC layers — yet the repo used to declare every op
+four times: the Table-1 ``TinaOp`` registry, the eager dispatch in
+``core.functions``, the kernel TuneSpace mapping in ``graph.autotune``,
+and a second hand-maintained ``OpSpec`` catalog in ``graph.plan``.  An
+:class:`OpDef` is the single record all of them derive from:
+
+  * **eager / Table-1 view** — ``eager`` (the user-facing function),
+    ``oracle`` (pure-numpy reference), ``make_args`` (sweep/bench
+    inputs) and ``table_name`` generate ``core.registry.REGISTRY``.
+  * **graph view** — ``impl`` (``(args, attrs, lowering, block)`` →
+    Array), ``lowerings``, the ``attrs`` schema, and the
+    ``elementwise`` fuser trait are the planner's catalog
+    (``graph.plan`` imports :data:`OPDEFS` directly).
+  * **autotune view** — ``tune_space`` names the kernel's
+    :class:`repro.kernels.tune.TuneSpace`; ``tune_ctx`` extracts the
+    shape facts the space needs from the node's inferred avals.
+  * **streaming view** — ``stream`` (:class:`StreamRule`) declares how
+    the op maps the streamed time axis, composed by
+    ``graph.stream.stream_spec`` exactly like conv stride/receptive
+    arithmetic.
+
+Adding a workload is now: declare the OpDef(s) here (usually one), then
+build a Graph in ``graph/pipelines.py`` — the planner, fuser, autotuner,
+streaming executor, serving layer, Table-1 sweep, and benchmarks all
+pick it up with no further registration.
+
+This module stays import-light (core + numpy/jax only; kernels are
+imported lazily inside the pallas branches) so the eager registry can
+be used without pulling in the graph subsystem.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import functions, pfb
+
+
+def _kops():
+    from repro.kernels import ops
+    return ops
+
+
+def _rows(shape) -> int:
+    from repro.kernels import tune
+    return tune.leading_rows(shape)
+
+
+# ---------------------------------------------------------------------------
+# the record
+# ---------------------------------------------------------------------------
+REQUIRED = object()      # sentinel: attr has no default, caller must set it
+
+
+@dataclasses.dataclass(frozen=True)
+class Attr:
+    """One entry of an op's attr schema."""
+    name: str
+    default: Any = REQUIRED
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamRule:
+    """How an op maps the streamed (time) axis.
+
+    ``kind``:
+      * ``"pointwise"`` — per-element; multiple streamed inputs OK.
+      * ``"frame"``     — mixes the last axis; legal only after the
+                          stream has been framed (unfold/pfb).
+      * ``"time"``      — consumes the raw time axis; ``spec`` gives
+                          (block, receptive, tail_delta) in *samples*.
+      * ``"framed"``    — consumes the frame axis after framing;
+                          ``spec`` gives the same triple in *frames*.
+
+    ``spec(attrs, taps_shape)`` returns ``(block, receptive,
+    tail_delta)``; ``taps_shape`` is the shape of the node's second
+    (const) input when ``needs_taps`` — FIR/PFB read their reach off
+    the baked taps.
+    """
+    kind: str
+    spec: Callable[[dict, tuple | None], tuple] | None = None
+    needs_taps: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class OpDef:
+    name: str                                  # graph op name (canonical)
+    impl: Callable                             # (args, attrs, lowering, block)
+    lowerings: tuple[str, ...] = ("native",)
+    elementwise: bool = False                  # fuser trait (needs fuse_step)
+    fuse_step: Callable[[dict], tuple] | None = None
+    # attrs -> the op's step in a fused chain, using the chain kernel's
+    # tag vocabulary: ("mul",) / ("add",) consume the node's second
+    # input as a chain operand, ("abs2",) squares a complex head,
+    # ("scale", c) bakes a scalar.  An elementwise op MUST declare one
+    # (the fuser only collapses ops it can express as a step); a new
+    # tag requires extending kernels/elementwise.py's chain kernel and
+    # _impl_fused below.
+    lowering_agnostic: bool = False
+    # True: every lowering is the same computation (pure data movement
+    # — slicing, jnp.real, scalar mult), so requesting conv/pallas is
+    # satisfied by the native code path and is NOT a downgrade worth
+    # warning about.  Leave False for native-only ops that are missing
+    # a real kernel (e.g. overlap_add's pallas path): those fallbacks
+    # should stay visible.
+    attrs: tuple[Attr, ...] = ()               # attr schema
+    section: str = ""                          # paper section
+    building_block: str = ""                   # paper Table 1 column
+    eager: Callable | None = None              # user-facing fn(*args, lowering=)
+    oracle: Callable | None = None             # numpy ref over make_args
+    make_args: Callable | None = None          # rng, n -> args tuple
+    table_name: str | None = None              # name in the Table-1 view
+    arg_attrs: tuple[str, ...] = ()            # attrs bound to trailing
+                                               # non-array make_args entries
+    tune_space: str | None = None              # kernels.tune space key
+    tune_ctx: Callable | None = None           # (attrs, in_avals) -> dict|None
+    stream: StreamRule | None = None           # None = not streamable
+
+    def bind(self, attrs: dict) -> dict:
+        """Merge ``attrs`` over the schema defaults and validate."""
+        schema = {a.name: a for a in self.attrs}
+        unknown = set(attrs) - set(schema)
+        if unknown:
+            raise ValueError(
+                f"{self.name}: unknown attr(s) {sorted(unknown)}; "
+                f"schema: {sorted(schema)}")
+        out = {}
+        for a in self.attrs:
+            if a.name in attrs:
+                out[a.name] = attrs[a.name]
+            elif a.default is REQUIRED:
+                raise ValueError(
+                    f"{self.name}: missing required attr {a.name!r}")
+            else:
+                out[a.name] = a.default
+        return out
+
+    def supports(self, lowering: str) -> bool:
+        return lowering in self.lowerings
+
+
+OPDEFS: dict[str, OpDef] = {}
+
+
+def register(op: OpDef) -> OpDef:
+    if op.name in OPDEFS:
+        raise ValueError(f"duplicate OpDef {op.name!r}")
+    OPDEFS[op.name] = op
+    return op
+
+
+def opdef(name: str) -> OpDef:
+    return OPDEFS[name]
+
+
+# ---------------------------------------------------------------------------
+# numpy oracles (shared by the Table-1 view and tests)
+# ---------------------------------------------------------------------------
+def _np_unfold(x, j):
+    n = x.shape[-1]
+    idx = np.arange(n - j + 1)[:, None] + np.arange(j)[None, :]
+    return x[..., idx]
+
+
+def _np_fir_valid(x, taps):
+    return np.stack([np.convolve(row, taps, mode="valid")
+                     for row in np.atleast_2d(x)]).reshape(
+        x.shape[:-1] + (x.shape[-1] - taps.shape[0] + 1,))
+
+
+def _np_pfb_frontend(x, taps):
+    m, p = taps.shape
+    frames = x.reshape(x.shape[:-1] + (-1, p))
+    nfr = frames.shape[-2]
+    idx = np.arange(nfr - m + 1)[:, None] + np.arange(m)[None, :]
+    return np.einsum("...tmp,mp->...tp", frames[..., idx, :], taps[::-1, :])
+
+
+def _np_pfb(x, taps):
+    return np.fft.fft(_np_pfb_frontend(x, taps), axis=-1)
+
+
+def _np_overlap_add(frames, hop):
+    t, j = frames.shape[-2], frames.shape[-1]
+    k = j // hop
+    nt = t - k + 1
+    fk = frames.reshape(frames.shape[:-2] + (t, k, hop))
+    acc = sum(fk[..., m:m + nt, k - 1 - m, :] for m in range(k))
+    return acc.reshape(frames.shape[:-2] + (nt * hop,))
+
+
+# ---------------------------------------------------------------------------
+# graph implementations
+# ---------------------------------------------------------------------------
+def _ew_binary(kind: str):
+    """window / ew_mul / ew_add: broadcast the operand, then dispatch."""
+    fn_conv = (functions.elementwise_mult if kind == "mul"
+               else functions.elementwise_add)
+
+    def impl(args, at, lowering, block=None):
+        x, y = args
+        if lowering == "pallas":
+            k = _kops()
+            pk = k.elementwise_mult if kind == "mul" else k.elementwise_add
+            return pk(x, y, **(block or {}))
+        if lowering == "conv" and x.ndim >= 2:
+            return fn_conv(x, jnp.broadcast_to(y, x.shape), lowering="conv")
+        yb = jnp.broadcast_to(y, x.shape)
+        return x * yb if kind == "mul" else x + yb
+    return impl
+
+
+def _impl_abs2(args, at, lowering, block=None):
+    (x,) = args
+    re, im = jnp.real(x), jnp.imag(x)
+    if lowering == "pallas":
+        return _kops().abs2(x, **(block or {}))
+    if lowering == "conv" and re.ndim >= 2:
+        return functions.elementwise_add(
+            functions.elementwise_mult(re, re, lowering="conv"),
+            functions.elementwise_mult(im, im, lowering="conv"),
+            lowering="conv")
+    return re * re + im * im
+
+
+def _impl_fused(args, at, lowering, block=None):
+    x, operands = args[0], tuple(args[1:])
+    steps = at["steps"]
+    if lowering == "pallas":
+        return _kops().fused_elementwise(x, operands, steps, **(block or {}))
+    k = 0
+    acc = x
+    for step in steps:
+        tag = step[0]
+        if tag == "abs2":
+            acc = _impl_abs2((acc,), {}, lowering)
+        elif tag in ("mul", "add"):
+            op = (functions.elementwise_mult if tag == "mul"
+                  else functions.elementwise_add)
+            o = jnp.broadcast_to(operands[k], acc.shape)
+            k += 1
+            if lowering == "conv" and acc.ndim >= 2:
+                acc = op(acc, o, lowering="conv")
+            else:
+                acc = acc * o if tag == "mul" else acc + o
+        elif tag == "scale":
+            acc = acc * step[1]
+        else:
+            raise ValueError(f"unknown fused step {tag!r}")
+    return acc
+
+
+def _impl_overlap_add(args, at, lowering, block=None):
+    (frames,) = args
+    if at["window"] and frames.shape[-1] != at["window"]:
+        raise ValueError(
+            f"overlap_add: frames have length {frames.shape[-1]} but the "
+            f"window attr says {at['window']}")
+    return functions.overlap_add(frames, at["hop"], lowering=lowering)
+
+
+# ---------------------------------------------------------------------------
+# tune contexts (shape facts each kernel's TuneSpace needs)
+# ---------------------------------------------------------------------------
+def _ctx_fir(at, av):
+    return {"k": int(av[1].shape[-1]), "n": int(av[0].shape[-1]),
+            "rows": _rows(av[0].shape)}
+
+
+def _ctx_unfold(at, av):
+    return {"j": int(at["window"]), "n": int(av[0].shape[-1]),
+            "rows": _rows(av[0].shape)}
+
+
+def _ctx_matmul(at, av):
+    return {"m": _rows(av[0].shape), "n": int(av[1].shape[-1]),
+            "k": int(av[0].shape[-1])}
+
+
+def _ctx_dft(at, av):
+    n = int(av[0].shape[-1])
+    return {"m": _rows(av[0].shape), "n": n, "k": n}
+
+
+def _ctx_pfb(at, av):
+    m, p = int(av[1].shape[0]), int(av[1].shape[1])
+    return {"m": m, "p": p, "t": int(av[0].shape[-1]) // p}
+
+
+def _ctx_ew_binary(at, av):
+    shape = np.broadcast_shapes(av[0].shape, av[1].shape)
+    return {"rows": _rows(shape), "cols": int(shape[-1]), "n_in": 2}
+
+
+def _ctx_abs2(at, av):
+    return {"rows": _rows(av[0].shape), "cols": int(av[0].shape[-1]),
+            "n_in": 2}
+
+
+def _ctx_fused(at, av):
+    steps = at["steps"]
+    heads = 2 if (steps and steps[0][0] == "abs2") else 1
+    return {"rows": _rows(av[0].shape), "cols": int(av[0].shape[-1]),
+            "n_in": heads + len(av) - 1}
+
+
+# ---------------------------------------------------------------------------
+# stream rules
+# ---------------------------------------------------------------------------
+_POINTWISE = StreamRule("pointwise")
+_FRAME = StreamRule("frame")
+
+
+def _stream_fir(at, taps):
+    if at["mode"] != "valid":
+        raise ValueError("streaming fir supports mode='valid' only")
+    return 1, taps[-1], 0
+
+
+def _stream_overlap_add(at, taps):
+    if not at["window"]:
+        raise ValueError("streaming overlap_add needs the window attr "
+                         "(frame length is not known graph-statically)")
+    if at["window"] % at["hop"]:
+        raise ValueError(
+            f"overlap_add: hop {at['hop']} must divide window "
+            f"{at['window']}")
+    return 1, at["window"] // at["hop"], -1
+
+
+# ---------------------------------------------------------------------------
+# the declarations — Table-1 ops
+# ---------------------------------------------------------------------------
+_NN = lambda rng, n: (rng.standard_normal((n, n), dtype=np.float32),
+                      rng.standard_normal((n, n), dtype=np.float32))
+
+register(OpDef(
+    "ew_mul", _ew_binary("mul"), ("native", "conv", "pallas"),
+    elementwise=True, fuse_step=lambda at: ("mul",),
+    section="3.1", building_block="depthwise conv",
+    eager=functions.elementwise_mult, oracle=lambda x, y: x * y,
+    make_args=_NN, table_name="elementwise_mult",
+    tune_space="elementwise", tune_ctx=_ctx_ew_binary, stream=_POINTWISE))
+
+register(OpDef(
+    "ew_add", _ew_binary("add"), ("native", "conv", "pallas"),
+    elementwise=True, fuse_step=lambda at: ("add",),
+    section="3.3", building_block="depthwise conv",
+    eager=functions.elementwise_add, oracle=lambda x, y: x + y,
+    make_args=_NN, table_name="elementwise_add",
+    tune_space="elementwise", tune_ctx=_ctx_ew_binary, stream=_POINTWISE))
+
+register(OpDef(
+    "matmul",
+    lambda a, at, lw, b=None: functions.matmul(a[0], a[1], lowering=lw,
+                                               block=b),
+    ("native", "conv", "pallas"),
+    section="3.2", building_block="pointwise conv",
+    eager=functions.matmul, oracle=lambda x, y: x @ y,
+    make_args=_NN, table_name="matmul",
+    tune_space="matmul", tune_ctx=_ctx_matmul, stream=_FRAME))
+
+register(OpDef(
+    "summation",
+    lambda a, at, lw, b=None: functions.summation(a[0], lowering=lw),
+    ("native",), lowering_agnostic=True,   # the FC block has one code path
+    section="3.4", building_block="fully connected",
+    eager=functions.summation, oracle=lambda x: x.sum(-1),
+    make_args=lambda rng, n: (rng.standard_normal((n * n,),
+                                                  dtype=np.float32),),
+    table_name="summation"))
+
+register(OpDef(
+    "dft",
+    lambda a, at, lw, b=None: functions.dft(
+        a[0], lowering=lw, variant=at["variant"], block=b),
+    ("native", "conv", "pallas"),
+    attrs=(Attr("variant", "4mult"),),
+    section="4.1", building_block="pointwise conv",
+    eager=functions.dft, oracle=lambda x: np.fft.fft(x),
+    make_args=lambda rng, n: (
+        rng.standard_normal((max(1, n // 8), n), dtype=np.float32),),
+    table_name="dft", tune_space="dft", tune_ctx=_ctx_dft, stream=_FRAME))
+
+register(OpDef(
+    "idft",
+    lambda a, at, lw, b=None: functions.idft(
+        a[0], lowering=lw, variant=at["variant"], block=b),
+    ("native", "conv", "pallas"),
+    attrs=(Attr("variant", "4mult"),),
+    section="4.2", building_block="pointwise conv",
+    eager=functions.idft, oracle=lambda z: np.fft.ifft(z),
+    make_args=lambda rng, n: ((rng.standard_normal((max(1, n // 8), n))
+                               + 1j * rng.standard_normal(
+                                   (max(1, n // 8), n))).astype(np.complex64),),
+    table_name="idft", tune_space="dft", tune_ctx=_ctx_dft, stream=_FRAME))
+
+register(OpDef(
+    "fir",
+    lambda a, at, lw, b=None: functions.fir(
+        a[0], a[1], mode=at["mode"], flip=at["flip"], lowering=lw, block=b),
+    ("native", "conv", "pallas"),
+    attrs=(Attr("mode", "valid"), Attr("flip", True)),
+    section="4.3", building_block="standard conv",
+    eager=functions.fir, oracle=_np_fir_valid,
+    make_args=lambda rng, n: (rng.standard_normal((n * n,),
+                                                  dtype=np.float32),
+                              rng.standard_normal((31,), dtype=np.float32)),
+    table_name="fir", tune_space="fir", tune_ctx=_ctx_fir,
+    stream=StreamRule("time", _stream_fir, needs_taps=True)))
+
+register(OpDef(
+    "unfold",
+    lambda a, at, lw, b=None: functions.unfold(
+        a[0], at["window"], lowering=lw, block=b),
+    ("native", "conv", "pallas"),
+    attrs=(Attr("window"),),
+    section="4.4", building_block="standard conv",
+    eager=functions.unfold, oracle=_np_unfold,
+    make_args=lambda rng, n: (rng.standard_normal((n * n,),
+                                                  dtype=np.float32), 16),
+    table_name="unfold", arg_attrs=("window",),
+    tune_space="unfold", tune_ctx=_ctx_unfold,
+    stream=StreamRule("time", lambda at, taps: (1, at["window"], 1))))
+
+register(OpDef(
+    "overlap_add", _impl_overlap_add, ("native", "conv"),
+    attrs=(Attr("hop"), Attr("window", 0)),
+    section="4.4 (inverse)", building_block="transposed conv",
+    eager=functions.overlap_add, oracle=_np_overlap_add,
+    make_args=lambda rng, n: (
+        rng.standard_normal((max(2, n // 8), 64), dtype=np.float32), 32),
+    table_name="overlap_add", arg_attrs=("hop",),
+    stream=StreamRule("framed", _stream_overlap_add)))
+
+register(OpDef(
+    "pfb_frontend",
+    lambda a, at, lw, b=None: pfb.pfb_frontend(a[0], a[1], lowering=lw,
+                                               block=b),
+    ("native", "conv", "pallas"),
+    section="5.2", building_block="standard conv bank",
+    eager=pfb.pfb_frontend, oracle=_np_pfb_frontend,
+    make_args=lambda rng, n: (rng.standard_normal((n * n,),
+                                                  dtype=np.float32),
+                              pfb.pfb_window(16, 8).astype(np.float32)),
+    table_name="pfb_frontend", tune_space="pfb", tune_ctx=_ctx_pfb,
+    stream=StreamRule("time",
+                      lambda at, taps: (taps[1], taps[0] * taps[1], 1),
+                      needs_taps=True)))
+
+register(OpDef(
+    "pfb",
+    lambda a, at, lw, b=None: pfb.pfb(
+        a[0], a[1], lowering=lw, variant=at["variant"], block=b),
+    ("native", "conv", "pallas"),
+    attrs=(Attr("variant", "4mult"),),
+    section="5.2", building_block="conv bank + pointwise conv",
+    eager=pfb.pfb, oracle=_np_pfb,
+    make_args=lambda rng, n: (rng.standard_normal((n * n,),
+                                                  dtype=np.float32),
+                              pfb.pfb_window(16, 8).astype(np.float32)),
+    table_name="pfb", tune_space="pfb", tune_ctx=_ctx_pfb,
+    stream=StreamRule("time",
+                      lambda at, taps: (taps[1], taps[0] * taps[1], 1),
+                      needs_taps=True)))
+
+# ---------------------------------------------------------------------------
+# glue primitives (graph-only: no Table-1 row)
+# ---------------------------------------------------------------------------
+register(OpDef(
+    # multiply by a const vector along the last axis (same impl as
+    # ew_mul; a distinct name keeps pipeline intent readable)
+    "window", _ew_binary("mul"), ("native", "conv", "pallas"),
+    elementwise=True, fuse_step=lambda at: ("mul",),
+    section="3.1", building_block="depthwise conv",
+    tune_space="elementwise", tune_ctx=_ctx_ew_binary, stream=_POINTWISE))
+
+register(OpDef(
+    "abs2", _impl_abs2, ("native", "conv", "pallas"),
+    elementwise=True, fuse_step=lambda at: ("abs2",),
+    section="3.1+3.3", building_block="depthwise conv",
+    tune_space="elementwise", tune_ctx=_ctx_abs2, stream=_POINTWISE))
+
+register(OpDef(
+    "scale",
+    lambda a, at, lw, b=None: a[0] * at["factor"],
+    ("native",), elementwise=True,
+    fuse_step=lambda at: ("scale", at["factor"]),
+    lowering_agnostic=True, attrs=(Attr("factor"),),
+    stream=_POINTWISE))
+
+register(OpDef(
+    "real",
+    lambda a, at, lw, b=None: jnp.real(a[0]),
+    ("native",), lowering_agnostic=True, stream=_POINTWISE))
+
+register(OpDef(
+    "downsample",     # pure data movement: same code every lowering
+    lambda a, at, lw, b=None: a[0][..., ::at["factor"]],
+    ("native",), lowering_agnostic=True, attrs=(Attr("factor"),),
+    stream=StreamRule("time", lambda at, taps: (at["factor"], 1, 0))))
+
+register(OpDef(
+    "frame_decimate",  # keep every factor-th frame (hop on a framed axis)
+    lambda a, at, lw, b=None: a[0][..., ::at["factor"], :],
+    ("native",), lowering_agnostic=True, attrs=(Attr("factor"),),
+    stream=StreamRule("framed", lambda at, taps: (at["factor"], 1, 0))))
+
+register(OpDef(
+    "fused_ew", _impl_fused, ("native", "conv", "pallas"),
+    attrs=(Attr("steps"), Attr("members", ())),
+    tune_space="elementwise", tune_ctx=_ctx_fused, stream=_POINTWISE))
+
+
+# ---------------------------------------------------------------------------
+# derived views
+# ---------------------------------------------------------------------------
+def table_ops() -> list[OpDef]:
+    """OpDefs with a Table-1 registry row (eager + oracle + make_args)."""
+    return [d for d in OPDEFS.values() if d.table_name is not None]
+
+
+def elementwise_ops() -> frozenset[str]:
+    """Op names the fuser may collapse (the ``elementwise`` trait)."""
+    return frozenset(n for n, d in OPDEFS.items() if d.elementwise)
+
+
+__all__ = ["OpDef", "Attr", "StreamRule", "OPDEFS", "REQUIRED",
+           "register", "opdef", "table_ops", "elementwise_ops"]

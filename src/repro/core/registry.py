@@ -1,15 +1,21 @@
-"""TINA op registry: one place that knows every Table-1 mapping, its
-available lowerings, and its oracle — used by tests (sweep everything),
-benchmarks (per-figure op lists), and models (lowering selection).
+"""TINA op registry: the Table-1 view over :mod:`repro.core.opdefs` —
+one row per paper mapping with its eager function, available lowerings,
+and numpy oracle — used by tests (sweep everything), benchmarks
+(per-figure op lists), and models (lowering selection).
+
+Since the OpDef refactor this table is **generated**: every op is
+declared exactly once in ``core/opdefs.py`` (impl + lowerings + oracle
++ tune space + stream rule), and ``REGISTRY`` below is the derived
+eager-path view (OpDefs carrying ``table_name`` + ``eager`` +
+``oracle`` + ``make_args``).  Do not add entries here — declare an
+OpDef instead.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Sequence
 
-import numpy as np
-
-from repro.core import functions, pfb
+from repro.core import opdefs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,94 +29,20 @@ class TinaOp:
     make_args: Callable          # rng, size -> args tuple (for sweeps/benches)
 
 
-def _np_unfold(x, j):
-    n = x.shape[-1]
-    idx = np.arange(n - j + 1)[:, None] + np.arange(j)[None, :]
-    return x[..., idx]
+def _generate() -> dict[str, TinaOp]:
+    out: dict[str, TinaOp] = {}
+    for d in opdefs.table_ops():
+        if d.eager is None or d.oracle is None or d.make_args is None:
+            raise ValueError(
+                f"OpDef {d.name!r} declares table_name={d.table_name!r} "
+                "but is missing eager/oracle/make_args")
+        out[d.table_name] = TinaOp(
+            d.table_name, d.section, d.building_block, d.eager, d.oracle,
+            d.lowerings, d.make_args)
+    return out
 
 
-def _np_fir_valid(x, taps):
-    return np.stack([np.convolve(row, taps, mode="valid")
-                     for row in np.atleast_2d(x)]).reshape(
-        x.shape[:-1] + (x.shape[-1] - taps.shape[0] + 1,))
-
-
-def _np_pfb_frontend(x, taps):
-    m, p = taps.shape
-    frames = x.reshape(x.shape[:-1] + (-1, p))
-    nfr = frames.shape[-2]
-    idx = np.arange(nfr - m + 1)[:, None] + np.arange(m)[None, :]
-    return np.einsum("...tmp,mp->...tp", frames[..., idx, :], taps[::-1, :])
-
-
-def _np_pfb(x, taps):
-    return np.fft.fft(_np_pfb_frontend(x, taps), axis=-1)
-
-
-REGISTRY: dict[str, TinaOp] = {}
-
-
-def _register(op: TinaOp):
-    REGISTRY[op.name] = op
-    return op
-
-
-_register(TinaOp(
-    "elementwise_mult", "3.1", "depthwise conv", functions.elementwise_mult,
-    lambda x, y: x * y, ("native", "conv", "pallas"),
-    lambda rng, n: (rng.standard_normal((n, n), dtype=np.float32),
-                    rng.standard_normal((n, n), dtype=np.float32))))
-
-_register(TinaOp(
-    "elementwise_add", "3.3", "depthwise conv", functions.elementwise_add,
-    lambda x, y: x + y, ("native", "conv", "pallas"),
-    lambda rng, n: (rng.standard_normal((n, n), dtype=np.float32),
-                    rng.standard_normal((n, n), dtype=np.float32))))
-
-_register(TinaOp(
-    "matmul", "3.2", "pointwise conv", functions.matmul,
-    lambda x, y: x @ y, ("native", "conv", "pallas"),
-    lambda rng, n: (rng.standard_normal((n, n), dtype=np.float32),
-                    rng.standard_normal((n, n), dtype=np.float32))))
-
-_register(TinaOp(
-    "summation", "3.4", "fully connected", functions.summation,
-    lambda x: x.sum(-1), ("native",),
-    lambda rng, n: (rng.standard_normal((n * n,), dtype=np.float32),)))
-
-_register(TinaOp(
-    "dft", "4.1", "pointwise conv", functions.dft,
-    lambda x: np.fft.fft(x), ("native", "conv", "pallas"),
-    lambda rng, n: (rng.standard_normal((max(1, n // 8), n), dtype=np.float32),)))
-
-_register(TinaOp(
-    "idft", "4.2", "pointwise conv", functions.idft,
-    lambda z: np.fft.ifft(z), ("native", "conv", "pallas"),
-    lambda rng, n: ((rng.standard_normal((max(1, n // 8), n))
-                     + 1j * rng.standard_normal((max(1, n // 8), n))).astype(np.complex64),)))
-
-_register(TinaOp(
-    "fir", "4.3", "standard conv", functions.fir,
-    _np_fir_valid, ("native", "conv", "pallas"),
-    lambda rng, n: (rng.standard_normal((n * n,), dtype=np.float32),
-                    rng.standard_normal((31,), dtype=np.float32))))
-
-_register(TinaOp(
-    "unfold", "4.4", "standard conv", functions.unfold,
-    _np_unfold, ("native", "conv", "pallas"),
-    lambda rng, n: (rng.standard_normal((n * n,), dtype=np.float32), 16)))
-
-_register(TinaOp(
-    "pfb_frontend", "5.2", "standard conv bank", pfb.pfb_frontend,
-    _np_pfb_frontend, ("native", "conv", "pallas"),
-    lambda rng, n: (rng.standard_normal((n * n,), dtype=np.float32),
-                    pfb.pfb_window(16, 8).astype(np.float32))))
-
-_register(TinaOp(
-    "pfb", "5.2", "conv bank + pointwise conv", pfb.pfb,
-    _np_pfb, ("native", "conv", "pallas"),
-    lambda rng, n: (rng.standard_normal((n * n,), dtype=np.float32),
-                    pfb.pfb_window(16, 8).astype(np.float32))))
+REGISTRY: dict[str, TinaOp] = _generate()
 
 
 def ops(names: Sequence[str] | None = None) -> list[TinaOp]:

@@ -1,13 +1,18 @@
 """TINA pipeline-graph subsystem: composable op graphs compiled into
 cached, autotuned, streamable plans.
 
-  graph.py      declarative graph IR (nodes = TinaOp invocations)
+  core/opdefs.py  (in core) the unified op registry every layer below
+                  derives from — one OpDef per op
+  graph.py      declarative graph IR (nodes = OpDef invocations)
   plan.py       planner: shape specialization, elementwise fusion,
                 lowering selection, memoized jitted plans
-  autotune.py   measurement-based lowering autotuner, on-disk cache
+  autotune.py   measurement-based lowering/config/fusion autotuner,
+                on-disk cache
   stream.py     chunked streaming executor (offline-identical output)
   service.py    batched fixed-shape pipeline serving
-  pipelines.py  built-in workloads (spectrogram, pfb_power, fir_decimate)
+  pipelines.py  built-in workloads (spectrogram, pfb_power,
+                fir_decimate, stft_overlap_add, correlate,
+                cascaded_channelizer)
 
 Quick use::
 
@@ -19,18 +24,22 @@ Quick use::
     sharded = graph.compile(g, {"x": (64, 16384)}, shard="batch")
     # batch axis split across local devices; == unsharded numerics
 """
+from repro.core.opdefs import OPDEFS, OpDef
 from repro.graph import autotune, pipelines, plan, service, stream
 from repro.graph.graph import Graph, Node
-from repro.graph.pipelines import (BUILTINS, build_fir_decimate,
-                                   build_pfb_power, build_spectrogram)
+from repro.graph.pipelines import (BUILTINS, build_cascaded_channelizer,
+                                   build_correlate, build_fir_decimate,
+                                   build_pfb_power, build_spectrogram,
+                                   build_stft_overlap_add)
 from repro.graph.plan import Plan, cache_stats, clear_cache, compile
 from repro.graph.service import PipelineService
 from repro.graph.stream import ChunkedRunner, stream_execute, stream_spec
 
 __all__ = [
-    "Graph", "Node", "Plan", "compile", "cache_stats", "clear_cache",
-    "ChunkedRunner", "stream_execute", "stream_spec", "PipelineService",
-    "BUILTINS", "build_spectrogram", "build_pfb_power",
-    "build_fir_decimate", "autotune", "pipelines", "plan", "service",
-    "stream",
+    "Graph", "Node", "OpDef", "OPDEFS", "Plan", "compile", "cache_stats",
+    "clear_cache", "ChunkedRunner", "stream_execute", "stream_spec",
+    "PipelineService", "BUILTINS", "build_spectrogram", "build_pfb_power",
+    "build_fir_decimate", "build_stft_overlap_add", "build_correlate",
+    "build_cascaded_channelizer", "autotune", "pipelines", "plan",
+    "service", "stream",
 ]

@@ -139,64 +139,27 @@ def node_key(node, in_avals: Sequence[jax.ShapeDtypeStruct],
 
 # ---------------------------------------------------------------------------
 # graph op -> kernel TuneSpace + measurement context
+# Both are read straight off the unified OpDef registry: an op declares
+# its kernel's TuneSpace name (``tune_space``) and the shape-fact
+# extractor (``tune_ctx``) once, in repro.core.opdefs.
 # ---------------------------------------------------------------------------
-_OP_SPACE = {"fir": "fir", "unfold": "unfold", "matmul": "matmul",
-             "dft": "dft", "idft": "dft", "pfb": "pfb",
-             "pfb_frontend": "pfb", "window": "elementwise",
-             "ew_mul": "elementwise", "ew_add": "elementwise",
-             "abs2": "elementwise", "fused_ew": "elementwise"}
-
-
-def _rows(shape) -> int:
-    from repro.kernels import tune
-    return tune.leading_rows(shape)
-
-
 def tune_ctx(node, in_avals: Sequence[jax.ShapeDtypeStruct]) -> dict | None:
     """The shape facts the node's TuneSpace needs (None: nothing tunable)."""
-    op = node.op
-    if op == "fir":
-        x, taps = in_avals[0], in_avals[1]
-        return {"k": int(taps.shape[-1]), "n": int(x.shape[-1]),
-                "rows": _rows(x.shape)}
-    if op == "unfold":
-        x = in_avals[0]
-        return {"j": int(node.attr["window"]), "n": int(x.shape[-1]),
-                "rows": _rows(x.shape)}
-    if op == "matmul":
-        x, y = in_avals[0], in_avals[1]
-        return {"m": _rows(x.shape), "n": int(y.shape[-1]),
-                "k": int(x.shape[-1])}
-    if op in ("dft", "idft"):
-        x = in_avals[0]
-        n = int(x.shape[-1])
-        return {"m": _rows(x.shape), "n": n, "k": n}
-    if op in ("pfb", "pfb_frontend"):
-        x, taps = in_avals[0], in_avals[1]
-        m, p = int(taps.shape[0]), int(taps.shape[1])
-        return {"m": m, "p": p, "t": int(x.shape[-1]) // p}
-    if op in ("window", "ew_mul", "ew_add"):
-        shape = np.broadcast_shapes(in_avals[0].shape, in_avals[1].shape)
-        return {"rows": _rows(shape), "cols": int(shape[-1]), "n_in": 2}
-    if op == "abs2":
-        x = in_avals[0]
-        return {"rows": _rows(x.shape), "cols": int(x.shape[-1]), "n_in": 2}
-    if op == "fused_ew":
-        x = in_avals[0]
-        steps = node.attr["steps"]
-        heads = 2 if (steps and steps[0][0] == "abs2") else 1
-        return {"rows": _rows(x.shape), "cols": int(x.shape[-1]),
-                "n_in": heads + len(in_avals) - 1}
-    return None
+    from repro.core.opdefs import OPDEFS
+    d = OPDEFS.get(node.op)
+    if d is None or d.tune_ctx is None:
+        return None
+    return d.tune_ctx(d.bind(node.attr), list(in_avals))
 
 
 def space_for(op: str):
     """The TuneSpace tuning a graph op's kernel (None: not tunable)."""
-    name = _OP_SPACE.get(op)
-    if name is None:
+    from repro.core.opdefs import OPDEFS
+    d = OPDEFS.get(op)
+    if d is None or d.tune_space is None:
         return None
     from repro.kernels import tune
-    return tune.space(name)
+    return tune.space(d.tune_space)
 
 
 # ---------------------------------------------------------------------------
@@ -282,10 +245,11 @@ def pick(graph, node, avals: dict, *, backend: str = None,
     Honors ``$TINA_AUTOTUNE``: off -> fixed defaults, cached -> cache
     hit or defaults (never measures), on -> measure & persist.
     """
-    from repro.graph.plan import OPS, apply_node
+    from repro.core.opdefs import OPDEFS
+    from repro.graph.plan import apply_node
 
     backend = backend or jax.default_backend()
-    supported = OPS[node.op].lowerings
+    supported = OPDEFS[node.op].lowerings
     restrict = lowerings if lowerings is not None else candidates
     cands = [c for c in (restrict or supported) if c in supported]
     if not cands:
@@ -417,6 +381,83 @@ def pick_lowering(graph, node, avals: dict, *, backend: str = None,
                 tune_configs=False, repeats=repeats, path=path)[0]
 
 
+# a chain must be decisively faster unfused to override the fused
+# default — the same hysteresis idea as PLAYOFF_MARGIN: a marginal
+# "win" that is really noise must not flap plans between shapes
+FUSION_MARGIN = 0.97
+
+
+def pick_fusion(graph, run, avals: dict, *, backend: str = None,
+                lowering: str = "native", repeats: int = 3,
+                path: str | None = None, **_ignored) -> bool:
+    """Should this elementwise ``run`` (a list of adjacent nodes the
+    fuser wants to collapse) actually be fused?  Measured verdicts
+    persist in the v2 cache like lowering winners, so the fuse-vs-not
+    decision is paid once per (chain, shapes, lowering, backend).
+
+    ``TINA_AUTOTUNE=on`` measures the fused node against the sequential
+    member chain (both jitted whole) and persists the verdict;
+    ``cached`` replays a persisted verdict or keeps the fused default;
+    ``off`` always fuses (the historical unconditional behavior).
+    """
+    from repro.graph.plan import apply_node, run_to_steps
+
+    backend = backend or jax.default_backend()
+    steps, operand_refs = run_to_steps(run)
+    data_in = run[0].inputs[0]
+    in_avals = [avals[data_in]] + [avals[o] for o in operand_refs]
+    shapes = ",".join(f"{tuple(a.shape)}:{a.dtype}" for a in in_avals)
+    chain = "+".join(f"{s[0]}" for s in steps)
+    key = f"fusion|{chain}|{shapes}|{lowering}|{backend}"
+
+    m = mode()
+    if m == "off":
+        return True
+    path = path or cache_path()
+    cache = _load(path)
+    hit = cache.get(key)
+    if hit is not None and "fused" in hit:
+        _STATS["cache_hits"] += 1
+        return bool(hit["fused"])
+    if m == "cached":
+        return True
+
+    _STATS["measured"] += 1
+    from repro.graph.graph import Node
+    probe = Node("_fusion_probe", "fused_ew",
+                 (data_in, *operand_refs),
+                 (("members", tuple(n.name for n in run)),
+                  ("steps", steps)))
+    args = [_dummy(a) for a in in_avals]
+
+    fused_fn = jax.jit(lambda *a: apply_node(probe, a, lowering))
+
+    def unfused(*a):
+        acc = a[0]
+        k = 1
+        for n, step in zip(run, steps):
+            if step[0] in ("mul", "add"):     # binary: consumes an operand
+                acc = apply_node(n, (acc, a[k]), lowering)
+                k += 1
+            else:                             # abs2 / scale: unary
+                acc = apply_node(n, (acc,), lowering)
+        return acc
+    unfused_fn = jax.jit(unfused)
+
+    t_fused = measure(fused_fn, args, repeats=repeats)
+    t_unfused = measure(unfused_fn, args, repeats=repeats,
+                        prune_above=t_fused)
+    fused = not (np.isfinite(t_unfused)
+                 and t_unfused < FUSION_MARGIN * t_fused)
+    cache[key] = {"fused": fused, "lowering": lowering, "backend": backend,
+                  "times_us": {k: round(v * 1e6, 1)
+                               for k, v in (("fused", t_fused),
+                                            ("unfused", t_unfused))
+                               if np.isfinite(v)}}
+    _save(path, cache)
+    return fused
+
+
 # ---------------------------------------------------------------------------
 # CLI: tune a built-in pipeline and verify the cache roundtrip
 # ---------------------------------------------------------------------------
@@ -437,6 +478,9 @@ def main(argv=None):
                     choices=sorted(p.name for p in pipelines()))
     ap.add_argument("--n", type=int, default=512)
     ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--tune-fusion", action="store_true",
+                    help="also measure fused-vs-unfused per elementwise "
+                         "chain (fuse='auto') and persist the verdicts")
     args = ap.parse_args(argv)
 
     if at.mode() != "on":
@@ -445,7 +489,9 @@ def main(argv=None):
     spec = PIPELINES[args.pipeline]
     g = spec.build()
     n = spec.valid_len(args.n)
+    fuse = "auto" if args.tune_fusion else True
     plan = plan_lib.compile(g, {g.inputs[0]: (n,)}, lowering="auto",
+                            fuse=fuse,
                             autotune_kwargs={"repeats": args.repeats})
     print(f"[autotune] {args.pipeline} @ n={n} "
           f"(cache: {at.cache_path()}, mode: {at.mode()})")
@@ -461,6 +507,7 @@ def main(argv=None):
     plan_lib.clear_cache()
     before = at.stats()["measured"]
     plan2 = plan_lib.compile(g, {g.inputs[0]: (n,)}, lowering="auto",
+                             fuse=fuse,
                              autotune_kwargs={"repeats": args.repeats})
     after = at.stats()["measured"]
     ok = (after == before and plan2.lowerings == plan.lowerings
@@ -475,5 +522,5 @@ if __name__ == "__main__":
     main()
 
 
-__all__ = ["pick", "pick_lowering", "measure", "node_key", "tune_ctx",
-           "space_for", "cache_path", "mode", "stats", "main"]
+__all__ = ["pick", "pick_lowering", "pick_fusion", "measure", "node_key",
+           "tune_ctx", "space_for", "cache_path", "mode", "stats", "main"]

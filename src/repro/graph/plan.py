@@ -6,11 +6,21 @@ nodes, pick each node's lowering, and memoize the compiled jitted plan.
 second identical call is a pure dict lookup — no retrace (asserted in
 tests via ``Plan.trace_count``).
 
+Op catalog: the planner declares NO ops of its own — every node's
+implementation, supported lowerings, attr schema, and fusion trait come
+from the unified :mod:`repro.core.opdefs` registry (:data:`OPS` below
+*is* ``opdefs.OPDEFS``).  Adding an op means declaring one OpDef there;
+the planner, fuser, autotuner, and streaming executor all derive from
+it.
+
 Lowering selection: ``lowering=`` may be a single name applied to every
-node (nodes that don't support it fall back to ``native``), a per-node
-dict, or ``"auto"`` — the measurement-based autotuner of
-:mod:`repro.graph.autotune`, which times each candidate on the node's
-actual shapes and persists the winner to an on-disk cache.
+node, a per-node dict, or ``"auto"`` — the measurement-based autotuner
+of :mod:`repro.graph.autotune`, which times each candidate on the
+node's actual shapes and persists the winner to an on-disk cache.
+Nodes that don't support the requested lowering run ``native`` — the
+substitution is **recorded** on ``Plan.node_lowerings`` /
+``Plan.downgrades`` and warned once per graph, so a
+requested-pallas-got-native plan is visible instead of silently slow.
 
 Block-config selection: ``block_configs=`` picks the Pallas block sizes
 each node's kernel runs with — ``None`` (kernel defaults), ``"auto"``
@@ -21,10 +31,14 @@ searches lowerings and configs *jointly*, so the plan is not just "the
 fastest lowering" but "the fastest tiling of the fastest lowering".
 
 Fusion: maximal runs of adjacent single-consumer elementwise nodes
-(``window``/``ew_mul``/``ew_add``/``abs2``/``scale``) collapse into one
+(the OpDefs carrying the ``elementwise`` trait) collapse into one
 ``fused_ew`` node — executed as a single jnp expression (native), a
 sequential paper-faithful chain (conv), or ONE Pallas kernel launch via
-:func:`repro.kernels.ops.fused_elementwise` (pallas).
+:func:`repro.kernels.ops.fused_elementwise` (pallas).  ``fuse=True``
+fuses unconditionally (the historical default); ``fuse="auto"`` lets
+the autotuner measure fused vs unfused per chain and persist the
+verdict (``TINA_AUTOTUNE=on``; ``cached`` reads prior verdicts,
+``off``/cold-cache keeps the fused default).
 
 Mesh sharding: ``compile(..., mesh=...)`` (or ``shard="batch"``) places
 the plan's batch axis — the leading dim of every graph input — across a
@@ -41,8 +55,8 @@ so *global* bitwise equality is not something the hardware guarantees).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Sequence
+import warnings
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -51,154 +65,28 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
-from repro.core import functions, pfb
+from repro.core.opdefs import OPDEFS
 from repro.graph.graph import Graph, Node
 
-
-# ---------------------------------------------------------------------------
-# Op catalog: implementation + supported lowerings per op.
-# Implementations take (args, attrs, lowering, block) and must accept
-# leading batch dims the way repro.core.functions does.  ``block`` is the
-# node's Pallas block-size config ({} / None = kernel defaults); non-
-# pallas lowerings ignore it.
-# ---------------------------------------------------------------------------
-def _kops():
-    from repro.kernels import ops
-    return ops
-
-
-def _ew_binary(fn_conv, fn_native):
-    def impl(args, attrs, lowering, block=None):
-        x, y = args
-        if lowering == "native" or x.ndim < 2:
-            return fn_native(x, jnp.broadcast_to(y, x.shape))
-        yb = jnp.broadcast_to(y, x.shape)
-        return fn_conv(x, yb, lowering=lowering, block=block)
-    return impl
-
-
-def _impl_abs2(args, attrs, lowering, block=None):
-    (x,) = args
-    re, im = jnp.real(x), jnp.imag(x)
-    if lowering == "pallas":
-        return _kops().abs2(x, **(block or {}))
-    if lowering == "conv" and re.ndim >= 2:
-        return functions.elementwise_add(
-            functions.elementwise_mult(re, re, lowering="conv"),
-            functions.elementwise_mult(im, im, lowering="conv"),
-            lowering="conv")
-    return re * re + im * im
-
-
-def _impl_fused(args, attrs, lowering, block=None):
-    x, operands = args[0], tuple(args[1:])
-    steps = attrs["steps"]
-    if lowering == "pallas":
-        return _kops().fused_elementwise(x, operands, steps,
-                                         **(block or {}))
-    k = 0
-    acc = x
-    for step in steps:
-        tag = step[0]
-        if tag == "abs2":
-            acc = _impl_abs2((acc,), {}, lowering)
-        elif tag in ("mul", "add"):
-            op = (functions.elementwise_mult if tag == "mul"
-                  else functions.elementwise_add)
-            o = jnp.broadcast_to(operands[k], acc.shape)
-            k += 1
-            if lowering == "conv" and acc.ndim >= 2:
-                acc = op(acc, o, lowering="conv")
-            else:
-                acc = acc * o if tag == "mul" else acc + o
-        elif tag == "scale":
-            acc = acc * step[1]
-        else:
-            raise ValueError(f"unknown fused step {tag!r}")
-    return acc
-
-
-@dataclasses.dataclass(frozen=True)
-class OpSpec:
-    impl: Callable                 # (args, attrs, lowering, block) -> Array
-    lowerings: tuple[str, ...]     # lowerings with a distinct code path
-    elementwise: bool = False      # eligible for the fusion pass
-
-
-OPS: dict[str, OpSpec] = {
-    "unfold": OpSpec(
-        lambda a, at, lw, b=None: functions.unfold(
-            a[0], at["window"], lowering=lw, block=b),
-        ("native", "conv", "pallas")),
-    "fir": OpSpec(
-        lambda a, at, lw, b=None: functions.fir(
-            a[0], a[1], mode=at.get("mode", "valid"), lowering=lw, block=b),
-        ("native", "conv", "pallas")),
-    "dft": OpSpec(
-        lambda a, at, lw, b=None: functions.dft(
-            a[0], lowering=lw, variant=at.get("variant", "4mult"), block=b),
-        ("native", "conv", "pallas")),
-    "idft": OpSpec(
-        lambda a, at, lw, b=None: functions.idft(
-            a[0], lowering=lw, variant=at.get("variant", "4mult"), block=b),
-        ("native", "conv", "pallas")),
-    "matmul": OpSpec(
-        lambda a, at, lw, b=None: functions.matmul(a[0], a[1], lowering=lw,
-                                                   block=b),
-        ("native", "conv", "pallas")),
-    "summation": OpSpec(
-        lambda a, at, lw, b=None: functions.summation(a[0], lowering=lw),
-        ("native",)),
-    "pfb_frontend": OpSpec(
-        lambda a, at, lw, b=None: pfb.pfb_frontend(a[0], a[1], lowering=lw,
-                                                   block=b),
-        ("native", "conv", "pallas")),
-    "pfb": OpSpec(
-        lambda a, at, lw, b=None: pfb.pfb(
-            a[0], a[1], lowering=lw, variant=at.get("variant", "4mult"),
-            block=b),
-        ("native", "conv", "pallas")),
-    # glue primitives ------------------------------------------------------
-    "window": OpSpec(        # multiply by a const vector along the last axis
-        _ew_binary(functions.elementwise_mult, jnp.multiply),
-        ("native", "conv", "pallas"), elementwise=True),
-    "ew_mul": OpSpec(
-        _ew_binary(functions.elementwise_mult, jnp.multiply),
-        ("native", "conv", "pallas"), elementwise=True),
-    "ew_add": OpSpec(
-        _ew_binary(functions.elementwise_add, jnp.add),
-        ("native", "conv", "pallas"), elementwise=True),
-    "abs2": OpSpec(_impl_abs2, ("native", "conv", "pallas"),
-                   elementwise=True),
-    "scale": OpSpec(
-        lambda a, at, lw, b=None: a[0] * at["factor"],
-        ("native",), elementwise=True),
-    "downsample":  OpSpec(   # pure data movement: same code every lowering
-        lambda a, at, lw, b=None: a[0][..., :: at["factor"]],
-        ("native",)),
-    "fused_ew": OpSpec(_impl_fused, ("native", "conv", "pallas")),
-}
-
-# ``window``/``ew_mul`` resolve to pallas via the generic broadcast path;
-# map their pallas lowering onto the kernels.ops entry points explicitly.
-def _pallas_mul(args, attrs, block=None):
-    return _kops().elementwise_mult(args[0], args[1], **(block or {}))
-
-
-def _pallas_add(args, attrs, block=None):
-    return _kops().elementwise_add(args[0], args[1], **(block or {}))
+# The op catalog IS the unified OpDef registry — kept under the name the
+# rest of the codebase historically imported from here.
+OPS = OPDEFS
 
 
 def apply_node(node: Node, args: Sequence[jax.Array], lowering: str,
                block: dict | None = None):
-    spec = OPS[node.op]
-    if lowering not in spec.lowerings:
+    """Execute one graph node through its OpDef.
+
+    An unsupported ``lowering`` falls back to native *here* for the
+    eager callers (shape inference, per-op benchmarks, the tuner's
+    candidate probes); the planner resolves effective lowerings ahead
+    of time and records the substitution on the plan instead of relying
+    on this fallback.
+    """
+    d = OPS[node.op]
+    if lowering not in d.lowerings:
         lowering = "native"
-    if lowering == "pallas" and node.op in ("window", "ew_mul"):
-        return _pallas_mul(args, node.attr, block)
-    if lowering == "pallas" and node.op == "ew_add":
-        return _pallas_add(args, node.attr, block)
-    return spec.impl(list(args), node.attr, lowering, block)
+    return d.impl(list(args), d.bind(node.attr), lowering, block)
 
 
 # ---------------------------------------------------------------------------
@@ -249,17 +137,58 @@ def infer(graph: Graph, input_specs: dict[str, jax.ShapeDtypeStruct]
 # ---------------------------------------------------------------------------
 # Elementwise fusion pass
 # ---------------------------------------------------------------------------
+def _step_of(node: Node) -> tuple | None:
+    """The node's fused-chain step, from its OpDef's ``fuse_step``
+    (None: the op cannot be expressed as a chain step)."""
+    d = OPS.get(node.op)
+    if d is None or not d.elementwise or d.fuse_step is None:
+        return None
+    return d.fuse_step(d.bind(node.attr))
+
+
+def run_to_steps(run: Sequence[Node]) -> tuple[tuple, tuple[str, ...]]:
+    """A run of elementwise nodes -> (fused steps, operand node names).
+
+    Steps come from each OpDef's declared ``fuse_step``; tags
+    ``"mul"``/``"add"`` consume the node's second input as a chain
+    operand.  Shared by the fuser below and the fusion autotuner
+    (:func:`repro.graph.autotune.pick_fusion`), so both describe a
+    chain the same way.
+    """
+    steps: list[tuple] = []
+    operands: list[str] = []
+    for n in run:
+        step = _step_of(n)
+        if step is None:
+            raise ValueError(f"unfusable op {n.op!r} in run")
+        steps.append(step)
+        if step[0] in ("mul", "add"):
+            operands.append(n.inputs[1])
+    return tuple(steps), tuple(operands)
+
+
 def fuse_elementwise(graph: Graph,
-                     avals: dict[str, jax.ShapeDtypeStruct]) -> Graph:
+                     avals: dict[str, jax.ShapeDtypeStruct],
+                     keep: Callable[[list[Node]], bool] | None = None
+                     ) -> Graph:
     """Collapse maximal runs of adjacent single-consumer elementwise
-    nodes into ``fused_ew`` nodes.  A complex-input elementwise node only
-    joins as an ``abs2`` run head (the Pallas chain kernel is real)."""
+    nodes (OpDefs with the ``elementwise`` trait) into ``fused_ew``
+    nodes.  A complex-input elementwise node only joins as an ``abs2``
+    run head (the Pallas chain kernel is real).  ``keep`` filters the
+    candidate runs (the fusion autotuner's hook): a run it rejects
+    stays unfused."""
     consumers = graph.consumers()
 
+    def _is_abs2(node: Node) -> bool:
+        step = _step_of(node)
+        return step is not None and step[0] == "abs2"
+
     def fusable(node: Node) -> bool:
-        if node.op not in OPS or not OPS[node.op].elementwise:
+        # the trait alone is not enough: the op must also express
+        # itself as a chain step the fused kernel understands
+        if _step_of(node) is None:
             return False
-        if node.op != "abs2" and any(
+        if not _is_abs2(node) and any(
                 np.issubdtype(avals[i].dtype, np.complexfloating)
                 for i in node.inputs if graph.nodes[i].op != "const"):
             return False
@@ -272,7 +201,7 @@ def fuse_elementwise(graph: Graph,
         if not fusable(node):
             continue
         prev = node.inputs[0] if node.inputs else None
-        if (prev in run_of and node.op != "abs2"
+        if (prev in run_of and not _is_abs2(node)
                 and len(consumers[prev]) == 1
                 and prev not in graph.outputs):
             idx = run_of[prev]
@@ -282,6 +211,8 @@ def fuse_elementwise(graph: Graph,
             run_of[node.name] = len(runs)
             runs.append([node])
     runs = [r for r in runs if len(r) >= 2]
+    if keep is not None:
+        runs = [r for r in runs if keep(r)]
     if not runs:
         return graph
 
@@ -303,24 +234,13 @@ def fuse_elementwise(graph: Graph,
             continue                       # non-tail member: folded away
         if node.name in tail_of:
             run = tail_of[node.name]
-            steps: list[tuple] = []
-            operands: list[str] = []
+            steps, operand_refs = run_to_steps(run)
             data_in = resolve(run[0].inputs[0])
-            for n in run:
-                if n.op in ("window", "ew_mul"):
-                    steps.append(("mul",))
-                    operands.append(resolve(n.inputs[1]))
-                elif n.op == "ew_add":
-                    steps.append(("add",))
-                    operands.append(resolve(n.inputs[1]))
-                elif n.op == "abs2":
-                    steps.append(("abs2",))
-                elif n.op == "scale":
-                    steps.append(("scale", n.attr["factor"]))
+            operands = [resolve(o) for o in operand_refs]
             fname = f"fused_{run[0].name}"
             members = tuple(n.name for n in run)
             out._add(Node(fname, "fused_ew", (data_in, *operands),
-                          (("members", members), ("steps", tuple(steps)))))
+                          (("members", members), ("steps", steps))))
             renamed[node.name] = fname     # run tail -> fused node
         elif node.op == "input":
             out.inputs.append(node.name)
@@ -340,15 +260,26 @@ def fuse_elementwise(graph: Graph,
 class Plan:
     graph: Graph                  # post-fusion graph the plan executes
     input_names: tuple[str, ...]
-    lowerings: dict[str, str]     # node name -> chosen lowering
+    lowerings: dict[str, str]     # node name -> effective lowering
     key: tuple
     configs: dict[str, dict] = dataclasses.field(default_factory=dict)
     # node name -> chosen Pallas block config ({} = kernel defaults)
+    downgrades: dict[str, str] = dataclasses.field(default_factory=dict)
+    # node name -> the *requested* lowering the node couldn't honor
+    # (its effective entry in ``lowerings`` is what actually runs)
     mesh: Mesh | None = None      # device mesh of a sharded plan
     batch_axis: str | None = None  # mesh axis carrying the batch dim
     input_shardings: tuple = ()   # NamedSharding per input (sharded plans)
     _fn: Callable = None
     _traces: list = dataclasses.field(default_factory=list)
+
+    @property
+    def node_lowerings(self) -> dict[str, str]:
+        """Effective per-node lowerings (what each node actually runs —
+        requested lowerings a node doesn't support appear as ``native``
+        here and in :attr:`downgrades`).  The same mapping as
+        :attr:`lowerings`; treat it as read-only."""
+        return self.lowerings
 
     @property
     def trace_count(self) -> int:
@@ -373,6 +304,7 @@ class Plan:
 
 _CACHE: dict[tuple, Plan] = {}
 _STATS = {"hits": 0, "misses": 0}
+_WARNED_DOWNGRADES: set[tuple] = set()
 
 
 def cache_stats() -> dict:
@@ -382,6 +314,24 @@ def cache_stats() -> dict:
 def clear_cache() -> None:
     _CACHE.clear()
     _STATS.update(hits=0, misses=0)
+
+
+def _warn_downgrades(graph: Graph, downgrades: dict[str, str]) -> None:
+    """Surface requested-but-unsupported lowerings, once per (graph,
+    downgrade set) — a requested-pallas-got-native plan must be visible
+    instead of silently slow."""
+    key = (graph.name, tuple(sorted(downgrades.items())))
+    if key in _WARNED_DOWNGRADES:
+        return
+    _WARNED_DOWNGRADES.add(key)
+    detail = ", ".join(
+        f"{name} ({OPS[graph.nodes[name].op].name}: requested {req!r}, "
+        f"supports {'/'.join(OPS[graph.nodes[name].op].lowerings)})"
+        for name, req in sorted(downgrades.items()))
+    warnings.warn(
+        f"plan for {graph.name!r}: {len(downgrades)} node(s) fell back to "
+        f"lowering='native': {detail}; see Plan.downgrades / "
+        "Plan.node_lowerings", stacklevel=3)
 
 
 def _norm_mesh(mesh, shard) -> tuple[Mesh | None, str | None]:
@@ -431,20 +381,27 @@ def _norm_specs(graph: Graph, shapes, dtype) -> dict[str, jax.ShapeDtypeStruct]:
 
 
 def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
-            lowering="native", block_configs=None, fuse: bool = True,
+            lowering="native", block_configs=None, fuse=True,
             mesh=None, shard: str | None = None,
             autotune_kwargs: dict | None = None) -> Plan:
     """Compile ``graph`` for the given input shapes; memoized.
 
     ``lowering``: a lowering name for every node (unsupported nodes fall
-    back to native), a {node: lowering} dict, or ``"auto"`` to let the
-    measurement-based autotuner choose per node.
+    back to native — recorded on ``Plan.downgrades`` and warned once), a
+    {node: lowering} dict, or ``"auto"`` to let the measurement-based
+    autotuner choose per node.
 
     ``block_configs``: Pallas block sizes per node — ``None`` (kernel
     defaults; with ``lowering="auto"`` the autotuner picks them jointly
     with the lowering), ``"auto"`` (tune configs for whatever lowering
     each node ends up with), or a ``{node: {param: int}}`` dict
     (post-fusion node names; explicit entries win over tuned ones).
+
+    ``fuse``: ``True`` fuses elementwise chains unconditionally,
+    ``False`` never fuses, ``"auto"`` asks the autotuner to measure
+    fused vs unfused per chain (``TINA_AUTOTUNE=on`` measures and
+    persists the verdict; ``cached`` replays it; ``off`` keeps the
+    fused default).
 
     ``mesh`` / ``shard``: ``mesh=`` (a Mesh or a device count) shards
     the batch axis — the leading dim of every input — across the mesh's
@@ -483,7 +440,7 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
                             for n, c in block_configs.items()))
                if isinstance(block_configs, dict) else block_configs)
     tune_key = None
-    if lowering == "auto" or block_configs == "auto":
+    if lowering == "auto" or block_configs == "auto" or fuse == "auto":
         # tuned selections depend on the autotune mode, the cache file
         # (path AND content — another process tuning entries must reach
         # plans compiled after its write, hence the mtime), and the
@@ -502,9 +459,15 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
     _STATS["misses"] += 1
 
     for node in graph.topo():
-        if node.op not in ("input", "const") and node.op not in OPS:
+        if node.op in ("input", "const"):
+            continue
+        if node.op not in OPS:
             raise ValueError(f"{node.name}: unknown op {node.op!r}; "
                              f"known ops: {sorted(OPS)}")
+        try:
+            OPS[node.op].bind(node.attr)
+        except ValueError as e:
+            raise ValueError(f"{node.name}: {e}") from None
     # sharded plans trace/fuse/tune on the per-shard problem: the body
     # runs under shard_map, so that's what each device actually executes
     body_specs = specs
@@ -514,13 +477,49 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
                                     + tuple(s.shape[1:]), s.dtype)
             for n, s in specs.items()}
     avals = infer(graph, body_specs)
-    g = fuse_elementwise(graph, avals) if fuse else graph
+    if fuse == "auto":
+        from repro.graph import autotune
+        if isinstance(lowering, str) and lowering in ("native", "conv",
+                                                      "pallas"):
+            probe_lw = lowering
+        else:
+            # auto / per-node requests: measure the verdict where it is
+            # consequential — the pallas chain kernel (one launch) vs
+            # per-member kernels.  Fused-vs-unfused native is the same
+            # XLA fusion either way, so a native probe would answer a
+            # question the autotuned plan never asks.
+            probe_lw = "pallas"
+        g = fuse_elementwise(
+            graph, avals,
+            keep=lambda run: autotune.pick_fusion(
+                graph, run, avals, backend=backend, lowering=probe_lw,
+                **(autotune_kwargs or {})))
+    elif fuse:
+        g = fuse_elementwise(graph, avals)
+    else:
+        g = graph
     if g is not graph:
         avals = infer(g, body_specs)
 
     lowerings: dict[str, str] = {}
     configs: dict[str, dict] = {}
+    downgrades: dict[str, str] = {}
     compute = [n for n in g.topo() if n.op not in ("input", "const")]
+
+    def resolve(node: Node, requested: str | None) -> None:
+        """Record the node's effective lowering (+ the downgrade when
+        the request can't be honored).  Lowering-agnostic ops (pure
+        data movement — one code path whatever the lowering) satisfy
+        any request with native and are not downgrades."""
+        if requested is None:
+            lowerings[node.name] = "native"
+        elif requested in OPS[node.op].lowerings:
+            lowerings[node.name] = requested
+        else:
+            lowerings[node.name] = "native"
+            if requested != "native" and not OPS[node.op].lowering_agnostic:
+                downgrades[node.name] = requested
+
     if lowering == "auto":
         from repro.graph import autotune
         for node in compute:
@@ -531,19 +530,20 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
     elif isinstance(lowering, dict):
         for node in compute:
             if node.name in lowering:
-                lowerings[node.name] = lowering[node.name]
+                resolve(node, lowering[node.name])
             elif node.op == "fused_ew":
                 # fusion renamed the member nodes: honor their requested
                 # lowering when the members agree, else fall back
                 req = {lowering[m] for m in node.attr.get("members", ())
                        if m in lowering}
-                lowerings[node.name] = req.pop() if len(req) == 1 else "native"
+                resolve(node, req.pop() if len(req) == 1 else None)
             else:
-                lowerings[node.name] = "native"
+                resolve(node, None)
     else:
         for node in compute:
-            lowerings[node.name] = (
-                lowering if lowering in OPS[node.op].lowerings else "native")
+            resolve(node, lowering)
+    if downgrades:
+        _warn_downgrades(g, downgrades)
 
     if block_configs == "auto" and lowering != "auto":
         # tune block configs for the already-chosen lowerings
@@ -566,7 +566,8 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
                            tune_key[3]),)
 
     plan = Plan(graph=g, input_names=tuple(g.inputs), lowerings=lowerings,
-                key=key, configs=configs, mesh=mesh, batch_axis=batch_axis)
+                key=key, configs=configs, downgrades=downgrades,
+                mesh=mesh, batch_axis=batch_axis)
 
     def raw(*arrays):
         plan._traces.append(1)      # side effect fires only while tracing
@@ -590,5 +591,5 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
     return plan
 
 
-__all__ = ["OPS", "OpSpec", "Plan", "apply_node", "compile", "infer",
-           "fuse_elementwise", "cache_stats", "clear_cache"]
+__all__ = ["OPS", "Plan", "apply_node", "compile", "infer",
+           "fuse_elementwise", "run_to_steps", "cache_stats", "clear_cache"]

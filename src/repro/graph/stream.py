@@ -3,16 +3,21 @@ bounded memory, with chunked output identical to offline whole-signal
 execution.
 
 Overlap-carry scheme: every streamable op advertises how it maps the
-streamed (time) axis —
+streamed (time) axis via the :class:`~repro.core.opdefs.StreamRule` on
+its OpDef —
 
   * ``block``      input samples consumed per output step (stride)
   * ``receptive``  input samples contributing to one output step
   * ``tail``       trailing axes the op appends after the time axis
                    (unfold/pfb emit (time, J|P) frames)
 
-These compose down the chain exactly like conv stride/kernel arithmetic
-(``R += (r-1)·B; B *= b``), giving the whole pipeline's receptive field
-R and stride B in *input* samples.  The runner keeps the last < R
+"time" rules spend these on the raw sample axis; "framed" rules
+(frame_decimate's hop, overlap_add's K-frame reach) spend them on the
+frame axis after an unfold/pfb — in both cases they compose down the
+chain exactly like conv stride/kernel arithmetic (``R += (r-1)·B;
+B *= b``), giving the whole pipeline's receptive field R and stride B
+in *input* samples.  An overlap_add re-synthesizes the time axis
+(tail -= 1), emitting ``hop`` samples per step.  The runner keeps the last < R
 unconsumed samples as carry; each push runs the compiled plan on the
 longest prefix that yields whole output steps.  Every emitted step is
 computed from exactly the same input window the offline run uses, so
@@ -41,13 +46,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.opdefs import OPDEFS
 from repro.graph import plan as plan_lib
 from repro.graph.graph import Graph, Node
 
-# op classes along the streamed axis ----------------------------------------
-_POINTWISE = {"window", "ew_mul", "ew_add", "abs2", "scale", "fused_ew"}
-_FRAME_ONLY = {"dft", "idft", "matmul"}      # mix the last axis: need frames
-_TIME_OPS = {"unfold", "fir", "pfb", "pfb_frontend", "downsample"}
+# Op streaming behavior comes from each OpDef's StreamRule
+# (repro.core.opdefs): "pointwise" ops pass through, "frame" ops need a
+# framed axis, "time"/"framed" ops declare (block, receptive,
+# tail_delta) on the sample/frame axis respectively — declared once per
+# op, composed here.
 
 
 def _taps_shape(graph: Graph, node: Node) -> tuple:
@@ -56,23 +63,6 @@ def _taps_shape(graph: Graph, node: Node) -> tuple:
         raise ValueError(
             f"streaming requires const taps for {node.name} ({node.op})")
     return graph.consts[ref].shape
-
-
-def _op_spec(graph: Graph, node: Node) -> tuple[int, int, int]:
-    """(block, receptive, tail_added) for one node."""
-    at = node.attr
-    if node.op == "unfold":
-        return 1, at["window"], 1
-    if node.op == "fir":
-        if at.get("mode", "valid") != "valid":
-            raise ValueError("streaming fir supports mode='valid' only")
-        return 1, _taps_shape(graph, node)[-1], 0
-    if node.op in ("pfb", "pfb_frontend"):
-        m, p = _taps_shape(graph, node)
-        return p, m * p, 1
-    if node.op == "downsample":
-        return at["factor"], 1, 0
-    return 1, 1, 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,28 +86,43 @@ def stream_spec(graph: Graph) -> PipeStreamSpec:
         raise ValueError("streaming supports single-output graphs")
     streamed = {graph.inputs[0]}
     b_total, r_total, tail = 1, 1, 0
+    deframed = False      # an overlap_add ran: steps are now multi-sample
     for node in graph.topo():
         hot = [i for i in node.inputs if i in streamed]
         if not hot:
             continue
-        if len(hot) > 1 and node.op not in _POINTWISE:
+        d = OPDEFS.get(node.op)
+        rule = d.stream if d is not None else None
+        if rule is None:
+            raise ValueError(f"{node.name} ({node.op}) is not streamable")
+        if len(hot) > 1 and rule.kind != "pointwise":
             raise ValueError(f"{node.name}: multiple streamed inputs")
-        if node.op in _TIME_OPS:
-            if tail:
+        if rule.kind in ("time", "framed"):
+            if rule.kind == "time" and tail:
                 raise ValueError(
                     f"{node.name} ({node.op}) reads the time axis, but an "
                     "upstream op already framed it")
-            b, r, dt = _op_spec(graph, node)
+            if rule.kind == "time" and deframed:
+                raise ValueError(
+                    f"{node.name} ({node.op}) reads the time axis after an "
+                    "overlap-add re-synthesized it (multi-sample steps); "
+                    "not streamable")
+            if rule.kind == "framed" and not tail:
+                raise ValueError(
+                    f"{node.name} ({node.op}) consumes the frame axis; "
+                    "insert an unfold/pfb first")
+            taps = (_taps_shape(graph, node) if rule.needs_taps else None)
+            b, r, dt = rule.spec(d.bind(node.attr), taps)
             r_total += (r - 1) * b_total
             b_total *= b
             tail += dt
-        elif node.op in _FRAME_ONLY:
+            if dt < 0:
+                deframed = True
+        elif rule.kind == "frame":
             if not tail:
                 raise ValueError(
                     f"{node.name} ({node.op}) mixes the streamed axis; "
                     "insert an unfold/pfb first")
-        elif node.op not in _POINTWISE:
-            raise ValueError(f"{node.name} ({node.op}) is not streamable")
         streamed.add(node.name)
     if graph.outputs[0] not in streamed:
         raise ValueError("output does not depend on the stream input")

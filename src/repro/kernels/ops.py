@@ -13,6 +13,12 @@ boundary — an invalid config (e.g. FIR taps exceeding the halo block)
 raises ValueError instead of tripping a mid-trace kernel assert.  The
 graph autotuner (:mod:`repro.graph.autotune`) searches these same
 spaces and threads its winners back through these kwargs.
+
+Graph-level wiring lives in :mod:`repro.core.opdefs`: each op's OpDef
+names the TuneSpace these wrappers validate against (``tune_space=``)
+and how its pallas lowering reaches this module — a new kernel plugs
+into the planner/autotuner by declaring those two fields on its OpDef,
+not by editing the graph layers.
 """
 from __future__ import annotations
 

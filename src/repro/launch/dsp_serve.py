@@ -14,6 +14,14 @@ Mesh serving: ``--mesh N`` shards every batch across N devices (batch
 must divide evenly); ``--devices N`` forces the host platform to expose
 N virtual devices (CPU dev boxes / CI — set before jax initializes, so
 it must be a flag here, not an afterthought env var).
+
+Deploy-time cache pre-warm: ``--prewarm`` runs the measurement-based
+autotuner for the exact serving shape ``(batch, signal_len)`` *before*
+the service accepts traffic, regardless of the ambient
+``TINA_AUTOTUNE`` mode — so a production launch with
+``TINA_AUTOTUNE=cached`` still serves tuned kernels: the pre-warm pass
+persists winners to the on-disk cache and the (cached-mode) service
+plan compiles against them.
 """
 from __future__ import annotations
 
@@ -46,7 +54,47 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--check", type=int, default=4,
                     help="responses to validate against the numpy oracle")
+    ap.add_argument("--prewarm", action="store_true",
+                    help="run the autotuner for the serving shape "
+                         "(batch, signal_len) before accepting traffic, "
+                         "persisting winners to the tuning cache — the "
+                         "deploy-time pre-warm for TINA_AUTOTUNE=cached "
+                         "production serving")
+    ap.add_argument("--tune-repeats", type=int, default=2,
+                    help="per-candidate repeats inside the pre-warm "
+                         "autotune pass")
     return ap
+
+
+def prewarm(graph_obj, batch: int, signal_len: int, *, lowering: str,
+            mesh=None, repeats: int = 2) -> dict:
+    """Measure-and-persist autotune entries for the serving shape.
+
+    Temporarily forces ``TINA_AUTOTUNE=on`` (the whole point is to
+    measure ahead of traffic even when serving runs ``cached``),
+    compiles the serving-shaped plan with the tuner engaged, and
+    returns the tuner's stats delta.  ``lowering="auto"`` tunes
+    lowering + tiling jointly; a fixed lowering tunes its tiling only.
+    """
+    from repro.graph import autotune, plan as plan_lib
+
+    prev = os.environ.get("TINA_AUTOTUNE")
+    os.environ["TINA_AUTOTUNE"] = "on"
+    try:
+        before = autotune.stats()
+        kwargs = (dict(lowering="auto") if lowering == "auto"
+                  else dict(lowering=lowering, block_configs="auto"))
+        plan_lib.compile(graph_obj,
+                         {graph_obj.inputs[0]: (batch, signal_len)},
+                         mesh=mesh, autotune_kwargs={"repeats": repeats},
+                         **kwargs)
+        after = autotune.stats()
+        return {k: after[k] - before[k] for k in after}
+    finally:
+        if prev is None:
+            os.environ.pop("TINA_AUTOTUNE", None)
+        else:
+            os.environ["TINA_AUTOTUNE"] = prev
 
 
 def main(argv=None):
@@ -79,6 +127,21 @@ def main(argv=None):
         print(f"[dsp_serve] signal-len {args.signal_len} -> {n} "
               f"({args.pipeline} length constraint)")
     rng = np.random.default_rng(0)
+
+    if args.prewarm:
+        from repro.graph import autotune
+        t0 = time.perf_counter()
+        delta = prewarm(g, args.batch, n, lowering=args.lowering,
+                        mesh=args.mesh or None, repeats=args.tune_repeats)
+        print(f"[dsp_serve] prewarm: tuned serving shape "
+              f"({args.batch}, {n}) in {time.perf_counter() - t0:.2f}s — "
+              f"measured {delta['measured']} node(s), "
+              f"{delta['cache_hits']} already cached "
+              f"(cache: {autotune.cache_path()})")
+        # the pre-warm measured block configs for this lowering; make the
+        # service actually read them (a fixed-lowering service without
+        # --tune-blocks would otherwise serve kernel defaults)
+        args.tune_blocks = args.tune_blocks or args.lowering != "auto"
 
     t0 = time.perf_counter()
     svc = PipelineService(g, signal_len=n, batch_size=args.batch,

@@ -399,6 +399,83 @@ def test_auto_plan_not_stale_across_mode_switch(tune_env, monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# fusion autotuning: fuse="auto" measures fused vs unfused per chain
+# ---------------------------------------------------------------------------
+def test_fusion_verdict_measured_persisted_and_replayed(tune_env,
+                                                       monkeypatch):
+    """TINA_AUTOTUNE=on measures the fused node against the sequential
+    member chain, persists the verdict in the v2 cache, and cached mode
+    replays it without re-measuring."""
+    g = graph.build_spectrogram(window=64)       # abs2 -> scale chain
+    # decisive unfused win: pick_fusion measures fused first, unfused
+    # second — make the chain "win" by 2x so hysteresis can't keep it
+    times = iter([1.0, 0.4])
+    monkeypatch.setattr(autotune, "measure",
+                        lambda fn, args, **k: next(times, 0.4))
+    p = graph.compile(g, {"x": (300,)}, fuse="auto",
+                      autotune_kwargs={"repeats": 1})
+    assert not any(n.op == "fused_ew" for n in p.graph.topo())
+    entries = json.load(open(tune_env))["entries"]
+    fkeys = [k for k in entries if k.startswith("fusion|")]
+    assert fkeys and entries[fkeys[0]]["fused"] is False
+    assert entries[fkeys[0]]["times_us"]["unfused"] < \
+        entries[fkeys[0]]["times_us"]["fused"]
+
+    # cached mode: verdict replayed, nothing measured
+    monkeypatch.setenv("TINA_AUTOTUNE", "cached")
+    monkeypatch.setattr(autotune, "measure",
+                        lambda *a, **k: pytest.fail("measured in cached"))
+    autotune._MEM.clear()
+    plan_lib.clear_cache()
+    p2 = graph.compile(g, {"x": (300,)}, fuse="auto")
+    assert not any(n.op == "fused_ew" for n in p2.graph.topo())
+
+
+def test_fusion_auto_keeps_fused_when_not_decisively_slower(tune_env,
+                                                           monkeypatch):
+    """A marginal unfused 'win' inside the hysteresis margin keeps the
+    fused default (noise must not flap plans)."""
+    g = graph.build_spectrogram(window=64)
+    times = iter([1.0, 0.99])
+    monkeypatch.setattr(autotune, "measure",
+                        lambda fn, args, **k: next(times, 0.99))
+    p = graph.compile(g, {"x": (300,)}, fuse="auto",
+                      autotune_kwargs={"repeats": 1})
+    assert any(n.op == "fused_ew" for n in p.graph.topo())
+    entries = json.load(open(tune_env))["entries"]
+    (fe,) = [v for k, v in entries.items() if k.startswith("fusion|")]
+    assert fe["fused"] is True
+
+
+def test_fusion_auto_off_and_cold_cached_keep_fused_default(tune_env,
+                                                            monkeypatch):
+    for mode in ("off", "cached"):
+        monkeypatch.setenv("TINA_AUTOTUNE", mode)
+        plan_lib.clear_cache()
+        p = graph.compile(graph.build_spectrogram(window=64),
+                          {"x": (300,)}, fuse="auto")
+        assert any(n.op == "fused_ew" for n in p.graph.topo()), mode
+        assert not tune_env.exists()
+
+
+def test_fusion_auto_real_measurement_roundtrip(tune_env):
+    """No mocks: a real fuse='auto' compile measures, persists a
+    fusion verdict, and produces oracle-correct output either way."""
+    spec = PIPELINES["spectrogram"]
+    (x,) = spec.make_args(RNG, 300)
+    g = spec.build()
+    p = graph.compile(g, {"x": x.shape}, fuse="auto",
+                      autotune_kwargs={"repeats": 1})
+    entries = json.load(open(tune_env))["entries"]
+    assert any(k.startswith("fusion|") for k in entries)
+    np.testing.assert_allclose(np.asarray(p(jnp.asarray(x))),
+                               spec.oracle(x), rtol=2e-3, atol=2e-3)
+    # identical compile: plan cache hit under the post-save tune key
+    assert graph.compile(g, {"x": x.shape}, fuse="auto",
+                         autotune_kwargs={"repeats": 1}) is p
+
+
+# ---------------------------------------------------------------------------
 # benchmark accumulation
 # ---------------------------------------------------------------------------
 def test_append_bench_json_accumulates_runs(tmp_path):
