@@ -1,0 +1,182 @@
+"""CI perf-regression gate: compare a fresh fig4_pipelines run against
+the last committed ``BENCH_pipelines.json`` entry and fail on a
+tuned-plan throughput regression.
+
+    python -m benchmarks.check_regression \\
+        --baseline /tmp/BENCH_baseline.json --fresh BENCH_pipelines.json \\
+        [--threshold 0.25] [--metric t_pallas_tuned_s]
+
+Mechanics:
+  * ``--baseline`` is the accumulator file **as committed** (CI copies
+    it aside before the bench run, because fig4 appends to the same
+    file); ``--fresh`` is the file after the new run.  The LAST run
+    record in each is compared.
+  * Pipelines are matched on ``(pipeline, n)``; pairs present on only
+    one side are reported and skipped (new pipelines don't fail the
+    gate, removed ones don't either — the reviewer sees both).
+  * Throughput is 1/t on ``--metric`` (default: the tuned all-Pallas
+    plan time, the number the autotuning work defends), **normalized by
+    the same record's** ``--relative-to`` **field** (default: the per-op
+    dispatch time).  The committed baseline was timed on whatever
+    machine the developer used; the fresh run executes on a CI runner —
+    absolute seconds don't compare across them, but tuned-plan time
+    relative to the same machine's per-op baseline does (machine speed
+    cancels in the ratio, a genuine kernel/plan regression doesn't).
+    Pass ``--relative-to ''`` to gate on absolute seconds.  A pair
+    fails when fresh (normalized) throughput drops more than
+    ``--threshold`` (default 25%) below baseline:
+    ``t_fresh > t_base / (1 - threshold)``.
+
+Waiver: a commit that knowingly trades this throughput away (e.g. a
+correctness fix in a kernel) adds one line to its message::
+
+    bench-waiver: <why the regression is accepted>
+
+The gate scans ``$BENCH_COMMIT_MSG`` if set (CI passes the head commit
+message through it; a fetch-depth-1 checkout may not have usable git
+history), else ``git log -1 --format=%B``.  A present waiver downgrades
+failures to warnings (exit 0) and prints the reason into the log.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+WAIVER_PREFIX = "bench-waiver:"
+
+
+def last_run(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, dict) and isinstance(data.get("runs"), list):
+        if not data["runs"]:
+            raise SystemExit(f"{path}: empty runs list")
+        return data["runs"][-1]
+    if isinstance(data, dict) and "results" in data:
+        return data                       # legacy single-run format
+    raise SystemExit(f"{path}: not a BENCH accumulator file")
+
+
+def index_results(run: dict, metric: str,
+                  relative_to: str | None = None) -> dict[tuple, float]:
+    out = {}
+    for rec in run.get("results", []):
+        t = rec.get(metric)
+        if not t or t <= 0:
+            continue
+        if relative_to:
+            ref = rec.get(relative_to)
+            if not ref or ref <= 0:
+                continue          # can't normalize: skip, don't misgate
+            t = t / ref
+        out[(rec.get("pipeline"), rec.get("n"))] = float(t)
+    return out
+
+
+def _scan(msg: str | None) -> str | None:
+    for line in (msg or "").splitlines():
+        if line.strip().lower().startswith(WAIVER_PREFIX):
+            return line.strip()[len(WAIVER_PREFIX):].strip() or "(no reason)"
+    return None
+
+
+def _git_msg(*rev: str) -> str:
+    try:
+        return subprocess.run(
+            ["git", "log", "-1", "--format=%B", *rev],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__))).stdout
+    except (OSError, subprocess.SubprocessError):
+        return ""
+
+
+def find_waiver(commit_msg: str | None = None) -> str | None:
+    """The waiver line, scanning every plausible source until one hits:
+    the explicit argument, ``$BENCH_COMMIT_MSG`` (CI passes the push
+    head-commit message — or the PR title — through it), ``git log -1``
+    (the checked-out commit), and ``HEAD^2`` (on a pull_request run the
+    checkout is a merge commit whose second parent is the PR head, where
+    the contributor actually wrote the waiver line; the CI job fetches
+    depth 2 so it resolves).  Sources without a waiver don't mask later
+    ones — a PR-title env value must not suppress the commit-message
+    waiver the gate's own failure text tells contributors to write."""
+    for msg in (commit_msg, os.environ.get("BENCH_COMMIT_MSG"),
+                _git_msg(), _git_msg("HEAD^2")):
+        hit = _scan(msg)
+        if hit is not None:
+            return hit
+    return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_pipelines.json (copied aside "
+                         "before the fresh bench run)")
+    ap.add_argument("--fresh", required=True,
+                    help="BENCH_pipelines.json after the fresh run")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated throughput drop (fraction)")
+    ap.add_argument("--metric", default="t_pallas_tuned_s",
+                    help="per-result seconds field to gate on")
+    ap.add_argument("--relative-to", default="t_per_op_s",
+                    help="same-record field the metric is divided by "
+                         "before comparing, so baseline and fresh runs "
+                         "on different machines stay comparable "
+                         "(machine speed cancels in the ratio); '' "
+                         "gates on absolute seconds")
+    ap.add_argument("--commit-msg", default=None,
+                    help="commit message to scan for the waiver line "
+                         "(default: $BENCH_COMMIT_MSG, then git log -1)")
+    args = ap.parse_args(argv)
+
+    base_run = last_run(args.baseline)
+    fresh_run = last_run(args.fresh)
+    rel = args.relative_to or None
+    base = index_results(base_run, args.metric, rel)
+    fresh = index_results(fresh_run, args.metric, rel)
+    unit = f"x {rel}" if rel else "s absolute"
+    print(f"[bench-gate] baseline run {base_run.get('git_rev')} "
+          f"({base_run.get('timestamp')}), fresh run "
+          f"{fresh_run.get('git_rev')} ({fresh_run.get('timestamp')}); "
+          f"metric {args.metric} ({unit}), threshold {args.threshold:.0%}")
+
+    for key in sorted(set(base) - set(fresh)):
+        print(f"[bench-gate] note: {key} only in baseline (skipped)")
+    for key in sorted(set(fresh) - set(base)):
+        print(f"[bench-gate] note: {key} only in fresh run (skipped)")
+
+    failures = []
+    for key in sorted(set(base) & set(fresh)):
+        t_base, t_fresh = base[key], fresh[key]
+        ratio = t_base / t_fresh          # fresh throughput / baseline
+        status = "OK"
+        if t_fresh > t_base / (1.0 - args.threshold):
+            status = "REGRESSION"
+            failures.append(key)
+        print(f"[bench-gate] {key[0]} n={key[1]}: "
+              f"{t_base:.4g} -> {t_fresh:.4g} "
+              f"({ratio:.2f}x throughput)  {status}")
+
+    if not (set(base) & set(fresh)):
+        print("[bench-gate] WARNING: no overlapping (pipeline, n) pairs — "
+              "nothing gated")
+    if not failures:
+        print("[bench-gate] PASS")
+        return 0
+    waiver = find_waiver(args.commit_msg)
+    if waiver is not None:
+        print(f"[bench-gate] {len(failures)} regression(s) WAIVED: {waiver}")
+        return 0
+    print(f"[bench-gate] FAIL: {len(failures)} pipeline(s) lost more than "
+          f"{args.threshold:.0%} tuned-plan throughput: {failures}\n"
+          f"[bench-gate] to accept knowingly, add a commit-message line: "
+          f"'{WAIVER_PREFIX} <reason>'")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,6 +8,7 @@ import os
 import subprocess
 import tempfile
 import time
+import warnings
 from typing import Callable
 
 import jax
@@ -143,13 +144,31 @@ def append_bench_json(path: str, results, **meta) -> str:
     BENCH_*.json so the perf trajectory accumulates across PRs instead
     of each run overwriting the last.  A pre-existing single-run file
     (the old ``write_bench_json`` format) is migrated to the first run
-    record."""
+    record.
+
+    A corrupt/truncated accumulator (a writer that died mid-dump on an
+    old non-atomic path, a bad merge, a partial artifact download) must
+    not crash the bench job and lose the fresh results: the damaged
+    bytes are moved aside to ``<path>.bak`` for forensics and the record
+    list restarts from this run."""
     run = _run_record(results, **meta)
+    existing = None
     try:
-        with open(path) as f:
-            existing = json.load(f)
-    except (OSError, ValueError):
-        existing = None
+        with open(path, "rb") as f:   # binary: garbage bytes must reach
+            raw = f.read()            # the quarantine, not explode here
+    except OSError:
+        pass                 # no accumulator yet: start one
+    else:
+        try:
+            # invalid UTF-8 raises UnicodeDecodeError — a ValueError
+            # subclass, so the quarantine below catches it too
+            existing = json.loads(raw)
+        except ValueError:
+            bak = path + ".bak"
+            os.replace(path, bak)
+            warnings.warn(
+                f"{path} is corrupt ({len(raw)} bytes); moved it to {bak} "
+                "and restarting the run list", stacklevel=2)
     if isinstance(existing, dict) and isinstance(existing.get("runs"), list):
         payload = existing
         payload["runs"].append(run)

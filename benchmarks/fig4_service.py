@@ -1,0 +1,218 @@
+"""Fig.4-service: fixed vs continuous batching under Poisson arrival
+load — the serving-layer companion to fig4_pipelines.
+
+GPTPU's lesson (and TINA's serving north star): sustained accelerator
+utilization by non-NN workloads is won or lost in the request-staging
+layer.  This benchmark drives the same Poisson arrival trace through a
+``PipelineService`` in both batching modes and records what the staging
+policy costs each request:
+
+  * fixed       — every batch pads to ``--batch`` behind a
+                  ``--max-wait-ms`` fill deadline: a request landing
+                  just after a batch closed waits out the deadline, and
+                  partial load pads most slots
+  * continuous  — the scheduler dispatches the largest queued batch the
+                  moment the device goes idle, through the pre-compiled
+                  bucket-plan ladder (padding only to the next bucket)
+
+Offered load is expressed as a fraction of the service's measured
+full-batch capacity (``--load 0.5`` = half the request rate a saturated
+device could sustain), so runs are comparable across machines.  Every
+plan is warmed before the clock starts — the numbers are steady-state
+staging policy, not XLA compile time.
+
+Correctness is asserted, not assumed: the continuous run records every
+batch packing and replays it through the same bucket plan, requiring
+each delivered response to be **bit-for-bit** the replayed row
+(:func:`repro.graph.service.replay_batches`); a sample of responses
+from both modes is additionally checked against the pipeline's numpy
+oracle.
+
+Appends a run record (git rev + timestamp, p50/p99 latency +
+throughput per mode) to ``BENCH_service.json`` via
+:func:`benchmarks.common.append_bench_json`, so the serving-latency
+trajectory accumulates across PRs like the pipeline one.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import append_bench_json, fmt_table
+from repro.core.registry import PIPELINES, pipelines as _load_pipelines
+from repro.graph.service import PipelineService, replay_batches
+
+
+def drive(svc: PipelineService, signals, gaps, *, timeout=180.0):
+    """Submit ``signals`` on the ``gaps`` inter-arrival schedule against
+    a started service; returns (per-request latencies [s], makespan [s]).
+
+    Latency is submit -> future-done, stamped in the future's done
+    callback (the batcher thread), so one slow consumer of a result
+    can't inflate another request's number.
+    """
+    n = len(signals)
+    done_t = np.zeros(n)
+    lat = np.zeros(n)
+    futs = []
+    svc.start()
+    t_start = time.perf_counter()
+    next_t = t_start
+    for i, (x, gap) in enumerate(zip(signals, gaps)):
+        next_t += gap
+        delay = next_t - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)        # the Poisson arrival process
+        t_sub = time.perf_counter()
+        fut = svc.submit(x)
+
+        def _done(f, i=i, t_sub=t_sub):
+            done_t[i] = time.perf_counter()
+            lat[i] = done_t[i] - t_sub
+
+        fut.add_done_callback(_done)
+        futs.append(fut)
+    for f in futs:
+        f.result(timeout=timeout)    # every future must resolve
+    svc.close()
+    return lat, float(done_t.max() - t_start)
+
+
+def _warm(svc: PipelineService) -> None:
+    """Execute each bucket plan once so XLA compiles outside the
+    measured window (steady-state serving, not cold start)."""
+    for b, p in svc.plans.items():
+        np.asarray(p(jnp.zeros((b, svc.signal_len), svc.dtype)))
+
+
+def run(pipeline="spectrogram", *, requests=200, max_batch=8,
+        signal_len=4096, load=0.5, max_wait_ms=10.0, mesh=None,
+        lowering="native", check=8, seed=0):
+    _load_pipelines()
+    spec = PIPELINES[pipeline]
+    g = spec.build()
+    n = spec.valid_len(signal_len)
+    rng = np.random.default_rng(seed)
+    signals = [rng.standard_normal(n).astype(np.float32)
+               for _ in range(requests)]
+
+    # capacity: how fast a saturated device turns over full batches
+    probe = PipelineService(g, signal_len=n, batch_size=max_batch,
+                            batching="fixed", lowering=lowering, mesh=mesh)
+    _warm(probe)
+    # tile if requests < max_batch: the probe must time a FULL batch or
+    # capacity comes out ~2x high and the offered load lands in overload
+    xb = jnp.asarray(np.stack([signals[i % len(signals)]
+                               for i in range(max_batch)]))
+    ts = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        np.asarray(probe.plan(xb))
+        ts.append(time.perf_counter() - t0)
+    # min, not mean: a contention spike in the probe inflates the
+    # offered rate into an overload regime and poisons the whole trace
+    t_full = min(ts)
+    probe.close()
+    capacity = max_batch / t_full              # req/s at saturation
+    rate = load * capacity
+    # one shared arrival trace: "equal offered load" means equal traces
+    gaps = rng.exponential(1.0 / rate, size=requests)
+
+    results = {}
+    for mode in ("fixed", "continuous"):
+        svc = PipelineService(g, signal_len=n, batch_size=max_batch,
+                              batching=mode, lowering=lowering, mesh=mesh,
+                              max_wait_ms=max_wait_ms,
+                              record_batches=(mode == "continuous"))
+        _warm(svc)
+        lat, makespan = drive(svc, signals, gaps)
+        if mode == "continuous":
+            checked = replay_batches(svc)      # bit-for-bit vs packing
+            assert checked == requests, (checked, requests)
+        s = svc.stats
+        results[mode] = {
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "mean_ms": float(lat.mean() * 1e3),
+            "throughput_req_s": requests / makespan,
+            "batches": s["batches"],
+            "fill": s["requests"] / max(1, s["requests"]
+                                        + s["padded_slots"]),
+            "bucket_batches": s.get("bucket_batches"),
+        }
+        del svc
+
+    # oracle spot-check outside the timed window: the numerics path is
+    # identical to the driven services (same bucket plans), and the
+    # continuous packing replay above already pinned responses bitwise
+    ref = PipelineService(g, signal_len=n, batch_size=max_batch,
+                          batching="continuous", lowering=lowering,
+                          mesh=mesh)
+    futs = [ref.submit(signals[i]) for i in range(min(check, requests))]
+    ref.flush()
+    for i, f in enumerate(futs):
+        np.testing.assert_allclose(f.result(timeout=30),
+                                   spec.oracle(signals[i]),
+                                   rtol=2e-3, atol=2e-3)
+    ref.close()
+
+    rec = {"pipeline": pipeline, "n": int(n), "max_batch": int(max_batch),
+           "requests": int(requests), "offered_load": float(load),
+           "rate_req_s": float(rate), "capacity_req_s": float(capacity),
+           "max_wait_ms": float(max_wait_ms), "lowering": lowering,
+           **{f"{m}_{k}": v for m in results for k, v in results[m].items()
+              if k != "bucket_batches"},
+           "continuous_bucket_batches":
+               results["continuous"]["bucket_batches"],
+           "p50_speedup": (results["fixed"]["p50_ms"]
+                           / results["continuous"]["p50_ms"]),
+           "p99_speedup": (results["fixed"]["p99_ms"]
+                           / results["continuous"]["p99_ms"])}
+    rows = [[m, f"{r['p50_ms']:.2f}", f"{r['p99_ms']:.2f}",
+             f"{r['throughput_req_s']:.1f}", r["batches"],
+             f"{r['fill']:.0%}"] for m, r in results.items()]
+    table = fmt_table(
+        f"Fig.4-service: {pipeline} n={n} batch<= {max_batch} "
+        f"Poisson load {load:.0%} of capacity ({rate:.1f} req/s)",
+        ["batching", "p50_ms", "p99_ms", "req/s", "batches", "fill"], rows)
+    return table, rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pipeline", default="spectrogram")
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--signal-len", type=int, default=4096)
+    ap.add_argument("--load", type=float, default=0.5,
+                    help="offered load as a fraction of measured "
+                         "full-batch capacity (partial load is where "
+                         "the staging policy matters)")
+    ap.add_argument("--max-wait-ms", type=float, default=10.0,
+                    help="fixed-mode fill deadline (continuous ignores)")
+    ap.add_argument("--lowering", default="native",
+                    choices=["native", "conv", "pallas", "auto"])
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="shard each bucket across N devices")
+    ap.add_argument("--check", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_service.json")
+    args = ap.parse_args(argv)
+    table, rec = run(args.pipeline, requests=args.requests,
+                     max_batch=args.batch, signal_len=args.signal_len,
+                     load=args.load, max_wait_ms=args.max_wait_ms,
+                     mesh=args.mesh or None, lowering=args.lowering,
+                     check=args.check, seed=args.seed)
+    print(table)
+    path = append_bench_json(args.out, [rec], figure="fig4_service",
+                             requests=args.requests, load=args.load)
+    print(f"\n[fig4_service] p50 {rec['fixed_p50_ms']:.2f} ms (fixed) -> "
+          f"{rec['continuous_p50_ms']:.2f} ms (continuous), "
+          f"{rec['p50_speedup']:.2f}x; appended run to {path}")
+
+
+if __name__ == "__main__":
+    main()

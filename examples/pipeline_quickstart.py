@@ -65,14 +65,19 @@ np.testing.assert_allclose(chunked, offline, rtol=1e-6, atol=1e-6)
 print(f"stream: {sig.shape[-1]} samples in chunks of 1000 -> "
       f"{chunked.shape}, equals offline")
 
-# -- 4. serve batched requests through one cached plan ----------------------
+# -- 4. serve batched requests through cached plans --------------------------
+# continuous batching: the scheduler dispatches the largest queued batch
+# the moment the device is idle, through a ladder of pre-compiled bucket
+# plans (1/2/4) — no fill deadline, padding only to the next bucket
 builtin = PIPELINES["pfb_power"]                 # pipelines() registers these
 pg = builtin.build()
-with graph.PipelineService(pg, signal_len=1024, batch_size=4) as svc:
+with graph.PipelineService(pg, signal_len=1024, batch_size=4,
+                           batching="continuous") as svc:
     futs = [svc.submit(rng.standard_normal(1024).astype(np.float32))
             for _ in range(10)]
     outs = [f.result(timeout=60) for f in futs]
-print(f"service: {svc.stats}, plan traces {svc.plan.trace_count}")
+print(f"service: {svc.stats}, buckets {list(svc.buckets)}, "
+      f"plan traces {svc.plan.trace_count}")
 
 # the built-ins come with numpy oracles — verify one response
 xs = np.asarray(outs[0])

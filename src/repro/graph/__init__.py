@@ -9,7 +9,8 @@ cached, autotuned, streamable plans.
   autotune.py   measurement-based lowering/config/fusion autotuner,
                 on-disk cache
   stream.py     chunked streaming executor (offline-identical output)
-  service.py    batched fixed-shape pipeline serving
+  service.py    batched pipeline serving: fixed packing or continuous
+                batching over a ladder of pre-compiled bucket plans
   pipelines.py  built-in workloads (spectrogram, pfb_power,
                 fir_decimate, stft_overlap_add, correlate,
                 cascaded_channelizer)
@@ -32,13 +33,15 @@ from repro.graph.pipelines import (BUILTINS, build_cascaded_channelizer,
                                    build_pfb_power, build_spectrogram,
                                    build_stft_overlap_add)
 from repro.graph.plan import Plan, cache_stats, clear_cache, compile
-from repro.graph.service import PipelineService
+from repro.graph.service import (PipelineService, bucket_ladder,
+                                 replay_batches)
 from repro.graph.stream import ChunkedRunner, stream_execute, stream_spec
 
 __all__ = [
     "Graph", "Node", "OpDef", "OPDEFS", "Plan", "compile", "cache_stats",
     "clear_cache", "ChunkedRunner", "stream_execute", "stream_spec",
-    "PipelineService", "BUILTINS", "build_spectrogram", "build_pfb_power",
+    "PipelineService", "bucket_ladder", "replay_batches",
+    "BUILTINS", "build_spectrogram", "build_pfb_power",
     "build_fir_decimate", "build_stft_overlap_add", "build_correlate",
     "build_cascaded_channelizer", "autotune", "pipelines", "plan",
     "service", "stream",

@@ -1,23 +1,43 @@
 """Batched pipeline serving: queue requests, pack them into fixed-shape
 batches, run one cached plan per batch.
 
-Fixed shapes are the whole point: every batch is padded to exactly
-``(batch_size, signal_len)``, so after the first batch every execution
-is a plan-cache hit (no retrace, no recompile) — the serving front door
-the ROADMAP's production-scale north star needs.
+Fixed shapes are the whole point: every batch is padded to a
+pre-compiled shape, so after warm-up every execution is a plan-cache
+hit (no retrace, no recompile) — the serving front door the ROADMAP's
+production-scale north star needs.  Two batching policies:
 
-Two modes:
+``batching="fixed"`` (the historical default) — every batch pads to
+exactly ``(batch_size, signal_len)`` through ONE plan.  The batcher
+waits up to ``max_wait_ms`` per request to fill a batch before
+dispatching a partial (padded) one, so light traffic pays the wait
+deadline on every batch and pads most of the slots.
+
+``batching="continuous"`` — a continuous batcher: the scheduler forms
+the **largest admissible batch the moment the executor goes idle**
+(bounded by ``batch_size``; an idle device never waits for a full
+batch), and executes it against a small ladder of pre-compiled bucket
+plans (1/2/4/…/batch_size — each a cached ``graph.compile``, reusing
+the plan cache and per-shape autotuned configs), padding only up to the
+next bucket.  Requests that arrive while the device is busy coalesce in
+the queue for at most one batch's execution time — the only wait a
+request ever experiences is a busy device, never a fill deadline
+(``max_wait_ms`` therefore has no effect in this mode: the busy period
+*is* the batching window).  Futures complete per-request, so one slow
+producer can't stall unrelated submitters.
+
+Two drive modes (orthogonal to the batching policy):
   * synchronous — ``submit()`` then ``flush()`` (deterministic, tests)
   * background  — ``start()`` spawns a batcher thread that drains the
-    queue, waiting at most ``max_wait_ms`` to fill a batch before
-    dispatching a partial (padded) one.
+    queue with the configured policy.
 
 ``submit`` returns a ``concurrent.futures.Future`` resolving to that
 request's output slice (a numpy array).
 
 Sharded mode: ``mesh=`` (a Mesh or device count) compiles the serving
-plan with its batch axis placed across the mesh, so each fixed-shape
-batch is split over the devices (``batch_size`` must divide evenly).
+plan(s) with the batch axis placed across the mesh.  Every bucket in
+the continuous ladder is restricted to shard-divisible sizes — the
+ladder starts at the shard count instead of 1, so each bucket splits
+evenly over the devices.
 
 Lifecycle (defined order: ``start`` -> ``submit``/... -> ``close``):
 ``flush()`` on a *started* service raises — the batcher thread is the
@@ -26,9 +46,11 @@ logical batch across two consumers.  ``close()`` stops the thread
 (verifying it actually exited before draining the remainder) and marks
 the service closed: ``submit()``/``start()`` afterwards raise
 RuntimeError instead of enqueuing requests no consumer will ever serve.
+These invariants hold under both batching policies.
 """
 from __future__ import annotations
 
+import bisect
 import queue
 import threading
 import time
@@ -41,11 +63,33 @@ from repro.graph import plan as plan_lib
 from repro.graph.graph import Graph
 
 
+def bucket_ladder(max_batch: int, shards: int = 1) -> tuple[int, ...]:
+    """The pre-compiled batch sizes of a continuous batcher: shard-count,
+    doubling up to ``max_batch`` (which is always the top rung).  With
+    ``shards=1`` this is the classic 1/2/4/…/max ladder; sharded
+    services start at ``shards`` so every bucket splits evenly over the
+    mesh (``max_batch % shards == 0`` is validated by plan compilation).
+    """
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    if shards < 1 or shards > max_batch:
+        raise ValueError(
+            f"shard count {shards} not in [1, max_batch={max_batch}]")
+    sizes = []
+    b = shards
+    while b < max_batch:
+        sizes.append(b)
+        b *= 2
+    sizes.append(max_batch)
+    return tuple(sizes)
+
+
 class PipelineService:
     def __init__(self, graph: Graph, signal_len: int, *,
-                 batch_size: int = 8, dtype="float32",
-                 lowering="native", block_configs=None, mesh=None,
-                 max_wait_ms: float = 2.0, close_timeout: float = 30.0,
+                 batch_size: int = 8, batching: str = "fixed",
+                 dtype="float32", lowering="native", block_configs=None,
+                 mesh=None, max_wait_ms: float = 2.0,
+                 close_timeout: float = 30.0, record_batches: bool = False,
                  **compile_opts):
         if len(graph.inputs) != 1:
             raise ValueError("serving supports single-input graphs")
@@ -53,9 +97,13 @@ class PipelineService:
             # a tuple-returning plan would make out[i] index outputs,
             # not batch rows — reject instead of corrupting responses
             raise ValueError("serving supports single-output graphs")
+        if batching not in ("fixed", "continuous"):
+            raise ValueError(
+                f"batching={batching!r}: expected 'fixed' or 'continuous'")
         self.graph = graph
         self.signal_len = int(signal_len)
         self.batch_size = int(batch_size)
+        self.batching = batching
         self.dtype = np.dtype(dtype)
         self.max_wait_ms = max_wait_ms
         self.close_timeout = close_timeout
@@ -69,15 +117,37 @@ class PipelineService:
         # recreating the hung-future bug the flag exists to prevent
         self._lifecycle = threading.Lock()
         self.stats = {"requests": 0, "batches": 0, "padded_slots": 0}
-        # compile the serving plan up front: requests never pay trace
-        # cost — and with lowering="auto" (or block_configs="auto") the
-        # whole batch path runs the autotuner's tuned kernels.  compile
-        # validates mesh divisibility on the (batch_size, signal_len)
-        # spec, so an indivisible batch_size fails here, not at runtime
-        self.plan = plan_lib.compile(
-            graph, {graph.inputs[0]: (self.batch_size, self.signal_len)},
-            dtype=str(self.dtype), lowering=lowering,
-            block_configs=block_configs, mesh=mesh, **compile_opts)
+        # optional packing trace for tests/benchmarks: every dispatched
+        # batch appends (bucket, [(request, future)]) so a replay can
+        # verify delivered responses bit-for-bit against the exact
+        # packing that was served
+        self.batch_log: list[tuple[int, list[tuple[np.ndarray, Future]]]] \
+            | None = [] if record_batches else None
+
+        # normalize the mesh ONCE: every bucket plan must share the same
+        # Mesh object (and cache key), and the ladder needs the shard
+        # count before any plan compiles
+        mesh, batch_axis = plan_lib._norm_mesh(mesh, None)
+        shards = 1 if mesh is None else int(mesh.shape[batch_axis])
+        if batching == "continuous":
+            self.buckets = bucket_ladder(self.batch_size, shards)
+        else:
+            self.buckets = (self.batch_size,)
+        # compile every bucket's serving plan up front: requests never
+        # pay trace cost — and with lowering="auto" (or
+        # block_configs="auto") each bucket runs the autotuner's tuned
+        # kernels for ITS shape.  compile validates mesh divisibility on
+        # the (bucket, signal_len) spec, so an indivisible batch_size
+        # fails here, not at runtime
+        self.plans = {
+            b: plan_lib.compile(
+                graph, {graph.inputs[0]: (b, self.signal_len)},
+                dtype=str(self.dtype), lowering=lowering,
+                block_configs=block_configs, mesh=mesh, **compile_opts)
+            for b in self.buckets}
+        self.plan = self.plans[self.batch_size]
+        if batching == "continuous":
+            self.stats["bucket_batches"] = {b: 0 for b in self.buckets}
 
     # -- request side -------------------------------------------------------
     def submit(self, x) -> Future:
@@ -97,13 +167,34 @@ class PipelineService:
         return fut
 
     # -- batch execution ----------------------------------------------------
-    def _run_batch(self, items: list[tuple[np.ndarray, Future]]) -> None:
-        n = len(items)
-        batch = np.zeros((self.batch_size, self.signal_len), self.dtype)
+    def _bucket_for(self, n: int) -> int:
+        """Smallest pre-compiled bucket admitting ``n`` requests."""
+        return self.buckets[bisect.bisect_left(self.buckets, n)]
+
+    def _pack(self, bucket: int,
+              items: list[tuple[np.ndarray, Future]]) -> np.ndarray:
+        """The one definition of batch packing: requests fill the first
+        rows, zero padding fills the rest.  ``replay_batches`` packs
+        through this too, so the replay checks the packing actually
+        served."""
+        batch = np.zeros((bucket, self.signal_len), self.dtype)
         for i, (x, _) in enumerate(items):
             batch[i] = x
+        return batch
+
+    def _run_batch(self, items: list[tuple[np.ndarray, Future]]) -> None:
+        n = len(items)
+        if self.batching == "continuous":
+            bucket = self._bucket_for(n)
+            plan = self.plans[bucket]
+        else:
+            bucket = self.batch_size
+            plan = self.plan          # monkeypatchable failure-injection
+        batch = self._pack(bucket, items)
+        if self.batch_log is not None:
+            self.batch_log.append((bucket, list(items)))
         try:
-            out = np.asarray(self.plan(jnp.asarray(batch)))
+            out = np.asarray(plan(jnp.asarray(batch)))
         except Exception as e:          # noqa: BLE001 — delivered to callers
             # fail the batch's futures, not the batcher thread: clients
             # blocked in fut.result() must see the error, and later
@@ -114,7 +205,9 @@ class PipelineService:
                 self.stats.get("failed_batches", 0) + 1
             return
         self.stats["batches"] += 1
-        self.stats["padded_slots"] += self.batch_size - n
+        self.stats["padded_slots"] += bucket - n
+        if self.batching == "continuous":
+            self.stats["bucket_batches"][bucket] += 1
         for i, (_, fut) in enumerate(items):
             fut.set_result(out[i])
 
@@ -177,16 +270,28 @@ class PipelineService:
         return self
 
     def _loop(self) -> None:
+        """The batcher: block for the first request, gather up to
+        ``batch_size``, dispatch, repeat.  The two policies differ ONLY
+        in the fill wait — fixed lingers up to ``max_wait_ms`` per
+        request before dispatching a partial batch; continuous takes
+        exactly what has queued (coalesced while the previous batch ran)
+        and dispatches the moment the device is idle, through the
+        smallest admitting bucket plan.  The only wait a continuous
+        request ever experiences is a busy device."""
+        fill_wait = (self.max_wait_ms / 1e3
+                     if self.batching == "fixed" else None)
         while True:
-            item = self._q.get()          # block for the first request
+            item = self._q.get()          # idle: block for the first request
             if item is None:
                 return
             items = [item]
             while len(items) < self.batch_size:
                 try:
-                    nxt = self._q.get(timeout=self.max_wait_ms / 1e3)
+                    nxt = (self._q.get(timeout=fill_wait)
+                           if fill_wait is not None else
+                           self._q.get_nowait())
                 except queue.Empty:
-                    break                 # dispatch a partial batch
+                    break                 # partial batch: dispatch now
                 if nxt is None:
                     self._run_batch(items)
                     return
@@ -241,4 +346,36 @@ class PipelineService:
         self.close()                 # final attempt: let the timeout raise
 
 
-__all__ = ["PipelineService"]
+def replay_batches(svc: PipelineService) -> int:
+    """Verify a ``record_batches=True`` service bit-for-bit: re-run every
+    logged (bucket, requests) packing through the same bucket plan and
+    compare each delivered response against its replayed row with
+    ``assert_array_equal``.  Returns the number of requests checked.
+    This is the strong numerics claim continuous batching must honor —
+    a response is exactly the bucket plan's row for the packing that was
+    served, whatever that packing turned out to be: no padding bleed, no
+    row misindexing, no bucket-dependent corruption.  (Row-level results
+    across *different* batch sizes are an XLA tiling decision, so
+    cross-bucket bitwise equality is not the contract — per-packing
+    determinism is.)
+    """
+    if svc.batch_log is None:
+        raise ValueError("service was not built with record_batches=True")
+    checked = 0
+    for bucket, items in svc.batch_log:
+        if any(f.exception(timeout=0) is not None for _, f in items):
+            # a failed batch delivered exceptions, not rows — skip it so
+            # the healthy batches of an anomalous run still verify
+            continue
+        batch = svc._pack(bucket, items)
+        plan = svc.plans.get(bucket, svc.plan)
+        want = np.asarray(plan(jnp.asarray(batch)))
+        for i, (_, fut) in enumerate(items):
+            np.testing.assert_array_equal(
+                np.asarray(fut.result(timeout=0)), want[i],
+                err_msg=f"bucket {bucket} row {i} != replayed plan row")
+            checked += 1
+    return checked
+
+
+__all__ = ["PipelineService", "bucket_ladder", "replay_batches"]

@@ -30,6 +30,14 @@ pass through verbatim — ``lowering="auto"`` / ``block_configs="auto"``
 make every chunk run the autotuner's tuned kernels (tuned once per push
 shape, then cached).
 
+Bucketed pushes: ``ChunkedRunner(..., step_buckets=True)`` quantizes
+every push to a power-of-two number of output steps (the remainder
+stays in the carry; ``finalize()``/``run()`` drains it).  Irregular
+push sizes — the arrival pattern a continuous-batching front door
+produces — then compile a bounded ladder of plan shapes instead of one
+plan per distinct chunk length, while the emitted windows (and thus the
+concatenated output) stay exactly the offline ones.
+
 Sharded batched streams: a runner built with ``mesh=`` accepts chunks
 with a leading batch dim (``(batch, chunk_len)``) and compiles every
 push's plan with the batch axis sharded across the mesh — the carry
@@ -133,7 +141,8 @@ class ChunkedRunner:
     """Push chunks in, get output steps out; carries FIR/PFB/unfold
     overlap state so the concatenated output equals offline execution."""
 
-    def __init__(self, graph: Graph, *, mesh=None, **compile_opts):
+    def __init__(self, graph: Graph, *, mesh=None, step_buckets: bool = False,
+                 **compile_opts):
         self.graph = graph
         self.spec = stream_spec(graph)
         self.compile_opts = dict(compile_opts)
@@ -142,13 +151,21 @@ class ChunkedRunner:
             # plan.compile, and steady-state pushes must stay pure
             # cache hits, not rebuild a Mesh per chunk
             self.compile_opts["mesh"] = plan_lib._norm_mesh(mesh, None)[0]
+        # step_buckets: quantize each push to a power-of-two number of
+        # output steps (carrying the remainder) so irregular push sizes
+        # — the continuous-serving arrival pattern — compile a bounded
+        # LADDER of plan shapes instead of one plan per distinct length.
+        # finalize() (called by run()) drains the deferred remainder, so
+        # concatenated output still equals offline exactly.
+        self.step_buckets = bool(step_buckets)
+        self.window_lens: set[int] = set()   # distinct compiled windows
         self._carry: np.ndarray | None = None
 
     @property
     def carry_len(self) -> int:
         return 0 if self._carry is None else self._carry.shape[-1]
 
-    def push(self, chunk) -> jax.Array | None:
+    def push(self, chunk, *, final: bool = False) -> jax.Array | None:
         chunk = np.asarray(chunk)
         buf = (chunk if self._carry is None
                else np.concatenate([self._carry, chunk], axis=-1))
@@ -157,22 +174,37 @@ class ChunkedRunner:
             self._carry = buf
             return None
         n_steps = (buf.shape[-1] - r) // b + 1
+        if self.step_buckets and not final:
+            n_steps = 1 << (n_steps.bit_length() - 1)  # largest 2^k <= n
         use = r + (n_steps - 1) * b
         window = buf[..., :use]
+        self.window_lens.add(int(use))
         p = plan_lib.compile(self.graph, {self.graph.inputs[0]: window.shape},
                              dtype=str(window.dtype), **self.compile_opts)
         out = p(jnp.asarray(window))
         self._carry = buf[..., n_steps * b:]
         return out
 
+    def finalize(self) -> jax.Array | None:
+        """Emit every whole output step still held in the carry.  Only a
+        ``step_buckets`` runner ever defers whole steps (sub-bucket
+        remainders); for others this is a no-op returning None."""
+        if self._carry is None:
+            return None
+        return self.push(self._carry[..., :0], final=True)
+
     def run(self, x, chunk_len: int) -> jax.Array:
-        """Stream ``x`` through in ``chunk_len`` pieces; concatenate."""
+        """Stream ``x`` through in ``chunk_len`` pieces; concatenate
+        (finalizing any bucket-deferred remainder)."""
         x = np.asarray(x)
         outs = []
         for i in range(0, x.shape[-1], chunk_len):
             o = self.push(x[..., i:i + chunk_len])
             if o is not None:
                 outs.append(o)
+        o = self.finalize()
+        if o is not None:
+            outs.append(o)
         if not outs:
             raise ValueError(
                 f"signal length {x.shape[-1]} is shorter than the "

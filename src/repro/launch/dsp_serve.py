@@ -10,6 +10,12 @@ oracle, and reports throughput + batching efficiency.  ``--lowering
 auto`` engages the measurement-based autotuner (winners persist to the
 on-disk tuning cache, so a second launch skips the measurements).
 
+``--batching continuous`` swaps the fixed packer for the continuous
+batcher: the scheduler dispatches the largest queued batch the moment
+the device goes idle, through a ladder of pre-compiled bucket plans
+(1/2/4/…/--batch), padding only up to the next bucket.  ``--prewarm``
+then tunes every bucket shape, not just the full batch.
+
 Mesh serving: ``--mesh N`` shards every batch across N devices (batch
 must divide evenly); ``--devices N`` forces the host platform to expose
 N virtual devices (CPU dev boxes / CI — set before jax initializes, so
@@ -51,7 +57,18 @@ def build_parser() -> argparse.ArgumentParser:
                     help="force the host platform to expose N virtual "
                          "devices (must run before jax initializes; "
                          "for CPU dev boxes and CI mesh jobs)")
-    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--batching", default="fixed",
+                    choices=["fixed", "continuous"],
+                    help="fixed: pad every batch to --batch behind a "
+                         "--max-wait-ms fill deadline; continuous: "
+                         "dispatch the largest queued batch the moment "
+                         "the device is idle through a ladder of "
+                         "pre-compiled bucket plans")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="fixed-mode fill deadline per request; with "
+                         "--batching continuous an idle device never "
+                         "waits (requests coalesce only while it is "
+                         "busy), so this knob has no effect there")
     ap.add_argument("--check", type=int, default=4,
                     help="responses to validate against the numpy oracle")
     ap.add_argument("--prewarm", action="store_true",
@@ -130,11 +147,21 @@ def main(argv=None):
 
     if args.prewarm:
         from repro.graph import autotune
+        from repro.graph.service import bucket_ladder
         t0 = time.perf_counter()
-        delta = prewarm(g, args.batch, n, lowering=args.lowering,
+        # a continuous service executes every bucket shape in its
+        # ladder: tune them all, or the sub-max buckets would serve
+        # default kernels under TINA_AUTOTUNE=cached
+        sizes = (bucket_ladder(args.batch, args.mesh or 1)
+                 if args.batching == "continuous" else (args.batch,))
+        delta: dict = {}
+        for b in sizes:
+            d = prewarm(g, b, n, lowering=args.lowering,
                         mesh=args.mesh or None, repeats=args.tune_repeats)
-        print(f"[dsp_serve] prewarm: tuned serving shape "
-              f"({args.batch}, {n}) in {time.perf_counter() - t0:.2f}s — "
+            delta = {k: delta.get(k, 0) + v for k, v in d.items()}
+        print(f"[dsp_serve] prewarm: tuned {len(sizes)} serving shape(s) "
+              f"{[(b, n) for b in sizes]} in "
+              f"{time.perf_counter() - t0:.2f}s — "
               f"measured {delta['measured']} node(s), "
               f"{delta['cache_hits']} already cached "
               f"(cache: {autotune.cache_path()})")
@@ -145,6 +172,7 @@ def main(argv=None):
 
     t0 = time.perf_counter()
     svc = PipelineService(g, signal_len=n, batch_size=args.batch,
+                          batching=args.batching,
                           lowering=args.lowering,
                           block_configs="auto" if args.tune_blocks else None,
                           mesh=args.mesh or None,
@@ -157,9 +185,12 @@ def main(argv=None):
         sharded = (f", mesh {dict(m.shape)} "
                    f"({args.batch // m.shape[svc.plan.batch_axis]} "
                    "rows/device)")
-    print(f"[dsp_serve] {args.pipeline}: plan compiled in {t_compile:.2f}s "
-          f"(lowerings: {svc.plan.lowerings}"
-          + (f", block configs: {tuned}" if tuned else "") + sharded + ")")
+    ladder = (f", buckets {list(svc.buckets)}"
+              if args.batching == "continuous" else "")
+    print(f"[dsp_serve] {args.pipeline}: {len(svc.plans)} plan(s) compiled "
+          f"in {t_compile:.2f}s (lowerings: {svc.plan.lowerings}"
+          + (f", block configs: {tuned}" if tuned else "")
+          + sharded + ladder + ")")
 
     signals = [rng.standard_normal(n).astype(np.float32)
                for _ in range(args.requests)]
@@ -174,10 +205,15 @@ def main(argv=None):
         np.testing.assert_allclose(outs[i], want, rtol=2e-3, atol=2e-3)
 
     s = svc.stats
-    fill = 1.0 - s["padded_slots"] / max(1, s["batches"] * args.batch)
+    # padded_slots is measured against each batch's own bucket, so this
+    # fill formula is exact for both batching modes
+    fill = s["requests"] / max(1, s["requests"] + s["padded_slots"])
+    buckets = (f", buckets {s['bucket_batches']}"
+               if "bucket_batches" in s else "")
+    traces = max(p.trace_count for p in svc.plans.values())
     print(f"[dsp_serve] {s['requests']} requests in {elapsed:.3f}s "
           f"({s['requests'] / elapsed:.1f} req/s), {s['batches']} batches, "
-          f"fill {fill:.0%}, plan traces {svc.plan.trace_count} "
+          f"fill {fill:.0%}{buckets}, plan traces {traces} "
           f"(1 == every batch was a cache hit)")
     print(f"[dsp_serve] {args.check} responses verified against the "
           "numpy oracle")

@@ -152,6 +152,34 @@ def test_stream_spec_composition():
     assert (s.block, s.receptive, s.tail_dims) == (1, 64, 1)
 
 
+def test_stream_step_buckets_bounded_plans_offline_identical():
+    """step_buckets=True: irregular push sizes compile a bounded ladder
+    of window shapes (not one plan per distinct length) and, with
+    finalize(), the concatenated output still equals offline exactly."""
+    spec, x = _args("spectrogram", 2048)
+    g = spec.build()
+    offline = np.asarray(
+        graph.compile(g, {g.inputs[0]: x.shape})(jnp.asarray(x)))
+    sizes = [97, 411, 64, 801, 333, 342]            # sums to 2048
+    free = graph.ChunkedRunner(g)
+    bucketed = graph.ChunkedRunner(g, step_buckets=True)
+    for runner in (free, bucketed):
+        outs, i = [], 0
+        for s in sizes:
+            o = runner.push(x[i:i + s])
+            i += s
+            if o is not None:
+                outs.append(np.asarray(o))
+        o = runner.finalize()
+        if o is not None:
+            outs.append(np.asarray(o))
+        got = np.concatenate(outs, axis=runner.spec.concat_axis)
+        np.testing.assert_allclose(got, offline, rtol=1e-6, atol=1e-6)
+    # power-of-two step quantization: strictly fewer distinct plan
+    # shapes than the free-running runner on this irregular schedule
+    assert len(bucketed.window_lens) < len(free.window_lens)
+
+
 def test_streaming_incremental_pushes():
     """Tiny pushes (smaller than the receptive field) buffer correctly."""
     spec, x = _args("spectrogram", 300)
@@ -378,6 +406,67 @@ def test_append_bench_json_atomic_on_crash(tmp_path, monkeypatch):
     monkeypatch.undo()
     data = json_lib.loads(path.read_text())
     assert len(data["runs"]) == 1
+
+
+def test_append_bench_json_corrupt_file_backed_up(tmp_path):
+    """A corrupt/truncated accumulator must not crash the bench job: the
+    damaged bytes move to .bak and the run list restarts."""
+    import json as json_lib
+
+    from benchmarks import common
+    path = tmp_path / "BENCH_c.json"
+    path.write_text('{"figure": "f", "runs": [{"resul')   # truncated dump
+    with pytest.warns(UserWarning, match="corrupt"):
+        common.append_bench_json(str(path), [{"t": 3.0}], figure="f")
+    assert (tmp_path / "BENCH_c.json.bak").read_text().startswith(
+        '{"figure"')                                      # forensics kept
+    data = json_lib.loads(path.read_text())
+    assert len(data["runs"]) == 1
+    assert data["runs"][0]["results"] == [{"t": 3.0}]
+    # and the repaired file accumulates normally again
+    common.append_bench_json(str(path), [{"t": 4.0}], figure="f")
+    assert len(json_lib.loads(path.read_text())["runs"]) == 2
+
+
+def test_check_regression_gate(tmp_path, monkeypatch):
+    """The CI bench gate: >threshold tuned-plan throughput loss fails,
+    equal-or-better passes, and a commit-message waiver downgrades."""
+    import json as json_lib
+
+    from benchmarks import check_regression
+
+    def bench(path, t, per_op=2.0e-3):
+        # per_op is the same-run normalizer: the gate compares
+        # t_pallas_tuned_s / t_per_op_s so machine speed cancels
+        path.write_text(json_lib.dumps({"figure": "fig4_pipelines", "runs": [
+            {"git_rev": "x", "timestamp": "t", "results": [
+                {"pipeline": "spectrogram", "n": 4096,
+                 "t_per_op_s": per_op, "t_pallas_tuned_s": t}]}]}))
+
+    base, fresh = tmp_path / "base.json", tmp_path / "fresh.json"
+    bench(base, 1.0e-3)
+    monkeypatch.setenv("BENCH_COMMIT_MSG", "normal commit message")
+    # hermetic: the waiver scan falls through to git history, and this
+    # repo's actual commit messages must not decide the test
+    monkeypatch.setattr(check_regression, "_git_msg", lambda *rev: "")
+
+    bench(fresh, 1.1e-3)          # 9% slower: inside the 25% budget
+    assert check_regression.main(["--baseline", str(base),
+                                  "--fresh", str(fresh)]) == 0
+    bench(fresh, 1.5e-3)          # 33% throughput loss: gate fires
+    assert check_regression.main(["--baseline", str(base),
+                                  "--fresh", str(fresh)]) == 1
+    monkeypatch.setenv("BENCH_COMMIT_MSG",
+                       "slow but correct\n\nbench-waiver: kernel fix")
+    assert check_regression.main(["--baseline", str(base),
+                                  "--fresh", str(fresh)]) == 0
+    # a uniformly 2x slower CI runner is NOT a regression: the gate
+    # compares tuned-plan time relative to the same run's per-op
+    # baseline, so machine speed cancels
+    monkeypatch.setenv("BENCH_COMMIT_MSG", "normal commit message")
+    bench(fresh, 2.0e-3, per_op=4.0e-3)
+    assert check_regression.main(["--baseline", str(base),
+                                  "--fresh", str(fresh)]) == 0
 
 
 def test_autotune_save_merges_concurrent_entries(tmp_path, monkeypatch):

@@ -31,6 +31,11 @@ pipelines()
 RNG = np.random.default_rng(11)
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
+# per-test ceiling (enforced when pytest-timeout is installed, as in
+# CI): the subprocess numerics sweeps are the slow tail of this suite —
+# a hang must fail in minutes, not eat the 45-minute job timeout
+pytestmark = pytest.mark.timeout(900)
+
 
 def run_subprocess(body: str, n_devices: int = 8, env_extra=None):
     env = dict(os.environ)
@@ -200,6 +205,24 @@ def test_distributed_sharded_service_and_stream():
             g, {g.inputs[0]: xb.shape})(jnp.asarray(xb)))
         got = np.asarray(graph.ChunkedRunner(g, mesh=8).run(xb, 600))
         np.testing.assert_allclose(got, offline, rtol=1e-6, atol=1e-6)
+
+        # continuous batching on the mesh: the bucket ladder starts at
+        # the shard count (16 over 8 devices -> buckets 8/16), every
+        # response replays bit-for-bit against its served packing
+        from repro.graph.service import replay_batches
+        xs2 = [rng.standard_normal(256).astype(np.float32)
+               for _ in range(11)]
+        with graph.PipelineService(g, signal_len=256, batch_size=16,
+                                   batching='continuous', mesh=8,
+                                   record_batches=True) as svc2:
+            outs2 = [f.result(timeout=120)
+                     for f in [svc2.submit(x) for x in xs2]]
+        assert svc2.buckets == (8, 16), svc2.buckets
+        assert all(b % 8 == 0 for b, _ in svc2.batch_log)
+        assert replay_batches(svc2) == len(xs2)
+        for x, o in zip(xs2, outs2):
+            np.testing.assert_allclose(o, spec.oracle(x),
+                                       rtol=2e-3, atol=2e-3)
         print("OK")
         """)
 

@@ -1,0 +1,291 @@
+"""Continuous-batching service suite: arrival-pattern soaks (Poisson /
+bursty / adversarial), bucket-ladder numerics (every delivered response
+bit-for-bit equal to a replay of the exact packing served), and the PR-3
+lifecycle invariants under the continuous scheduler.
+
+CI runs this file as the `service` job under 8 forced virtual devices
+with pytest-timeout enforcing the per-test ceiling below — a deadlocked
+batcher thread fails in minutes instead of eating the job timeout.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import graph
+from repro.core.registry import PIPELINES, pipelines
+from repro.graph.service import (PipelineService, bucket_ladder,
+                                 replay_batches)
+
+pipelines()
+RNG = np.random.default_rng(23)
+
+# per-test wall-clock ceiling (enforced when pytest-timeout is
+# installed, as in CI): a wedged batcher must fail fast, not hang
+pytestmark = pytest.mark.timeout(120)
+
+
+def _signals(n_req, n=256):
+    return [RNG.standard_normal(n).astype(np.float32) for _ in range(n_req)]
+
+
+def _service(name="spectrogram", n=256, batch=8, **kw):
+    kw.setdefault("batching", "continuous")
+    kw.setdefault("record_batches", True)
+    return PIPELINES[name], PipelineService(
+        PIPELINES[name].build(), signal_len=n, batch_size=batch, **kw)
+
+
+# ---------------------------------------------------------------------------
+# bucket ladder
+# ---------------------------------------------------------------------------
+def test_bucket_ladder_shapes():
+    assert bucket_ladder(8) == (1, 2, 4, 8)
+    assert bucket_ladder(1) == (1,)
+    assert bucket_ladder(12) == (1, 2, 4, 8, 12)   # max is always a rung
+    assert bucket_ladder(8, 2) == (2, 4, 8)        # shard-divisible only
+    assert bucket_ladder(16, 4) == (4, 8, 16)
+    with pytest.raises(ValueError, match="max_batch"):
+        bucket_ladder(0)
+    with pytest.raises(ValueError, match="shard count"):
+        bucket_ladder(4, 8)
+
+
+def test_continuous_service_precompiles_ladder():
+    _, svc = _service(batch=8)
+    assert svc.buckets == (1, 2, 4, 8)
+    assert set(svc.plans) == {1, 2, 4, 8}
+    assert svc.plan is svc.plans[8]
+    # bucket plans are ordinary cached plans: a direct compile of the
+    # same shape is the same object (plan-cache reuse, no duplicates)
+    g = svc.graph
+    p = graph.compile(g, {g.inputs[0]: (4, 256)}, dtype="float32")
+    assert p is svc.plans[4]
+    svc.close()
+
+
+def test_invalid_batching_mode_rejected():
+    g = PIPELINES["spectrogram"].build()
+    with pytest.raises(ValueError, match="batching="):
+        PipelineService(g, signal_len=256, batch_size=2, batching="adaptive")
+
+
+# ---------------------------------------------------------------------------
+# numerics: responses == replayed packing, bit for bit
+# ---------------------------------------------------------------------------
+def test_continuous_sync_flush_buckets_and_oracle():
+    spec, svc = _service(batch=8)
+    xs = _signals(13)
+    futs = [svc.submit(x) for x in xs]
+    assert svc.flush() == 2                     # 8 + 5->bucket(8)
+    for x, f in zip(xs, futs):
+        np.testing.assert_allclose(f.result(timeout=5), spec.oracle(x),
+                                   rtol=2e-3, atol=2e-3)
+    s = svc.stats
+    assert s["requests"] == 13 and s["batches"] == 2
+    assert s["padded_slots"] == 3               # 5 rode an 8-bucket
+    assert replay_batches(svc) == 13            # bitwise, exact packing
+    svc.close()
+
+
+@pytest.mark.parametrize("name", ["spectrogram", "pfb_power"])
+def test_continuous_poisson_soak(name):
+    """Poisson arrivals at partial load: every future resolves, every
+    response is bit-for-bit the bucket plan's row for the packing that
+    served it (pfb_power included deliberately: its rows are NOT
+    bit-stable across batch sizes, so this pins per-packing determinism,
+    not a tiling accident)."""
+    spec, svc = _service(name, batch=8)
+    xs = _signals(48)
+    gaps = np.random.default_rng(5).exponential(0.002, size=len(xs))
+    with svc:
+        futs = []
+        for x, gap in zip(xs, gaps):
+            time.sleep(gap)
+            futs.append(svc.submit(x))
+        outs = [f.result(timeout=60) for f in futs]       # all resolve
+    for x, o in zip(xs, outs):
+        np.testing.assert_allclose(o, spec.oracle(x), rtol=2e-3, atol=2e-3)
+    assert replay_batches(svc) == len(xs)
+    assert svc.stats["batches"] >= 1
+    # the scheduler actually used the ladder: padding never exceeds what
+    # the next bucket requires (fixed packing would pad to 8 every time)
+    total_slots = svc.stats["requests"] + svc.stats["padded_slots"]
+    assert total_slots == sum(b for b, _ in svc.batch_log)
+
+
+def test_continuous_bursty_arrivals():
+    """Bursts larger than max_batch split into full batches; quiet gaps
+    between bursts produce small buckets, not stalls."""
+    spec, svc = _service(batch=4)
+    xs = _signals(30)
+    it = iter(xs)
+    futs = []
+    with svc:
+        for burst in (9, 1, 12, 2, 6):          # > max, singleton, ...
+            for _ in range(burst):
+                futs.append(svc.submit(next(it)))
+            time.sleep(0.05)                    # device drains the burst
+        outs = [f.result(timeout=60) for f in futs]
+    for x, o in zip(xs, outs):
+        np.testing.assert_allclose(o, spec.oracle(x), rtol=2e-3, atol=2e-3)
+    assert replay_batches(svc) == len(xs)
+    assert all(b <= 4 for b, _ in svc.batch_log)
+    assert any(len(items) == 4 for _, items in svc.batch_log)  # full loads
+
+
+def test_continuous_adversarial_trickle_no_fill_wait():
+    """The continuous claim itself: an idle device dispatches a lone
+    request immediately.  With a fill deadline of 30s a fixed batcher
+    would sit on it; continuous must resolve well inside the timeout."""
+    spec, svc = _service(batch=8, max_wait_ms=30_000.0)
+    with svc:
+        for x in _signals(3):
+            t0 = time.perf_counter()
+            out = svc.submit(x).result(timeout=10)
+            assert time.perf_counter() - t0 < 10
+            np.testing.assert_allclose(out, spec.oracle(x),
+                                       rtol=2e-3, atol=2e-3)
+    assert all(b == 1 for b, _ in svc.batch_log)   # served as singletons
+    assert replay_batches(svc) == 3
+
+
+def test_continuous_concurrent_submitters():
+    """Many producer threads racing submit(): per-request futures mean
+    no submitter waits on another's result, and nothing is lost."""
+    spec, svc = _service(batch=8)
+    xs = _signals(40)
+    results = [None] * len(xs)
+    errs = []
+
+    def producer(lo, hi):
+        try:
+            futs = [(i, svc.submit(xs[i])) for i in range(lo, hi)]
+            for i, f in futs:
+                results[i] = f.result(timeout=60)
+        except Exception as e:                   # noqa: BLE001
+            errs.append(e)
+
+    with svc:
+        threads = [threading.Thread(target=producer, args=(k, k + 8))
+                   for k in range(0, 40, 8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=90)
+    assert not errs
+    for x, o in zip(xs, results):
+        np.testing.assert_allclose(o, spec.oracle(x), rtol=2e-3, atol=2e-3)
+    assert replay_batches(svc) == len(xs)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle invariants survive the continuous scheduler
+# ---------------------------------------------------------------------------
+def test_continuous_close_while_loaded_resolves_everything():
+    spec, svc = _service(batch=4)
+    xs = _signals(21)
+    svc.start()
+    futs = [svc.submit(x) for x in xs]
+    svc.close()                                  # queue may still be deep
+    for x, f in zip(xs, futs):
+        np.testing.assert_allclose(f.result(timeout=60), spec.oracle(x),
+                                   rtol=2e-3, atol=2e-3)
+    assert replay_batches(svc) == len(xs)
+
+
+def test_continuous_submit_and_start_after_close_raise():
+    _, svc = _service(batch=2)
+    with svc:
+        svc.submit(np.zeros(256, np.float32)).result(timeout=60)
+    with pytest.raises(RuntimeError, match="service closed"):
+        svc.submit(np.zeros(256, np.float32))
+    with pytest.raises(RuntimeError, match="service closed"):
+        svc.start()
+    svc.close()                                  # idempotent on success
+
+
+def test_continuous_flush_while_started_raises():
+    _, svc = _service(batch=2)
+    svc.start()
+    try:
+        with pytest.raises(RuntimeError, match="two consumers"):
+            svc.flush()
+    finally:
+        svc.close()
+    assert svc.flush() == 0                      # legal again, and empty
+
+
+def test_continuous_failed_batch_fails_futures_not_thread():
+    spec, svc = _service(batch=4)
+    boom = RuntimeError("bucket boom")
+    svc.plans = {b: (lambda x, e=boom: (_ for _ in ()).throw(e))
+                 for b in svc.buckets}
+    with svc:
+        f = svc.submit(np.zeros(256, np.float32))
+        with pytest.raises(RuntimeError, match="bucket boom"):
+            f.result(timeout=30)
+        # the batcher thread survived the failed bucket: prove it by
+        # serving a healthy batch afterwards (plan-cache lookups)
+        svc.plans = {
+            b: graph.compile(svc.graph, {svc.graph.inputs[0]: (b, 256)},
+                             dtype="float32") for b in svc.buckets}
+        x = _signals(1)[0]
+        out = svc.submit(x).result(timeout=60)
+    np.testing.assert_allclose(out, spec.oracle(x), rtol=2e-3, atol=2e-3)
+    assert svc.stats["failed_batches"] == 1
+    # replay skips the failed packing and still verifies the healthy one
+    assert replay_batches(svc) == 1
+
+
+def test_fixed_mode_unchanged_stats_contract():
+    """batching="fixed" keeps the historical single-plan behavior: one
+    batch shape, max_wait fill deadline, and the exact stats keys."""
+    spec = PIPELINES["spectrogram"]
+    svc = PipelineService(spec.build(), signal_len=256, batch_size=4,
+                          batching="fixed")
+    assert svc.buckets == (4,)
+    xs = _signals(6)
+    futs = [svc.submit(x) for x in xs]
+    assert svc.flush() == 2
+    for x, f in zip(xs, futs):
+        np.testing.assert_allclose(f.result(timeout=5), spec.oracle(x),
+                                   rtol=2e-3, atol=2e-3)
+    assert svc.stats == {"requests": 6, "batches": 2, "padded_slots": 2}
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# mesh: bucket ladder restricted to shard-divisible sizes
+# ---------------------------------------------------------------------------
+def test_continuous_sharded_buckets_divisible():
+    """Sharded continuous serving: every rung splits over the mesh.
+    Runs on however many devices this process sees (1 locally, 8 in the
+    CI service job)."""
+    n_dev = len(jax.devices())
+    shards = min(n_dev, 4)
+    spec, svc = _service("fir_decimate", n=512, batch=4 * shards,
+                         mesh=shards)
+    assert svc.buckets == bucket_ladder(4 * shards, shards)
+    assert all(b % shards == 0 for b in svc.buckets)
+    for p in svc.plans.values():
+        assert p.mesh is not None
+    xs = _signals(2 * shards + 1, n=512)
+    with svc:
+        outs = [f.result(timeout=120) for f in [svc.submit(x) for x in xs]]
+    for x, o in zip(xs, outs):
+        np.testing.assert_allclose(o, spec.oracle(x), rtol=2e-3, atol=2e-3)
+    assert replay_batches(svc) == len(xs)
+
+
+def test_continuous_sharded_indivisible_batch_raises():
+    g = PIPELINES["spectrogram"].build()
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        pytest.skip("needs >= 2 devices (CI service job forces 8)")
+    with pytest.raises(ValueError, match="divis"):
+        PipelineService(g, signal_len=256, batch_size=n_dev + 1,
+                        batching="continuous", mesh=n_dev)
