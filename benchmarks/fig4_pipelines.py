@@ -27,6 +27,11 @@ instead of re-measuring noise.
 
 Appends a run record (git rev + timestamp) to ``BENCH_pipelines.json``
 via benchmarks/common.py, so the perf trajectory accumulates across PRs.
+Each record carries a ``telemetry`` sub-dict with the plan-cache and
+autotuner counter deltas for that (pipeline, n) cell — how many compiles
+were cache hits and how many candidate measurements the tuner actually
+ran — so a trajectory regression can be cross-read against compile/tune
+churn.
 """
 from __future__ import annotations
 
@@ -114,9 +119,16 @@ def run(sizes=(2 ** 13, 2 ** 15), repeats=10, autotune_col=False,
               "tuned-plan column will reuse cached/default configs")
     rng = np.random.default_rng(0)
     rows, records = [], []
+    def _meters():
+        c, a = plan_lib.cache_stats(), autotune.stats()
+        return {"plan_cache_hits": c["hits"], "plan_cache_misses":
+                c["misses"], "autotune_measured": a["measured"],
+                "autotune_cache_hits": a["cache_hits"]}
+
     for name, spec in sorted(PIPELINES.items()):
         g = spec.build()
         for n in sizes:
+            m0 = _meters()
             (x_np,) = spec.make_args(rng, n)
             x = jnp.asarray(x_np)
             shapes = {g.inputs[0]: x.shape}
@@ -182,6 +194,8 @@ def run(sizes=(2 ** 13, 2 ** 15), repeats=10, autotune_col=False,
                     mesh={a: int(s) for a, s in p_shard.mesh.shape.items()},
                     t_batch_single_s=t_single, t_batch_sharded_s=t_shard,
                     speedup_sharded_vs_single=t_single / t_shard)
+            m1 = _meters()
+            rec["telemetry"] = {k: m1[k] - m0[k] for k in m0}
             rows.append(row)
             records.append(rec)
 

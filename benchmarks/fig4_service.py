@@ -31,7 +31,13 @@ oracle.
 Appends a run record (git rev + timestamp, p50/p99 latency +
 throughput per mode) to ``BENCH_service.json`` via
 :func:`benchmarks.common.append_bench_json`, so the serving-latency
-trajectory accumulates across PRs like the pipeline one.
+trajectory accumulates across PRs like the pipeline one.  Each record
+also carries the service's own telemetry as flat numeric fields — the
+phase-attributed latency split (``<mode>_queued_ms_p50``,
+``<mode>_device_ms_p50``, ``<mode>_pad_ms_p50``, from
+``service.stats()``) and the run's plan-cache hit/miss delta — so
+``check_regression.py --metric continuous_device_ms_p50`` can gate an
+*attributed* phase, not just the end-to-end number.
 """
 from __future__ import annotations
 
@@ -43,6 +49,7 @@ import numpy as np
 
 from benchmarks.common import append_bench_json, fmt_table
 from repro.core.registry import PIPELINES, pipelines as _load_pipelines
+from repro.graph import plan as plan_lib
 from repro.graph.service import PipelineService, replay_batches
 
 
@@ -122,6 +129,7 @@ def run(pipeline="spectrogram", *, requests=200, max_batch=8,
     gaps = rng.exponential(1.0 / rate, size=requests)
 
     results = {}
+    cache0 = plan_lib.cache_stats()
     for mode in ("fixed", "continuous"):
         svc = PipelineService(g, signal_len=n, batch_size=max_batch,
                               batching=mode, lowering=lowering, mesh=mesh,
@@ -132,18 +140,23 @@ def run(pipeline="spectrogram", *, requests=200, max_batch=8,
         if mode == "continuous":
             checked = replay_batches(svc)      # bit-for-bit vs packing
             assert checked == requests, (checked, requests)
-        s = svc.stats
+        s = svc.stats()
         results[mode] = {
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
             "p99_ms": float(np.percentile(lat, 99) * 1e3),
             "mean_ms": float(lat.mean() * 1e3),
             "throughput_req_s": requests / makespan,
             "batches": s["batches"],
-            "fill": s["requests"] / max(1, s["requests"]
-                                        + s["padded_slots"]),
+            "fill": s["fill_ratio"],
             "bucket_batches": s.get("bucket_batches"),
+            # the service's own phase attribution: where each request's
+            # wall clock went (queue wait vs padding vs device)
+            **{f"{phase}_ms_{q}": s["latency_ms"][phase][q]
+               for phase in ("queued", "pad", "device")
+               for q in ("p50", "p99")},
         }
         del svc
+    cache1 = plan_lib.cache_stats()
 
     # oracle spot-check outside the timed window: the numerics path is
     # identical to the driven services (same bucket plans), and the
@@ -167,6 +180,10 @@ def run(pipeline="spectrogram", *, requests=200, max_batch=8,
               if k != "bucket_batches"},
            "continuous_bucket_batches":
                results["continuous"]["bucket_batches"],
+           # plan-cache churn across both driven services: steady-state
+           # serving should be all hits after the ladders compile
+           "plan_cache_hits": cache1["hits"] - cache0["hits"],
+           "plan_cache_misses": cache1["misses"] - cache0["misses"],
            "p50_speedup": (results["fixed"]["p50_ms"]
                            / results["continuous"]["p50_ms"]),
            "p99_speedup": (results["fixed"]["p99_ms"]

@@ -48,6 +48,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 SCHEMA_VERSION = 2
 
 
@@ -69,11 +71,18 @@ def mode() -> str:
 
 # path -> {"mtime": int | None, "entries": {key: entry}}
 _MEM: dict[str, dict] = {}
-_STATS = {"measured": 0, "cache_hits": 0, "pruned": 0}
+
+# tuner bookkeeping lives on obs counters (visible in obs.snapshot()
+# and dsp_serve --metrics-interval); stats() is a dict view of them
+_MEASURED = obs.counter("autotune.measured")
+_CACHE_HITS = obs.counter("autotune.cache_hits")
+_PRUNED = obs.counter("autotune.pruned")
+_STALE = obs.counter("autotune.stale")
 
 
 def stats() -> dict:
-    return dict(_STATS)
+    return {"measured": _MEASURED.value, "cache_hits": _CACHE_HITS.value,
+            "pruned": _PRUNED.value, "stale": _STALE.value}
 
 
 def _mtime(path: str) -> int | None:
@@ -193,7 +202,7 @@ def measure(fn, args, *, repeats: int = 3, warmup: int = 1,
             jax.block_until_ready(fn(*args))
             ts.append(time.perf_counter() - t0)
             if i == 0 and prune_above is not None and ts[0] > prune_above:
-                _STATS["pruned"] += 1
+                _PRUNED.add()
                 break
         return float(min(ts))
     except Exception:
@@ -290,86 +299,101 @@ def pick(graph, node, avals: dict, *, backend: str = None,
                 # params, tightened predicate) since it was written —
                 # fall through to defaults / re-measurement
                 hit, cfg = None, {}
+                _STALE.add()
         if hit:
-            _STATS["cache_hits"] += 1
+            _CACHE_HITS.add()
             return hit["lowering"], cfg
     if m == "cached":
         return default
 
-    _STATS["measured"] += 1
-    args = [_dummy(a) for a in in_avals]
-    times: dict[str, float] = {}
-    results: list[tuple[float, str, dict]] = []
-    fns: dict[str, Callable] = {}    # label -> jitted fn (playoff reuse)
-    incumbent = float("inf")
+    _MEASURED.add()
+    with obs.span("autotune.pick", cat="autotune", op=node.op,
+                  node=node.name):
+        args = [_dummy(a) for a in in_avals]
+        times: dict[str, float] = {}
+        results: list[tuple[float, str, dict]] = []
+        fns: dict[str, Callable] = {}  # label -> jitted fn (playoff reuse)
+        incumbent = float("inf")
 
-    def _jit(label, lw, cfg):
-        if label not in fns:
-            fns[label] = jax.jit(
-                lambda *a, _lw=lw, _cfg=cfg: apply_node(node, a, _lw, _cfg))
-        return fns[label]
+        def _jit(label, lw, cfg):
+            if label not in fns:
+                fns[label] = jax.jit(
+                    lambda *a, _lw=lw, _cfg=cfg: apply_node(node, a, _lw,
+                                                            _cfg))
+            return fns[label]
 
-    default_cfg: dict = {}
-    for lw in cands:
-        if lw == "pallas" and pallas_tunable:
-            # valid candidates only; when the space filters everything
-            # (predicate too conservative for this shape), still measure
-            # pallas with its trusted kernel defaults ({}) — dropping
-            # the lowering entirely would regress vs the v1 tuner
-            cfgs = space.configs(ctx) or ({},)
-            # the playoff's hysteresis anchor is the kernel default —
-            # only when it survived validation (configs() lists it
-            # first); otherwise there is no default to prefer
-            default_cfg = (dict(cfgs[0])
-                           if cfgs[0] and cfgs[0] == space.default(ctx)
-                           else {})
-        else:
-            cfgs = ({},)
-        for cfg in cfgs:
-            label = _cfg_label(lw, cfg)
-            t = measure(_jit(label, lw, cfg), args, repeats=repeats,
-                        prune_above=incumbent)
-            times[label] = t
-            results.append((t, lw, dict(cfg)))
-            incumbent = min(incumbent, t)
+        default_cfg: dict = {}
+        for lw in cands:
+            if lw == "pallas" and pallas_tunable:
+                # valid candidates only; when the space filters
+                # everything (predicate too conservative for this
+                # shape), still measure pallas with its trusted kernel
+                # defaults ({}) — dropping the lowering entirely would
+                # regress vs the v1 tuner
+                cfgs = space.configs(ctx) or ({},)
+                # the playoff's hysteresis anchor is the kernel default
+                # — only when it survived validation (configs() lists
+                # it first); otherwise there is no default to prefer
+                default_cfg = (dict(cfgs[0])
+                               if cfgs[0] and cfgs[0] == space.default(ctx)
+                               else {})
+            else:
+                cfgs = ({},)
+            for cfg in cfgs:
+                label = _cfg_label(lw, cfg)
+                with obs.span("autotune.measure", cat="autotune",
+                              op=node.op, candidate=label):
+                    t = measure(_jit(label, lw, cfg), args,
+                                repeats=repeats, prune_above=incumbent)
+                times[label] = t
+                results.append((t, lw, dict(cfg)))
+                incumbent = min(incumbent, t)
 
-    if not results:
-        # every candidate was filtered (e.g. a shape no tiling in the
-        # space fits): run the kernel defaults rather than failing
-        return default
+        if not results:
+            # every candidate was filtered (e.g. a shape no tiling in
+            # the space fits): run the kernel defaults rather than
+            # failing
+            return default
 
-    # collapse the pallas configs to one survivor: the scan times
-    # candidates back-to-back, so machine drift can crown a marginal
-    # (noise) winner — re-measure the scan winner against the default
-    # tiling interleaved, and keep the default unless the winner is
-    # decisively faster
-    pallas_rs = [r for r in results if r[1] == "pallas"]
-    if default_cfg and pallas_rs:
-        t_scan, _, cfg_scan = min(pallas_rs, key=lambda r: r[0])
-        t_def_scan = next((r[0] for r in pallas_rs if r[2] == default_cfg),
-                          float("inf"))
-        if (cfg_scan != default_cfg and np.isfinite(t_scan)
-                and np.isfinite(t_def_scan)):
-            t_def, t_win = _playoff(
-                _jit(_cfg_label("pallas", default_cfg), "pallas",
-                     default_cfg),
-                _jit(_cfg_label("pallas", cfg_scan), "pallas", cfg_scan),
-                args, repeats=max(repeats, 5))
-            times["playoff:" + _cfg_label("pallas", default_cfg)] = t_def
-            times["playoff:" + _cfg_label("pallas", cfg_scan)] = t_win
-            survivor = ((t_win, "pallas", cfg_scan)
-                        if t_win < PLAYOFF_MARGIN * t_def
-                        else (t_def, "pallas", default_cfg))
-        else:
-            survivor = (t_scan, "pallas", cfg_scan)
-        results = [r for r in results if r[1] != "pallas"] + [survivor]
+        # collapse the pallas configs to one survivor: the scan times
+        # candidates back-to-back, so machine drift can crown a
+        # marginal (noise) winner — re-measure the scan winner against
+        # the default tiling interleaved, and keep the default unless
+        # the winner is decisively faster
+        pallas_rs = [r for r in results if r[1] == "pallas"]
+        if default_cfg and pallas_rs:
+            t_scan, _, cfg_scan = min(pallas_rs, key=lambda r: r[0])
+            t_def_scan = next((r[0] for r in pallas_rs
+                               if r[2] == default_cfg), float("inf"))
+            if (cfg_scan != default_cfg and np.isfinite(t_scan)
+                    and np.isfinite(t_def_scan)):
+                t_def, t_win = _playoff(
+                    _jit(_cfg_label("pallas", default_cfg), "pallas",
+                         default_cfg),
+                    _jit(_cfg_label("pallas", cfg_scan), "pallas",
+                         cfg_scan),
+                    args, repeats=max(repeats, 5))
+                times["playoff:" + _cfg_label("pallas", default_cfg)] = \
+                    t_def
+                times["playoff:" + _cfg_label("pallas", cfg_scan)] = t_win
+                survivor = ((t_win, "pallas", cfg_scan)
+                            if t_win < PLAYOFF_MARGIN * t_def
+                            else (t_def, "pallas", default_cfg))
+            else:
+                survivor = (t_scan, "pallas", cfg_scan)
+            results = [r for r in results if r[1] != "pallas"] + [survivor]
 
-    best_t, best_lw, best_cfg = min(results, key=lambda r: r[0])
-    best = (best_lw, best_cfg) if np.isfinite(best_t) else default
-    cache[key] = {"lowering": best[0], "config": best[1], "backend": backend,
-                  "times_us": {k: round(v * 1e6, 1)
-                               for k, v in times.items() if np.isfinite(v)}}
-    _save(path, cache)
+        best_t, best_lw, best_cfg = min(results, key=lambda r: r[0])
+        best = (best_lw, best_cfg) if np.isfinite(best_t) else default
+        obs.instant("autotune.winner", cat="autotune", op=node.op,
+                    node=node.name, lowering=best[0],
+                    config=_cfg_label(best[0], best[1]))
+        cache[key] = {"lowering": best[0], "config": best[1],
+                      "backend": backend,
+                      "times_us": {k: round(v * 1e6, 1)
+                                   for k, v in times.items()
+                                   if np.isfinite(v)}}
+        _save(path, cache)
     return best
 
 
@@ -410,52 +434,59 @@ def pick_fusion(graph, run, avals: dict, *, backend: str = None,
     chain = "+".join(f"{s[0]}" for s in steps)
     key = f"fusion|{chain}|{shapes}|{lowering}|{backend}"
 
+    def _verdict(fused: bool) -> bool:
+        obs.counter("plan.fusion.fused" if fused
+                    else "plan.fusion.unfused").add()
+        return fused
+
     m = mode()
     if m == "off":
-        return True
+        return _verdict(True)
     path = path or cache_path()
     cache = _load(path)
     hit = cache.get(key)
     if hit is not None and "fused" in hit:
-        _STATS["cache_hits"] += 1
-        return bool(hit["fused"])
+        _CACHE_HITS.add()
+        return _verdict(bool(hit["fused"]))
     if m == "cached":
-        return True
+        return _verdict(True)
 
-    _STATS["measured"] += 1
-    from repro.graph.graph import Node
-    probe = Node("_fusion_probe", "fused_ew",
-                 (data_in, *operand_refs),
-                 (("members", tuple(n.name for n in run)),
-                  ("steps", steps)))
-    args = [_dummy(a) for a in in_avals]
+    _MEASURED.add()
+    with obs.span("autotune.fusion", cat="autotune", chain=chain):
+        from repro.graph.graph import Node
+        probe = Node("_fusion_probe", "fused_ew",
+                     (data_in, *operand_refs),
+                     (("members", tuple(n.name for n in run)),
+                      ("steps", steps)))
+        args = [_dummy(a) for a in in_avals]
 
-    fused_fn = jax.jit(lambda *a: apply_node(probe, a, lowering))
+        fused_fn = jax.jit(lambda *a: apply_node(probe, a, lowering))
 
-    def unfused(*a):
-        acc = a[0]
-        k = 1
-        for n, step in zip(run, steps):
-            if step[0] in ("mul", "add"):     # binary: consumes an operand
-                acc = apply_node(n, (acc, a[k]), lowering)
-                k += 1
-            else:                             # abs2 / scale: unary
-                acc = apply_node(n, (acc,), lowering)
-        return acc
-    unfused_fn = jax.jit(unfused)
+        def unfused(*a):
+            acc = a[0]
+            k = 1
+            for n, step in zip(run, steps):
+                if step[0] in ("mul", "add"):  # binary: consumes operand
+                    acc = apply_node(n, (acc, a[k]), lowering)
+                    k += 1
+                else:                          # abs2 / scale: unary
+                    acc = apply_node(n, (acc,), lowering)
+            return acc
+        unfused_fn = jax.jit(unfused)
 
-    t_fused = measure(fused_fn, args, repeats=repeats)
-    t_unfused = measure(unfused_fn, args, repeats=repeats,
-                        prune_above=t_fused)
-    fused = not (np.isfinite(t_unfused)
-                 and t_unfused < FUSION_MARGIN * t_fused)
-    cache[key] = {"fused": fused, "lowering": lowering, "backend": backend,
-                  "times_us": {k: round(v * 1e6, 1)
-                               for k, v in (("fused", t_fused),
-                                            ("unfused", t_unfused))
-                               if np.isfinite(v)}}
-    _save(path, cache)
-    return fused
+        t_fused = measure(fused_fn, args, repeats=repeats)
+        t_unfused = measure(unfused_fn, args, repeats=repeats,
+                            prune_above=t_fused)
+        fused = not (np.isfinite(t_unfused)
+                     and t_unfused < FUSION_MARGIN * t_fused)
+        cache[key] = {"fused": fused, "lowering": lowering,
+                      "backend": backend,
+                      "times_us": {k: round(v * 1e6, 1)
+                                   for k, v in (("fused", t_fused),
+                                                ("unfused", t_unfused))
+                                   if np.isfinite(v)}}
+        _save(path, cache)
+    return _verdict(fused)
 
 
 # ---------------------------------------------------------------------------

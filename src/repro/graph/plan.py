@@ -65,6 +65,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.core.opdefs import OPDEFS
 from repro.graph.graph import Graph, Node
 
@@ -303,17 +304,29 @@ class Plan:
 
 
 _CACHE: dict[tuple, Plan] = {}
-_STATS = {"hits": 0, "misses": 0}
 _WARNED_DOWNGRADES: set[tuple] = set()
+
+# the ONE set of books for the plan cache — cache_stats() reads these
+# same counters ``compile``/``clear_cache`` bump (no parallel dict),
+# and they show up in obs.snapshot() / dsp_serve --metrics-interval
+_HITS = obs.counter("plan.cache.hits")
+_MISSES = obs.counter("plan.cache.misses")
+_EVICTIONS = obs.counter("plan.cache.evictions")
+_DOWNGRADES = obs.counter("plan.downgrades")
 
 
 def cache_stats() -> dict:
-    return dict(_STATS)
+    """Plan-cache telemetry: size + hit/miss/eviction counts (read off
+    the :mod:`repro.obs` counters ``compile`` maintains)."""
+    return {"size": len(_CACHE), "hits": _HITS.value,
+            "misses": _MISSES.value, "evictions": _EVICTIONS.value}
 
 
 def clear_cache() -> None:
+    _EVICTIONS.add(len(_CACHE))
     _CACHE.clear()
-    _STATS.update(hits=0, misses=0)
+    _HITS.reset()
+    _MISSES.reset()
 
 
 def _warn_downgrades(graph: Graph, downgrades: dict[str, str]) -> None:
@@ -454,140 +467,168 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
            mesh_key, tune_key)
     plan = _CACHE.get(key)
     if plan is not None:
-        _STATS["hits"] += 1
+        _HITS.add()
         return plan
-    _STATS["misses"] += 1
-
-    for node in graph.topo():
-        if node.op in ("input", "const"):
-            continue
-        if node.op not in OPS:
-            raise ValueError(f"{node.name}: unknown op {node.op!r}; "
-                             f"known ops: {sorted(OPS)}")
-        try:
-            OPS[node.op].bind(node.attr)
-        except ValueError as e:
-            raise ValueError(f"{node.name}: {e}") from None
-    # sharded plans trace/fuse/tune on the per-shard problem: the body
-    # runs under shard_map, so that's what each device actually executes
-    body_specs = specs
-    if mesh is not None:
-        body_specs = {
-            n: jax.ShapeDtypeStruct((s.shape[0] // n_shards,)
-                                    + tuple(s.shape[1:]), s.dtype)
-            for n, s in specs.items()}
-    avals = infer(graph, body_specs)
-    if fuse == "auto":
-        from repro.graph import autotune
-        if isinstance(lowering, str) and lowering in ("native", "conv",
-                                                      "pallas"):
-            probe_lw = lowering
-        else:
-            # auto / per-node requests: measure the verdict where it is
-            # consequential — the pallas chain kernel (one launch) vs
-            # per-member kernels.  Fused-vs-unfused native is the same
-            # XLA fusion either way, so a native probe would answer a
-            # question the autotuned plan never asks.
-            probe_lw = "pallas"
-        g = fuse_elementwise(
-            graph, avals,
-            keep=lambda run: autotune.pick_fusion(
-                graph, run, avals, backend=backend, lowering=probe_lw,
-                **(autotune_kwargs or {})))
-    elif fuse:
-        g = fuse_elementwise(graph, avals)
-    else:
-        g = graph
-    if g is not graph:
-        avals = infer(g, body_specs)
-
-    lowerings: dict[str, str] = {}
-    configs: dict[str, dict] = {}
-    downgrades: dict[str, str] = {}
-    compute = [n for n in g.topo() if n.op not in ("input", "const")]
-
-    def resolve(node: Node, requested: str | None) -> None:
-        """Record the node's effective lowering (+ the downgrade when
-        the request can't be honored).  Lowering-agnostic ops (pure
-        data movement — one code path whatever the lowering) satisfy
-        any request with native and are not downgrades."""
-        if requested is None:
-            lowerings[node.name] = "native"
-        elif requested in OPS[node.op].lowerings:
-            lowerings[node.name] = requested
-        else:
-            lowerings[node.name] = "native"
-            if requested != "native" and not OPS[node.op].lowering_agnostic:
-                downgrades[node.name] = requested
-
-    if lowering == "auto":
-        from repro.graph import autotune
-        for node in compute:
-            lw, cfg = autotune.pick(g, node, avals, backend=backend,
-                                    **(autotune_kwargs or {}))
-            lowerings[node.name] = lw
-            configs[node.name] = cfg
-    elif isinstance(lowering, dict):
-        for node in compute:
-            if node.name in lowering:
-                resolve(node, lowering[node.name])
-            elif node.op == "fused_ew":
-                # fusion renamed the member nodes: honor their requested
-                # lowering when the members agree, else fall back
-                req = {lowering[m] for m in node.attr.get("members", ())
-                       if m in lowering}
-                resolve(node, req.pop() if len(req) == 1 else None)
+    _MISSES.add()
+    with obs.span("plan.compile", cat="compile", graph=graph.name,
+                  backend=backend, lowering=str(low_key),
+                  shapes=",".join(f"{n}:{specs[n].shape}"
+                                  for n in graph.inputs)):
+        for node in graph.topo():
+            if node.op in ("input", "const"):
+                continue
+            if node.op not in OPS:
+                raise ValueError(f"{node.name}: unknown op {node.op!r}; "
+                                 f"known ops: {sorted(OPS)}")
+            try:
+                OPS[node.op].bind(node.attr)
+            except ValueError as e:
+                raise ValueError(f"{node.name}: {e}") from None
+        # sharded plans trace/fuse/tune on the per-shard problem: the
+        # body runs under shard_map, so that's what each device
+        # actually executes
+        body_specs = specs
+        if mesh is not None:
+            body_specs = {
+                n: jax.ShapeDtypeStruct((s.shape[0] // n_shards,)
+                                        + tuple(s.shape[1:]), s.dtype)
+                for n, s in specs.items()}
+        avals = infer(graph, body_specs)
+        with obs.span("plan.fuse", cat="compile", graph=graph.name,
+                      mode=str(fuse)):
+            if fuse == "auto":
+                from repro.graph import autotune
+                if isinstance(lowering, str) and lowering in (
+                        "native", "conv", "pallas"):
+                    probe_lw = lowering
+                else:
+                    # auto / per-node requests: measure the verdict where
+                    # it is consequential — the pallas chain kernel (one
+                    # launch) vs per-member kernels.  Fused-vs-unfused
+                    # native is the same XLA fusion either way, so a
+                    # native probe would answer a question the autotuned
+                    # plan never asks.
+                    probe_lw = "pallas"
+                g = fuse_elementwise(
+                    graph, avals,
+                    keep=lambda run: autotune.pick_fusion(
+                        graph, run, avals, backend=backend,
+                        lowering=probe_lw, **(autotune_kwargs or {})))
+            elif fuse:
+                g = fuse_elementwise(graph, avals)
             else:
-                resolve(node, None)
-    else:
-        for node in compute:
-            resolve(node, lowering)
-    if downgrades:
-        _warn_downgrades(g, downgrades)
+                g = graph
+        if g is not graph:
+            avals = infer(g, body_specs)
 
-    if block_configs == "auto" and lowering != "auto":
-        # tune block configs for the already-chosen lowerings
-        from repro.graph import autotune
-        for node in compute:
-            _, cfg = autotune.pick(g, node, avals, backend=backend,
-                                   lowerings=(lowerings[node.name],),
-                                   **(autotune_kwargs or {}))
-            configs[node.name] = cfg
-    elif isinstance(block_configs, dict):
-        configs.update({n: dict(c) for n, c in block_configs.items()})
+        lowerings: dict[str, str] = {}
+        configs: dict[str, dict] = {}
+        downgrades: dict[str, str] = {}
+        compute = [n for n in g.topo() if n.op not in ("input", "const")]
 
-    if tune_key is not None:
-        # tuning above may have written the cache file (bumping its
-        # mtime); store the plan under the post-save key so the next
-        # identical compile is the cache hit stream.py promises
-        from repro.graph import autotune
-        path = tune_key[1]
-        key = key[:-1] + ((tune_key[0], path, autotune._mtime(path),
-                           tune_key[3]),)
+        def resolve(node: Node, requested: str | None) -> None:
+            """Record the node's effective lowering (+ the downgrade when
+            the request can't be honored).  Lowering-agnostic ops (pure
+            data movement — one code path whatever the lowering) satisfy
+            any request with native and are not downgrades."""
+            if requested is None:
+                lowerings[node.name] = "native"
+            elif requested in OPS[node.op].lowerings:
+                lowerings[node.name] = requested
+            else:
+                lowerings[node.name] = "native"
+                if requested != "native" \
+                        and not OPS[node.op].lowering_agnostic:
+                    downgrades[node.name] = requested
 
-    plan = Plan(graph=g, input_names=tuple(g.inputs), lowerings=lowerings,
-                key=key, configs=configs, downgrades=downgrades,
-                mesh=mesh, batch_axis=batch_axis)
+        # one lowering-selection span whatever the mode: the phase that
+        # consults (or bypasses) the autotuner, so every compile's trace
+        # attributes its selection time — auto plans additionally get a
+        # per-node span around each tuner query
+        with obs.span("plan.autotune", cat="autotune", graph=g.name,
+                      mode=(lowering if isinstance(lowering, str)
+                            else "per-node")):
+            if lowering == "auto":
+                from repro.graph import autotune
+                for node in compute:
+                    with obs.span("plan.lower", cat="autotune",
+                                  node=node.name, op=node.op):
+                        lw, cfg = autotune.pick(
+                            g, node, avals, backend=backend,
+                            **(autotune_kwargs or {}))
+                    lowerings[node.name] = lw
+                    configs[node.name] = cfg
+            elif isinstance(lowering, dict):
+                for node in compute:
+                    if node.name in lowering:
+                        resolve(node, lowering[node.name])
+                    elif node.op == "fused_ew":
+                        # fusion renamed the member nodes: honor their
+                        # requested lowering when the members agree,
+                        # else fall back
+                        req = {lowering[m]
+                               for m in node.attr.get("members", ())
+                               if m in lowering}
+                        resolve(node, req.pop() if len(req) == 1 else None)
+                    else:
+                        resolve(node, None)
+            else:
+                for node in compute:
+                    resolve(node, lowering)
+            if downgrades:
+                _DOWNGRADES.add(len(downgrades))
+                _warn_downgrades(g, downgrades)
 
-    def raw(*arrays):
-        plan._traces.append(1)      # side effect fires only while tracing
-        return _execute(g, dict(zip(g.inputs, arrays)), lowerings, configs)
+            if block_configs == "auto" and lowering != "auto":
+                # tune block configs for the already-chosen lowerings
+                from repro.graph import autotune
+                for node in compute:
+                    with obs.span("plan.lower", cat="autotune",
+                                  node=node.name, op=node.op):
+                        _, cfg = autotune.pick(
+                            g, node, avals, backend=backend,
+                            lowerings=(lowerings[node.name],),
+                            **(autotune_kwargs or {}))
+                    configs[node.name] = cfg
+            elif isinstance(block_configs, dict):
+                configs.update({n: dict(c)
+                                for n, c in block_configs.items()})
 
-    if mesh is None:
-        plan._fn = jax.jit(raw)
-    else:
-        from repro.distributed.sharding import batch_shardings
-        shardings = batch_shardings(
-            {n: specs[n] for n in g.inputs}, mesh, {"batch": batch_axis})
-        plan.input_shardings = tuple(shardings[n] for n in g.inputs)
-        fn = shard_map(raw, mesh=mesh,
-                       in_specs=tuple(P(batch_axis) for _ in g.inputs),
-                       out_specs=(P(batch_axis) if len(g.outputs) == 1
-                                  else tuple(P(batch_axis)
-                                             for _ in g.outputs)),
-                       check_rep=False)
-        plan._fn = jax.jit(fn, in_shardings=plan.input_shardings)
-    _CACHE[key] = plan
+        if tune_key is not None:
+            # tuning above may have written the cache file (bumping its
+            # mtime); store the plan under the post-save key so the next
+            # identical compile is the cache hit stream.py promises
+            from repro.graph import autotune
+            path = tune_key[1]
+            key = key[:-1] + ((tune_key[0], path, autotune._mtime(path),
+                               tune_key[3]),)
+
+        plan = Plan(graph=g, input_names=tuple(g.inputs),
+                    lowerings=lowerings, key=key, configs=configs,
+                    downgrades=downgrades, mesh=mesh,
+                    batch_axis=batch_axis)
+
+        def raw(*arrays):
+            plan._traces.append(1)  # side effect fires only while tracing
+            return _execute(g, dict(zip(g.inputs, arrays)), lowerings,
+                            configs)
+
+        if mesh is None:
+            plan._fn = jax.jit(raw)
+        else:
+            from repro.distributed.sharding import batch_shardings
+            shardings = batch_shardings(
+                {n: specs[n] for n in g.inputs}, mesh,
+                {"batch": batch_axis})
+            plan.input_shardings = tuple(shardings[n] for n in g.inputs)
+            fn = shard_map(raw, mesh=mesh,
+                           in_specs=tuple(P(batch_axis) for _ in g.inputs),
+                           out_specs=(P(batch_axis) if len(g.outputs) == 1
+                                      else tuple(P(batch_axis)
+                                                 for _ in g.outputs)),
+                           check_rep=False)
+            plan._fn = jax.jit(fn, in_shardings=plan.input_shardings)
+        _CACHE[key] = plan
     return plan
 
 

@@ -33,6 +33,16 @@ Two drive modes (orthogonal to the batching policy):
 ``submit`` returns a ``concurrent.futures.Future`` resolving to that
 request's output slice (a numpy array).
 
+Telemetry: ``service.stats()`` returns a consistent locked
+:class:`StatsSnapshot` — request/batch/padding counters, queue depth,
+fill ratio, and per-phase request-latency histograms (total / queued /
+pad / device, with p50/p95/p99) — replacing the old bare ``stats`` dict
+that the scheduler thread mutated while callers read it.  The attribute
+form ``service.stats`` still works (deprecated) and now returns a
+snapshot too.  With ``TINA_TELEMETRY=on`` every dispatched batch also
+emits ``service.dispatch`` / ``service.pack`` / ``service.device_run``
+spans on the process trace (:mod:`repro.obs`).
+
 Sharded mode: ``mesh=`` (a Mesh or device count) compiles the serving
 plan(s) with the batch axis placed across the mesh.  Every bucket in
 the continuous ladder is restricted to shard-divisible sizes — the
@@ -59,8 +69,27 @@ from concurrent.futures import Future
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.graph import plan as plan_lib
 from repro.graph.graph import Graph
+
+
+class StatsSnapshot(dict):
+    """A point-in-time copy of a service's stats (a plain dict) that is
+    also callable: ``service.stats`` gives one consistent snapshot for
+    dict-style access (the deprecated historical interface), and
+    ``service.stats()`` returns a *fresh* snapshot — the new API.  Every
+    key was read under the service's stats lock, so the counters are
+    mutually consistent even mid-soak."""
+
+    __slots__ = ("_refresh",)
+
+    def __init__(self, data: dict, refresh):
+        super().__init__(data)
+        self._refresh = refresh
+
+    def __call__(self) -> "StatsSnapshot":
+        return self._refresh()
 
 
 def bucket_ladder(max_batch: int, shards: int = 1) -> tuple[int, ...]:
@@ -116,7 +145,22 @@ class PipelineService:
         # it a submit racing close can enqueue after the final drain,
         # recreating the hung-future bug the flag exists to prevent
         self._lifecycle = threading.Lock()
-        self.stats = {"requests": 0, "batches": 0, "padded_slots": 0}
+        # stats live behind their own lock and are only read through
+        # consistent snapshots (the ``stats`` property / ``stats()``):
+        # the scheduler thread mutates them while callers read, and the
+        # old bare-dict interface raced (read-modify-write on
+        # failed_batches, torn multi-key reads)
+        self._stats_lock = threading.Lock()
+        self._stats = {"requests": 0, "batches": 0, "padded_slots": 0,
+                       "failed_batches": 0}
+        # request-latency attribution (milliseconds): total is
+        # submit -> result; queued is submit -> dispatch (per request),
+        # pad is host-side batch packing, device is the plan call (both
+        # per batch) — the phase breakdown the ROADMAP's perf claims
+        # need.  Service-private histograms: two services must not mix
+        # their latency distributions in a shared registry.
+        self._lat = {k: obs.Histogram(f"service.latency.{k}", unit="ms")
+                     for k in ("total", "queued", "pad", "device")}
         # optional packing trace for tests/benchmarks: every dispatched
         # batch appends (bucket, [(request, future)]) so a replay can
         # verify delivered responses bit-for-bit against the exact
@@ -147,7 +191,7 @@ class PipelineService:
             for b in self.buckets}
         self.plan = self.plans[self.batch_size]
         if batching == "continuous":
-            self.stats["bucket_batches"] = {b: 0 for b in self.buckets}
+            self._stats["bucket_batches"] = {b: 0 for b in self.buckets}
 
     # -- request side -------------------------------------------------------
     def submit(self, x) -> Future:
@@ -157,14 +201,39 @@ class PipelineService:
                 f"request shape {x.shape} != ({self.signal_len},) — "
                 "fixed-shape serving; open one service per signal length")
         fut: Future = Future()
+        fut._tina_submit_t = time.perf_counter()   # queued-phase stamp
         with self._lifecycle:
             if self._closed:
                 # the consumer is gone (thread joined, final flush ran):
                 # enqueuing would leave the caller hanging in fut.result()
                 raise RuntimeError("service closed")
-            self.stats["requests"] += 1
+            with self._stats_lock:
+                self._stats["requests"] += 1
             self._q.put((x, fut))
         return fut
+
+    # -- stats --------------------------------------------------------------
+    def _snapshot(self) -> StatsSnapshot:
+        """One consistent read of every stat (all keys copied under the
+        stats lock) plus the derived observability surface: queue depth,
+        fill ratio, and the phase-attributed latency summaries."""
+        with self._stats_lock:
+            d = {k: (dict(v) if isinstance(v, dict) else v)
+                 for k, v in self._stats.items()}
+        d["queue_depth"] = self._q.qsize()
+        d["fill_ratio"] = d["requests"] / max(
+            1, d["requests"] + d["padded_slots"])
+        d["latency_ms"] = {k: h.summary() for k, h in self._lat.items()}
+        return StatsSnapshot(d, self._snapshot)
+
+    @property
+    def stats(self) -> StatsSnapshot:
+        """Service stats.  ``service.stats()`` (the stable API) returns
+        a fresh consistent snapshot; plain ``service.stats`` dict access
+        is the deprecated historical interface and now yields a
+        point-in-time copy instead of the live (racy) dict — mutating
+        it does nothing."""
+        return self._snapshot()
 
     # -- batch execution ----------------------------------------------------
     def _bucket_for(self, n: int) -> int:
@@ -190,25 +259,40 @@ class PipelineService:
         else:
             bucket = self.batch_size
             plan = self.plan          # monkeypatchable failure-injection
-        batch = self._pack(bucket, items)
-        if self.batch_log is not None:
-            self.batch_log.append((bucket, list(items)))
-        try:
-            out = np.asarray(plan(jnp.asarray(batch)))
-        except Exception as e:          # noqa: BLE001 — delivered to callers
-            # fail the batch's futures, not the batcher thread: clients
-            # blocked in fut.result() must see the error, and later
-            # requests should still be served
-            for _, fut in items:
-                fut.set_exception(e)
-            self.stats["failed_batches"] = \
-                self.stats.get("failed_batches", 0) + 1
-            return
-        self.stats["batches"] += 1
-        self.stats["padded_slots"] += bucket - n
-        if self.batching == "continuous":
-            self.stats["bucket_batches"][bucket] += 1
+        t_dispatch = time.perf_counter()
+        with obs.span("service.dispatch", cat="serve", bucket=bucket, n=n):
+            with obs.span("service.pack", cat="serve", bucket=bucket):
+                batch = self._pack(bucket, items)
+            t_packed = time.perf_counter()
+            if self.batch_log is not None:
+                self.batch_log.append((bucket, list(items)))
+            try:
+                with obs.span("service.device_run", cat="serve",
+                              bucket=bucket):
+                    out = np.asarray(plan(jnp.asarray(batch)))
+            except Exception as e:   # noqa: BLE001 — delivered to callers
+                # fail the batch's futures, not the batcher thread:
+                # clients blocked in fut.result() must see the error,
+                # and later requests should still be served
+                for _, fut in items:
+                    fut.set_exception(e)
+                with self._stats_lock:
+                    self._stats["failed_batches"] += 1
+                return
+            t_device = time.perf_counter()
+        with self._stats_lock:
+            self._stats["batches"] += 1
+            self._stats["padded_slots"] += bucket - n
+            if self.batching == "continuous":
+                self._stats["bucket_batches"][bucket] += 1
+        self._lat["pad"].record((t_packed - t_dispatch) * 1e3)
+        self._lat["device"].record((t_device - t_packed) * 1e3)
         for i, (_, fut) in enumerate(items):
+            t_sub = getattr(fut, "_tina_submit_t", None)
+            if t_sub is not None:
+                self._lat["queued"].record((t_dispatch - t_sub) * 1e3)
+                self._lat["total"].record(
+                    (time.perf_counter() - t_sub) * 1e3)
             fut.set_result(out[i])
 
     def flush(self) -> int:
@@ -378,4 +462,5 @@ def replay_batches(svc: PipelineService) -> int:
     return checked
 
 
-__all__ = ["PipelineService", "bucket_ladder", "replay_batches"]
+__all__ = ["PipelineService", "StatsSnapshot", "bucket_ladder",
+           "replay_batches"]

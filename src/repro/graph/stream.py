@@ -54,6 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.opdefs import OPDEFS
 from repro.graph import plan as plan_lib
 from repro.graph.graph import Graph, Node
@@ -172,6 +173,7 @@ class ChunkedRunner:
         r, b = self.spec.receptive, self.spec.block
         if buf.shape[-1] < r:
             self._carry = buf
+            obs.gauge("stream.deferred_samples").set(self.carry_len)
             return None
         n_steps = (buf.shape[-1] - r) // b + 1
         if self.step_buckets and not final:
@@ -179,10 +181,18 @@ class ChunkedRunner:
         use = r + (n_steps - 1) * b
         window = buf[..., :use]
         self.window_lens.add(int(use))
-        p = plan_lib.compile(self.graph, {self.graph.inputs[0]: window.shape},
-                             dtype=str(window.dtype), **self.compile_opts)
-        out = p(jnp.asarray(window))
+        with obs.span("stream.push", cat="stream", graph=self.graph.name,
+                      steps=int(n_steps), window=int(use)):
+            p = plan_lib.compile(self.graph,
+                                 {self.graph.inputs[0]: window.shape},
+                                 dtype=str(window.dtype),
+                                 **self.compile_opts)
+            out = p(jnp.asarray(window))
         self._carry = buf[..., n_steps * b:]
+        # the deferred remainder a bucketed push left behind (plus the
+        # ordinary sub-receptive-field overlap) — a streaming front door
+        # watches this to see how far behind the quantizer is running
+        obs.gauge("stream.deferred_samples").set(self.carry_len)
         return out
 
     def finalize(self) -> jax.Array | None:

@@ -28,11 +28,25 @@ the service accepts traffic, regardless of the ambient
 ``TINA_AUTOTUNE=cached`` still serves tuned kernels: the pre-warm pass
 persists winners to the on-disk cache and the (cached-mode) service
 plan compiles against them.
+
+Observability: ``--trace out.json`` turns span collection on
+(equivalent to ``TINA_TELEMETRY=on``) and writes a Chrome trace of the
+whole run — plan compilation, autotune selection, batch dispatch,
+device execution, per-thread tracks — openable at ``chrome://tracing``
+or https://ui.perfetto.dev.  ``--metrics-interval S`` prints a JSON
+metrics snapshot (service stats + plan-cache + autotuner counters) to
+stderr every S seconds while serving.  ``--jax-profiler DIR``
+additionally brackets the serving window with jax's own profiler
+(XLA-level device traces land in DIR, viewable in TensorBoard /
+Perfetto).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import sys
+import threading
 import time
 
 import numpy as np    # jax-free: safe before the --devices flag lands
@@ -80,7 +94,48 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--tune-repeats", type=int, default=2,
                     help="per-candidate repeats inside the pre-warm "
                          "autotune pass")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="collect telemetry spans (forces span "
+                         "collection on for this run) and write a "
+                         "Chrome trace-event JSON viewable in "
+                         "chrome://tracing or Perfetto")
+    ap.add_argument("--metrics-interval", type=float, default=0.0,
+                    metavar="SEC",
+                    help="print a JSON metrics snapshot (service stats "
+                         "+ plan cache + autotuner counters) to stderr "
+                         "every SEC seconds while serving (0 = off)")
+    ap.add_argument("--jax-profiler", metavar="DIR", default=None,
+                    help="bracket the serving window with "
+                         "jax.profiler.start_trace/stop_trace writing "
+                         "device-level traces to DIR")
     return ap
+
+
+def _metrics_snapshot(svc) -> dict:
+    """Everything a scrape wants in one dict: the service's consistent
+    stats snapshot plus the process-wide plan-cache/autotuner/obs
+    counters."""
+    from repro import obs
+    from repro.graph import autotune, plan as plan_lib
+    return {"time": time.time(), "service": svc.stats(),
+            "plan_cache": plan_lib.cache_stats(),
+            "autotune": autotune.stats(),
+            "gauges": obs.snapshot()["gauges"]}
+
+
+def _start_metrics_thread(svc, interval: float):
+    """Emit one JSON metrics line to stderr every ``interval`` seconds
+    until the returned event is set (daemon thread — a hung service
+    doesn't keep the process alive)."""
+    stop = threading.Event()
+
+    def loop():
+        while not stop.wait(interval):
+            print(json.dumps(_metrics_snapshot(svc)), file=sys.stderr,
+                  flush=True)
+
+    threading.Thread(target=loop, daemon=True).start()
+    return stop
 
 
 def prewarm(graph_obj, batch: int, signal_len: int, *, lowering: str,
@@ -119,7 +174,6 @@ def main(argv=None):
     if args.devices:
         # must precede the first jax import: jax locks the device count
         # at backend init, which is why the imports below are deferred
-        import sys
         if "jax" in sys.modules:
             raise SystemExit(
                 "--devices has no effect once jax is imported (the "
@@ -130,9 +184,15 @@ def main(argv=None):
         os.environ["XLA_FLAGS"] = \
             (os.environ.get("XLA_FLAGS", "") + " " + flag).strip()
 
+    from repro import obs
     from repro.core.registry import PIPELINES, pipelines
     from repro.graph.service import PipelineService
 
+    if args.trace:
+        # span collection on for the whole run (compile + tune + serve),
+        # whatever $TINA_TELEMETRY says — asking for a trace IS the
+        # opt-in
+        obs.enable()
     pipelines()
     if args.pipeline not in PIPELINES:
         raise SystemExit(f"unknown pipeline {args.pipeline!r}; "
@@ -194,29 +254,57 @@ def main(argv=None):
 
     signals = [rng.standard_normal(n).astype(np.float32)
                for _ in range(args.requests)]
+    metrics_stop = (_start_metrics_thread(svc, args.metrics_interval)
+                    if args.metrics_interval > 0 else None)
+    profiling = False
+    if args.jax_profiler:
+        import jax
+        jax.profiler.start_trace(args.jax_profiler)
+        profiling = True
     t0 = time.perf_counter()
-    with svc:
-        futs = [svc.submit(x) for x in signals]
-        outs = [f.result(timeout=120) for f in futs]
-    elapsed = time.perf_counter() - t0
+    try:
+        with svc:
+            futs = [svc.submit(x) for x in signals]
+            outs = [f.result(timeout=120) for f in futs]
+    finally:
+        elapsed = time.perf_counter() - t0
+        if profiling:
+            import jax
+            jax.profiler.stop_trace()
+            print(f"[dsp_serve] jax profiler trace in {args.jax_profiler}")
+        if metrics_stop is not None:
+            metrics_stop.set()
+            # one final scrape so short runs still emit a snapshot
+            print(json.dumps(_metrics_snapshot(svc)), file=sys.stderr,
+                  flush=True)
 
     for i in range(min(args.check, len(outs))):
         want = spec.oracle(signals[i])
         np.testing.assert_allclose(outs[i], want, rtol=2e-3, atol=2e-3)
 
-    s = svc.stats
-    # padded_slots is measured against each batch's own bucket, so this
-    # fill formula is exact for both batching modes
-    fill = s["requests"] / max(1, s["requests"] + s["padded_slots"])
+    s = svc.stats()                  # one consistent locked snapshot
+    # padded_slots is measured against each batch's own bucket, so the
+    # fill ratio is exact for both batching modes
     buckets = (f", buckets {s['bucket_batches']}"
                if "bucket_batches" in s else "")
     traces = max(p.trace_count for p in svc.plans.values())
     print(f"[dsp_serve] {s['requests']} requests in {elapsed:.3f}s "
           f"({s['requests'] / elapsed:.1f} req/s), {s['batches']} batches, "
-          f"fill {fill:.0%}{buckets}, plan traces {traces} "
+          f"fill {s['fill_ratio']:.0%}{buckets}, plan traces {traces} "
           f"(1 == every batch was a cache hit)")
+    lat = s["latency_ms"]
+    if lat["total"]["count"]:
+        print("[dsp_serve] latency p50/p99 ms — "
+              + ", ".join(f"{k} {lat[k]['p50']:.2f}/{lat[k]['p99']:.2f}"
+                          for k in ("total", "queued", "pad", "device")))
     print(f"[dsp_serve] {args.check} responses verified against the "
           "numpy oracle")
+    if args.trace:
+        n_events = obs.export_chrome_trace(args.trace)
+        dropped = obs.REGISTRY.dropped_events
+        print(f"[dsp_serve] wrote {n_events} trace events to {args.trace}"
+              + (f" ({dropped} dropped: buffer full)" if dropped else "")
+              + " — open in chrome://tracing or https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

@@ -236,7 +236,10 @@ def test_service_sync_flush_matches_oracle():
     for x, f in zip(xs, futs):
         np.testing.assert_allclose(f.result(timeout=5), spec.oracle(x),
                                    rtol=2e-3, atol=2e-3)
-    assert svc.stats == {"requests": 6, "batches": 2, "padded_slots": 2}
+    s = svc.stats()                       # fresh consistent snapshot
+    assert {k: s[k] for k in ("requests", "batches", "padded_slots")} \
+        == {"requests": 6, "batches": 2, "padded_slots": 2}
+    assert s["latency_ms"]["total"]["count"] == 6
     assert svc.plan.trace_count == 1      # both batches: same cached plan
 
 

@@ -243,7 +243,8 @@ def test_continuous_failed_batch_fails_futures_not_thread():
 
 def test_fixed_mode_unchanged_stats_contract():
     """batching="fixed" keeps the historical single-plan behavior: one
-    batch shape, max_wait fill deadline, and the exact stats keys."""
+    batch shape, max_wait fill deadline, the legacy counter values —
+    and no continuous-only keys (bucket_batches)."""
     spec = PIPELINES["spectrogram"]
     svc = PipelineService(spec.build(), signal_len=256, batch_size=4,
                           batching="fixed")
@@ -254,7 +255,14 @@ def test_fixed_mode_unchanged_stats_contract():
     for x, f in zip(xs, futs):
         np.testing.assert_allclose(f.result(timeout=5), spec.oracle(x),
                                    rtol=2e-3, atol=2e-3)
-    assert svc.stats == {"requests": 6, "batches": 2, "padded_slots": 2}
+    s = svc.stats()
+    assert {k: s[k] for k in ("requests", "batches", "padded_slots")} \
+        == {"requests": 6, "batches": 2, "padded_slots": 2}
+    assert "bucket_batches" not in s
+    # old attribute access still works (deprecated), and both forms are
+    # snapshots of the same books
+    assert svc.stats["requests"] == 6
+    assert s["fill_ratio"] == 6 / 8
     svc.close()
 
 
