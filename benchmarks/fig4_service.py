@@ -38,6 +38,16 @@ phase-attributed latency split (``<mode>_queued_ms_p50``,
 ``service.stats()``) and the run's plan-cache hit/miss delta — so
 ``check_regression.py --metric continuous_device_ms_p50`` can gate an
 *attributed* phase, not just the end-to-end number.
+
+Each record also carries an **overload point**: the same trace offered
+at ``--overload-load`` (default 1.5x) times capacity against a bounded
+queue (``queue_limit = 2 * batch``) with ``on_full="shed"`` — served
+p50/p99, shed ratio, and served throughput (``overload_*`` fields).
+That is the admission-control claim in numbers: at offered load above
+capacity the served latency distribution stays bounded because the
+queue does, and exactly the shed requests pay for it (every shed future
+fails typed with ``Overloaded``; anything else failing fails the
+benchmark).
 """
 from __future__ import annotations
 
@@ -50,20 +60,29 @@ import numpy as np
 from benchmarks.common import append_bench_json, fmt_table
 from repro.core.registry import PIPELINES, pipelines as _load_pipelines
 from repro.graph import plan as plan_lib
+from repro.graph.errors import Overloaded
 from repro.graph.service import PipelineService, replay_batches
 
 
-def drive(svc: PipelineService, signals, gaps, *, timeout=180.0):
+def drive(svc: PipelineService, signals, gaps, *, timeout=180.0,
+          allow_shed=False):
     """Submit ``signals`` on the ``gaps`` inter-arrival schedule against
-    a started service; returns (per-request latencies [s], makespan [s]).
+    a started service; returns (per-request latencies [s], makespan [s],
+    served mask).
 
     Latency is submit -> future-done, stamped in the future's done
     callback (the batcher thread), so one slow consumer of a result
     can't inflate another request's number.
+
+    ``allow_shed``: an overload drive against a bounded shedding queue —
+    ``Overloaded`` futures are an expected outcome (masked out of
+    ``served``); any *other* failure still raises, so a fault that isn't
+    admission control fails the benchmark loudly.
     """
     n = len(signals)
     done_t = np.zeros(n)
     lat = np.zeros(n)
+    ok = np.ones(n, dtype=bool)
     futs = []
     svc.start()
     t_start = time.perf_counter()
@@ -82,10 +101,15 @@ def drive(svc: PipelineService, signals, gaps, *, timeout=180.0):
 
         fut.add_done_callback(_done)
         futs.append(fut)
-    for f in futs:
-        f.result(timeout=timeout)    # every future must resolve
+    for i, f in enumerate(futs):
+        try:
+            f.result(timeout=timeout)   # every future must resolve
+        except Overloaded:
+            if not allow_shed:
+                raise
+            ok[i] = False
     svc.close()
-    return lat, float(done_t.max() - t_start)
+    return lat, float(done_t.max() - t_start), ok
 
 
 def _warm(svc: PipelineService) -> None:
@@ -97,7 +121,7 @@ def _warm(svc: PipelineService) -> None:
 
 def run(pipeline="spectrogram", *, requests=200, max_batch=8,
         signal_len=4096, load=0.5, max_wait_ms=10.0, mesh=None,
-        lowering="native", check=8, seed=0):
+        lowering="native", check=8, seed=0, overload_load=1.5):
     _load_pipelines()
     spec = PIPELINES[pipeline]
     g = spec.build()
@@ -136,7 +160,7 @@ def run(pipeline="spectrogram", *, requests=200, max_batch=8,
                               max_wait_ms=max_wait_ms,
                               record_batches=(mode == "continuous"))
         _warm(svc)
-        lat, makespan = drive(svc, signals, gaps)
+        lat, makespan, _ = drive(svc, signals, gaps)
         if mode == "continuous":
             checked = replay_batches(svc)      # bit-for-bit vs packing
             assert checked == requests, (checked, requests)
@@ -157,6 +181,36 @@ def run(pipeline="spectrogram", *, requests=200, max_batch=8,
         }
         del svc
     cache1 = plan_lib.cache_stats()
+
+    # the overload point: offered load ABOVE capacity against a bounded
+    # queue with shedding on — what the latency distribution and shed
+    # ratio look like when admission control is doing its job (an
+    # unbounded queue here would show runaway p99, not a policy)
+    ov_limit = 2 * max_batch
+    ov = PipelineService(g, signal_len=n, batch_size=max_batch,
+                         batching="continuous", lowering=lowering,
+                         mesh=mesh, queue_limit=ov_limit, on_full="shed",
+                         record_batches=True)
+    _warm(ov)
+    rate_ov = overload_load * capacity
+    gaps_ov = rng.exponential(1.0 / rate_ov, size=requests)
+    lat_ov, makespan_ov, ok = drive(ov, signals, gaps_ov, allow_shed=True)
+    served = int(ok.sum())
+    assert replay_batches(ov) == served      # admitted rows stay bitwise
+    s_ov = ov.stats()
+    assert s_ov["shed"] == requests - served, (s_ov["shed"], served)
+    served_lat = lat_ov[ok] if served else np.zeros(1)
+    overload = {
+        "overload_offered_load": float(overload_load),
+        "overload_queue_limit": int(ov_limit),
+        "overload_served": served,
+        "overload_shed": int(s_ov["shed"]),
+        "overload_shed_ratio": float(s_ov["shed"]) / requests,
+        "overload_p50_ms": float(np.percentile(served_lat, 50) * 1e3),
+        "overload_p99_ms": float(np.percentile(served_lat, 99) * 1e3),
+        "overload_throughput_req_s": served / makespan_ov,
+    }
+    del ov
 
     # oracle spot-check outside the timed window: the numerics path is
     # identical to the driven services (same bucket plans), and the
@@ -187,13 +241,21 @@ def run(pipeline="spectrogram", *, requests=200, max_batch=8,
            "p50_speedup": (results["fixed"]["p50_ms"]
                            / results["continuous"]["p50_ms"]),
            "p99_speedup": (results["fixed"]["p99_ms"]
-                           / results["continuous"]["p99_ms"])}
+                           / results["continuous"]["p99_ms"]),
+           **overload}
     rows = [[m, f"{r['p50_ms']:.2f}", f"{r['p99_ms']:.2f}",
              f"{r['throughput_req_s']:.1f}", r["batches"],
              f"{r['fill']:.0%}"] for m, r in results.items()]
+    rows.append([f"shed@{overload_load:g}x",
+                 f"{overload['overload_p50_ms']:.2f}",
+                 f"{overload['overload_p99_ms']:.2f}",
+                 f"{overload['overload_throughput_req_s']:.1f}",
+                 f"{served}/{requests}",
+                 f"{overload['overload_shed_ratio']:.0%} shed"])
     table = fmt_table(
         f"Fig.4-service: {pipeline} n={n} batch<= {max_batch} "
-        f"Poisson load {load:.0%} of capacity ({rate:.1f} req/s)",
+        f"Poisson load {load:.0%} of capacity ({rate:.1f} req/s), "
+        f"overload row at {overload_load:g}x with queue_limit={ov_limit}",
         ["batching", "p50_ms", "p99_ms", "req/s", "batches", "fill"], rows)
     return table, rec
 
@@ -216,19 +278,27 @@ def main(argv=None):
                     help="shard each bucket across N devices")
     ap.add_argument("--check", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--overload-load", type=float, default=1.5,
+                    help="offered load (x capacity) for the overload-"
+                         "point row driven against a bounded shedding "
+                         "queue (must exceed 1 to mean anything)")
     ap.add_argument("--out", default="BENCH_service.json")
     args = ap.parse_args(argv)
     table, rec = run(args.pipeline, requests=args.requests,
                      max_batch=args.batch, signal_len=args.signal_len,
                      load=args.load, max_wait_ms=args.max_wait_ms,
                      mesh=args.mesh or None, lowering=args.lowering,
-                     check=args.check, seed=args.seed)
+                     check=args.check, seed=args.seed,
+                     overload_load=args.overload_load)
     print(table)
     path = append_bench_json(args.out, [rec], figure="fig4_service",
                              requests=args.requests, load=args.load)
     print(f"\n[fig4_service] p50 {rec['fixed_p50_ms']:.2f} ms (fixed) -> "
           f"{rec['continuous_p50_ms']:.2f} ms (continuous), "
-          f"{rec['p50_speedup']:.2f}x; appended run to {path}")
+          f"{rec['p50_speedup']:.2f}x; overload {args.overload_load:g}x: "
+          f"p50/p99 {rec['overload_p50_ms']:.2f}/"
+          f"{rec['overload_p99_ms']:.2f} ms at "
+          f"{rec['overload_shed_ratio']:.0%} shed; appended run to {path}")
 
 
 if __name__ == "__main__":

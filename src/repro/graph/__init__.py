@@ -10,7 +10,11 @@ cached, autotuned, streamable plans.
                 on-disk cache
   stream.py     chunked streaming executor (offline-identical output)
   service.py    batched pipeline serving: fixed packing or continuous
-                batching over a ladder of pre-compiled bucket plans
+                batching over a ladder of pre-compiled bucket plans,
+                with admission control, deadlines, and batch-failure
+                recovery (retry / bisect / degrade)
+  errors.py     typed serving failures (Overloaded, DeadlineExceeded,
+                InvalidRequest)
   pipelines.py  built-in workloads (spectrogram, pfb_power,
                 fir_decimate, stft_overlap_add, correlate,
                 cascaded_channelizer)
@@ -26,7 +30,9 @@ Quick use::
     # batch axis split across local devices; == unsharded numerics
 """
 from repro.core.opdefs import OPDEFS, OpDef
-from repro.graph import autotune, pipelines, plan, service, stream
+from repro.graph import autotune, errors, pipelines, plan, service, stream
+from repro.graph.errors import (DeadlineExceeded, InvalidRequest,
+                                Overloaded, ServiceError)
 from repro.graph.graph import Graph, Node
 from repro.graph.pipelines import (BUILTINS, build_cascaded_channelizer,
                                    build_correlate, build_fir_decimate,
@@ -41,6 +47,7 @@ __all__ = [
     "Graph", "Node", "OpDef", "OPDEFS", "Plan", "compile", "cache_stats",
     "clear_cache", "ChunkedRunner", "stream_execute", "stream_spec",
     "PipelineService", "bucket_ladder", "replay_batches",
+    "ServiceError", "Overloaded", "DeadlineExceeded", "InvalidRequest",
     "BUILTINS", "build_spectrogram", "build_pfb_power",
     "build_fir_decimate", "build_stft_overlap_add", "build_correlate",
     "build_cascaded_channelizer", "autotune", "pipelines", "plan",

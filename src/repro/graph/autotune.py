@@ -42,6 +42,7 @@ import json
 import os
 import tempfile
 import time
+import warnings
 from typing import Callable, Sequence
 
 import jax
@@ -49,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.obs import faults
 
 SCHEMA_VERSION = 2
 
@@ -78,11 +80,13 @@ _MEASURED = obs.counter("autotune.measured")
 _CACHE_HITS = obs.counter("autotune.cache_hits")
 _PRUNED = obs.counter("autotune.pruned")
 _STALE = obs.counter("autotune.stale")
+_CACHE_CORRUPT = obs.counter("autotune.cache_corrupt")
 
 
 def stats() -> dict:
     return {"measured": _MEASURED.value, "cache_hits": _CACHE_HITS.value,
-            "pruned": _PRUNED.value, "stale": _STALE.value}
+            "pruned": _PRUNED.value, "stale": _STALE.value,
+            "cache_corrupt": _CACHE_CORRUPT.value}
 
 
 def _mtime(path: str) -> int | None:
@@ -92,18 +96,44 @@ def _mtime(path: str) -> int | None:
         return None
 
 
-def _read_file(path: str) -> dict:
-    """Read + migrate a cache file into a flat entries dict."""
+def _quarantine_corrupt(path: str, why: str) -> dict:
+    """A cache file that exists but can't be parsed is evidence of a
+    bug or a torn write — preserve it as ``<path>.bak`` for forensics
+    (mirroring ``benchmarks.common.append_bench_json``) instead of
+    silently shadowing it with an empty cache until the next ``_save``
+    overwrites the evidence."""
+    _CACHE_CORRUPT.add()
+    bak = path + ".bak"
     try:
+        os.replace(path, bak)
+        action = f"quarantined to {bak}"
+    except OSError:
+        action = "could not be quarantined (read-only FS?)"
+    warnings.warn(
+        f"autotune cache {path} is corrupt ({why}); {action}; starting "
+        "with a fresh cache", stacklevel=3)
+    return {}
+
+
+def _read_file(path: str) -> dict:
+    """Read + migrate a cache file into a flat entries dict.  A missing
+    file (or an injected ``cache_io`` fault) is a fresh start; a file
+    that *exists* but doesn't parse is quarantined to ``.bak``."""
+    try:
+        faults.check("cache_io")
         with open(path) as f:
             raw = json.load(f)
-    except (OSError, ValueError):
-        return {}
+    except (OSError, faults.InjectedFault):
+        return {}                # no cache (or chaos-injected I/O): fresh
+    except ValueError:
+        return _quarantine_corrupt(path, "unparseable JSON")
     if not isinstance(raw, dict):
-        return {}
+        return _quarantine_corrupt(path, "top level is not a JSON object")
     if raw.get("schema") == SCHEMA_VERSION:
         entries = raw.get("entries", {})
-        return entries if isinstance(entries, dict) else {}
+        if not isinstance(entries, dict):
+            return _quarantine_corrupt(path, "'entries' is not an object")
+        return entries
     # v1: a flat key -> {lowering, ...} map (no schema marker).  Keep the
     # tuned lowering; block configs default until re-measured.
     return {k: {"config": {}, **v}
@@ -122,6 +152,11 @@ def _load(path: str) -> dict:
 
 
 def _save(path: str, entries: dict) -> None:
+    try:
+        faults.check("cache_io")
+    except faults.InjectedFault:
+        return                   # injected I/O failure: like a read-only
+        # FS, tuning stays in-memory and serving continues
     try:
         os.makedirs(os.path.dirname(path), exist_ok=True)
         # merge with what's on disk so concurrent tuners (other
@@ -194,6 +229,7 @@ def measure(fn, args, *, repeats: int = 3, warmup: int = 1,
     remaining repeats and return immediately; the candidate can't win.
     """
     try:
+        faults.check("autotune_measure")
         for _ in range(warmup):
             jax.block_until_ready(fn(*args))
         ts = []

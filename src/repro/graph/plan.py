@@ -402,7 +402,11 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
     ``lowering``: a lowering name for every node (unsupported nodes fall
     back to native — recorded on ``Plan.downgrades`` and warned once), a
     {node: lowering} dict, or ``"auto"`` to let the measurement-based
-    autotuner choose per node.
+    autotuner choose per node.  ``"reference"`` is an alias for the
+    native (pure jax.numpy) path — the degradation target the serving
+    layer recompiles a persistently failing bucket with (its runtime
+    downgrades live on ``PipelineService.downgrades``, extending the
+    compile-time ``Plan.downgrades`` contract).
 
     ``block_configs``: Pallas block sizes per node — ``None`` (kernel
     defaults; with ``lowering="auto"`` the autotuner picks them jointly
@@ -426,6 +430,10 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
     (axes, sizes, device ids).
     """
     backend = backend or jax.default_backend()
+    if lowering == "reference":
+        lowering = "native"      # alias: "run the trusted slow path" —
+        # shares native's cache key so degraded buckets reuse any
+        # already-compiled native plan
     specs = _norm_specs(graph, shapes, dtype)
     mesh, batch_axis = _norm_mesh(mesh, shard)
     mesh_key = None

@@ -31,17 +31,53 @@ Two drive modes (orthogonal to the batching policy):
     queue with the configured policy.
 
 ``submit`` returns a ``concurrent.futures.Future`` resolving to that
-request's output slice (a numpy array).
+request's output slice (a numpy array) **or a typed exception** — the
+fault-tolerance contract is that every admitted future resolves, with
+a result or with an error that names what went wrong
+(:mod:`repro.graph.errors`).
+
+Fault tolerance (every behavior testable via :mod:`repro.obs.faults` —
+no monkeypatching):
+
+  * **Admission** — ``queue_limit=`` bounds the queue; ``on_full``
+    picks the policy when it's at the limit: ``"block"`` (submit waits
+    for space, honoring the request's deadline), ``"shed"`` (the
+    returned future fails immediately with :class:`Overloaded` — the
+    load-shedding a saturated replica needs), or ``"raise"``
+    (``submit`` raises :class:`Overloaded`).
+  * **Deadlines** — ``submit(x, deadline_ms=...)`` (or the service-wide
+    ``deadline_ms=``) stamps an expiry; requests still queued past it
+    fail with :class:`DeadlineExceeded` *before* consuming a device
+    slot (swept at dispatch time and while blocked at admission).
+    Requests dispatched in time always get their result.
+  * **Validation** — ``validate="strict"`` rejects non-finite payloads
+    at submit: the returned future fails with :class:`InvalidRequest`
+    and the poison never reaches a batch.
+  * **Retry / poison isolation** — a failed batch retries with capped
+    exponential backoff (``max_retries``, ``retry_backoff_ms``);
+    injected faults marked persistent skip the pointless retries.  A
+    batch that still fails is **bisected**: halves re-run through their
+    own bucket plans, recursively, so healthy requests get their
+    results and only the poisoned row's future receives the error
+    (quarantine counter + ``service.quarantine`` instant per
+    isolation).
+  * **Degradation** — a bucket whose plan keeps failing
+    (``degrade_after`` consecutive post-retry failures) is recompiled
+    once with ``lowering="reference"`` and the downgrade is recorded on
+    ``service.downgrades`` (the runtime extension of the compile-time
+    ``Plan.downgrades`` contract) — predictable slow beats
+    unpredictable dead.
 
 Telemetry: ``service.stats()`` returns a consistent locked
-:class:`StatsSnapshot` — request/batch/padding counters, queue depth,
-fill ratio, and per-phase request-latency histograms (total / queued /
-pad / device, with p50/p95/p99) — replacing the old bare ``stats`` dict
-that the scheduler thread mutated while callers read it.  The attribute
-form ``service.stats`` still works (deprecated) and now returns a
-snapshot too.  With ``TINA_TELEMETRY=on`` every dispatched batch also
-emits ``service.dispatch`` / ``service.pack`` / ``service.device_run``
-spans on the process trace (:mod:`repro.obs`).
+:class:`StatsSnapshot` — request/batch/padding counters, the
+fault-tolerance counters (``shed`` / ``expired`` / ``retries`` /
+``quarantined`` / ``degraded`` / ``invalid``), queue depth, fill ratio,
+and per-phase request-latency histograms.  With ``TINA_TELEMETRY=on``
+every dispatched batch emits ``service.dispatch`` / ``service.pack`` /
+``service.device_run`` spans, and the recovery machinery adds
+``service.retry`` / ``service.bisect`` spans plus
+``service.quarantine`` / ``service.degrade`` instants
+(:mod:`repro.obs`).
 
 Sharded mode: ``mesh=`` (a Mesh or device count) compiles the serving
 plan(s) with the batch axis placed across the mesh.  Every bucket in
@@ -53,10 +89,12 @@ Lifecycle (defined order: ``start`` -> ``submit``/... -> ``close``):
 ``flush()`` on a *started* service raises — the batcher thread is the
 queue's only consumer while it runs, and a second drain would split one
 logical batch across two consumers.  ``close()`` stops the thread
-(verifying it actually exited before draining the remainder) and marks
+(verifying it actually exited before draining the remainder), wakes any
+submitter blocked at admission (they raise ``RuntimeError``), and marks
 the service closed: ``submit()``/``start()`` afterwards raise
 RuntimeError instead of enqueuing requests no consumer will ever serve.
-These invariants hold under both batching policies.
+These invariants hold under both batching policies and under fault
+injection — the batcher thread survives every failure mode above.
 """
 from __future__ import annotations
 
@@ -64,6 +102,7 @@ import bisect
 import queue
 import threading
 import time
+import warnings
 from concurrent.futures import Future
 
 import jax.numpy as jnp
@@ -71,7 +110,10 @@ import numpy as np
 
 from repro import obs
 from repro.graph import plan as plan_lib
+from repro.graph.errors import (DeadlineExceeded, InvalidRequest,
+                                Overloaded)
 from repro.graph.graph import Graph
+from repro.obs import faults
 
 
 class StatsSnapshot(dict):
@@ -113,13 +155,27 @@ def bucket_ladder(max_batch: int, shards: int = 1) -> tuple[int, ...]:
     return tuple(sizes)
 
 
+# process-wide fault-tolerance books (the per-service ``stats()`` keys
+# mirror these): visible in obs.snapshot() / dsp_serve --metrics-interval
+_SHED = obs.counter("service.shed")
+_EXPIRED = obs.counter("service.expired")
+_RETRIED = obs.counter("service.retried")
+_QUARANTINED = obs.counter("service.quarantined")
+_DEGRADED = obs.counter("service.degraded")
+_INVALID = obs.counter("service.invalid")
+
+
 class PipelineService:
     def __init__(self, graph: Graph, signal_len: int, *,
                  batch_size: int = 8, batching: str = "fixed",
                  dtype="float32", lowering="native", block_configs=None,
                  mesh=None, max_wait_ms: float = 2.0,
                  close_timeout: float = 30.0, record_batches: bool = False,
-                 **compile_opts):
+                 queue_limit: int | None = None, on_full: str = "block",
+                 deadline_ms: float | None = None, validate: str = "off",
+                 max_retries: int = 2, retry_backoff_ms: float = 1.0,
+                 retry_backoff_max_ms: float = 100.0,
+                 degrade_after: int = 3, **compile_opts):
         if len(graph.inputs) != 1:
             raise ValueError("serving supports single-input graphs")
         if len(graph.outputs) != 1:
@@ -129,6 +185,23 @@ class PipelineService:
         if batching not in ("fixed", "continuous"):
             raise ValueError(
                 f"batching={batching!r}: expected 'fixed' or 'continuous'")
+        if on_full not in ("block", "shed", "raise"):
+            raise ValueError(
+                f"on_full={on_full!r}: expected 'block', 'shed', or "
+                "'raise'")
+        if validate not in ("strict", "off"):
+            raise ValueError(
+                f"validate={validate!r}: expected 'strict' or 'off'")
+        if queue_limit is not None and queue_limit < 1:
+            raise ValueError(
+                f"queue_limit={queue_limit}: expected None (unbounded) "
+                "or a positive depth")
+        if deadline_ms is not None and deadline_ms < 0:
+            raise ValueError(f"deadline_ms={deadline_ms}: must be >= 0")
+        if max_retries < 0:
+            raise ValueError(f"max_retries={max_retries}: must be >= 0")
+        faults.load()   # strict TINA_FAULTS validation: fail the launch,
+        # not the Nth request, on a typo'd chaos spec
         self.graph = graph
         self.signal_len = int(signal_len)
         self.batch_size = int(batch_size)
@@ -136,6 +209,14 @@ class PipelineService:
         self.dtype = np.dtype(dtype)
         self.max_wait_ms = max_wait_ms
         self.close_timeout = close_timeout
+        self.queue_limit = queue_limit
+        self.on_full = on_full
+        self.deadline_ms = deadline_ms
+        self.validate = validate
+        self.max_retries = int(max_retries)
+        self.retry_backoff_ms = float(retry_backoff_ms)
+        self.retry_backoff_max_ms = float(retry_backoff_max_ms)
+        self.degrade_after = int(degrade_after)
         self._q: "queue.Queue[tuple[np.ndarray, Future] | None]" = \
             queue.Queue()
         self._thread: threading.Thread | None = None
@@ -145,6 +226,11 @@ class PipelineService:
         # it a submit racing close can enqueue after the final drain,
         # recreating the hung-future bug the flag exists to prevent
         self._lifecycle = threading.Lock()
+        # admission waits (on_full="block") ride the same lock as a
+        # Condition: the consumer notifies per dequeue, close() wakes
+        # every blocked submitter so none outlives the service
+        self._space = threading.Condition(self._lifecycle)
+        self._depth = 0              # admitted-but-undequeued requests
         # stats live behind their own lock and are only read through
         # consistent snapshots (the ``stats`` property / ``stats()``):
         # the scheduler thread mutates them while callers read, and the
@@ -152,7 +238,9 @@ class PipelineService:
         # failed_batches, torn multi-key reads)
         self._stats_lock = threading.Lock()
         self._stats = {"requests": 0, "batches": 0, "padded_slots": 0,
-                       "failed_batches": 0}
+                       "failed_batches": 0, "shed": 0, "expired": 0,
+                       "retries": 0, "quarantined": 0, "degraded": 0,
+                       "invalid": 0}
         # request-latency attribution (milliseconds): total is
         # submit -> result; queued is submit -> dispatch (per request),
         # pad is host-side batch packing, device is the plan call (both
@@ -161,10 +249,11 @@ class PipelineService:
         # their latency distributions in a shared registry.
         self._lat = {k: obs.Histogram(f"service.latency.{k}", unit="ms")
                      for k in ("total", "queued", "pad", "device")}
-        # optional packing trace for tests/benchmarks: every dispatched
-        # batch appends (bucket, [(request, future)]) so a replay can
-        # verify delivered responses bit-for-bit against the exact
-        # packing that was served
+        # optional packing trace for tests/benchmarks: every batch that
+        # DELIVERED results appends (bucket, [(request, future)]) so a
+        # replay can verify delivered responses bit-for-bit against the
+        # exact packing that was served (failed dispatches deliver
+        # exceptions, not rows, and are not packings to replay)
         self.batch_log: list[tuple[int, list[tuple[np.ndarray, Future]]]] \
             | None = [] if record_batches else None
 
@@ -172,6 +261,8 @@ class PipelineService:
         # Mesh object (and cache key), and the ladder needs the shard
         # count before any plan compiles
         mesh, batch_axis = plan_lib._norm_mesh(mesh, None)
+        self._mesh = mesh
+        self._lowering = lowering
         shards = 1 if mesh is None else int(mesh.shape[batch_axis])
         if batching == "continuous":
             self.buckets = bucket_ladder(self.batch_size, shards)
@@ -192,9 +283,30 @@ class PipelineService:
         self.plan = self.plans[self.batch_size]
         if batching == "continuous":
             self._stats["bucket_batches"] = {b: 0 for b in self.buckets}
+        # runtime degradation books (consumer-thread-only mutation):
+        # consecutive post-retry failures per bucket, the recorded
+        # runtime downgrades (bucket -> requested lowering), and the
+        # fault-point tag each bucket's device_run checks carry (its
+        # current lowering request; "reference" once degraded)
+        self._bucket_fails: dict[int, int] = {}
+        self.downgrades: dict[int, str] = {}
+        tag = lowering if isinstance(lowering, str) else "per-node"
+        self._tags: dict[int, str] = {b: tag for b in self.buckets}
 
     # -- request side -------------------------------------------------------
-    def submit(self, x) -> Future:
+    def submit(self, x, *, deadline_ms: float | None = None) -> Future:
+        """Enqueue one request; returns a Future resolving to its output
+        row or to a typed exception (:mod:`repro.graph.errors`).
+
+        ``deadline_ms`` (default: the service-wide ``deadline_ms``)
+        bounds how long the request may wait *before dispatch*: expired
+        requests fail with :class:`DeadlineExceeded` without consuming a
+        device slot.  With ``validate="strict"`` a non-finite payload
+        fails the returned future with :class:`InvalidRequest` instead
+        of entering a batch.  A full bounded queue blocks, sheds (the
+        future fails with :class:`Overloaded` immediately), or raises
+        per ``on_full``.
+        """
         x = np.asarray(x, self.dtype)
         if x.shape != (self.signal_len,):
             raise ValueError(
@@ -202,13 +314,53 @@ class PipelineService:
                 "fixed-shape serving; open one service per signal length")
         fut: Future = Future()
         fut._tina_submit_t = time.perf_counter()   # queued-phase stamp
-        with self._lifecycle:
+        if self.validate == "strict" and not np.isfinite(x).all():
+            with self._stats_lock:
+                self._stats["invalid"] += 1
+            _INVALID.add()
+            fut.set_exception(InvalidRequest(
+                "payload contains non-finite sample(s) "
+                "(validate='strict'): rejected at submit, never batched"))
+            return fut
+        dl = self.deadline_ms if deadline_ms is None else deadline_ms
+        fut._tina_deadline = (fut._tina_submit_t + dl / 1e3
+                              if dl is not None else None)
+        with self._space:   # the lifecycle lock, as a Condition
             if self._closed:
                 # the consumer is gone (thread joined, final flush ran):
                 # enqueuing would leave the caller hanging in fut.result()
                 raise RuntimeError("service closed")
+            if self.queue_limit is not None \
+                    and self._depth >= self.queue_limit:
+                if self.on_full == "block":
+                    # wait for space, honoring the deadline; close()
+                    # notifies so no submitter outlives the service
+                    while not self._closed \
+                            and self._depth >= self.queue_limit:
+                        wait = 0.05
+                        if fut._tina_deadline is not None:
+                            left = fut._tina_deadline - time.perf_counter()
+                            if left <= 0:
+                                self._expire(fut)
+                                return fut
+                            wait = min(wait, left)
+                        self._space.wait(wait)
+                    if self._closed:
+                        raise RuntimeError("service closed")
+                else:
+                    with self._stats_lock:
+                        self._stats["shed"] += 1
+                    _SHED.add()
+                    err = Overloaded(
+                        f"queue full ({self.queue_limit} deep, "
+                        f"on_full={self.on_full!r}): request shed")
+                    if self.on_full == "raise":
+                        raise err
+                    fut.set_exception(err)       # on_full="shed"
+                    return fut
             with self._stats_lock:
                 self._stats["requests"] += 1
+            self._depth += 1
             self._q.put((x, fut))
         return fut
 
@@ -235,10 +387,42 @@ class PipelineService:
         it does nothing."""
         return self._snapshot()
 
+    # -- deadlines ----------------------------------------------------------
+    def _expire(self, fut: Future) -> None:
+        with self._stats_lock:
+            self._stats["expired"] += 1
+        _EXPIRED.add()
+        fut.set_exception(DeadlineExceeded(
+            "deadline expired before a device dispatch picked the "
+            "request up"))
+
+    def _sweep_expired(self, items: list) -> list:
+        """Fail every expired request and return the live remainder —
+        called at dispatch time, *before* packing, so an expired request
+        never wastes a device slot."""
+        now = time.perf_counter()
+        live = []
+        for it in items:
+            dl = getattr(it[1], "_tina_deadline", None)
+            if dl is not None and now > dl:
+                self._expire(it[1])
+            else:
+                live.append(it)
+        return live
+
     # -- batch execution ----------------------------------------------------
     def _bucket_for(self, n: int) -> int:
         """Smallest pre-compiled bucket admitting ``n`` requests."""
         return self.buckets[bisect.bisect_left(self.buckets, n)]
+
+    def _plan_for(self, n: int):
+        """(bucket, plan) serving an ``n``-request batch under the
+        current policy (fixed mode always pads to the one batch shape;
+        ``self.plan`` stays monkeypatchable there)."""
+        if self.batching == "continuous":
+            b = self._bucket_for(n)
+            return b, self.plans[b]
+        return self.batch_size, self.plan
 
     def _pack(self, bucket: int,
               items: list[tuple[np.ndarray, Future]]) -> np.ndarray:
@@ -251,35 +435,26 @@ class PipelineService:
             batch[i] = x
         return batch
 
-    def _run_batch(self, items: list[tuple[np.ndarray, Future]]) -> None:
+    def _execute_once(self, bucket: int, plan,
+                      items: list[tuple[np.ndarray, Future]]) -> None:
+        """One dispatch attempt: pack, run, deliver.  Raises on failure
+        (the recovery machinery in ``_dispatch`` decides what happens
+        next); on success the packing is logged and every future
+        resolves."""
         n = len(items)
-        if self.batching == "continuous":
-            bucket = self._bucket_for(n)
-            plan = self.plans[bucket]
-        else:
-            bucket = self.batch_size
-            plan = self.plan          # monkeypatchable failure-injection
         t_dispatch = time.perf_counter()
         with obs.span("service.dispatch", cat="serve", bucket=bucket, n=n):
             with obs.span("service.pack", cat="serve", bucket=bucket):
                 batch = self._pack(bucket, items)
             t_packed = time.perf_counter()
-            if self.batch_log is not None:
-                self.batch_log.append((bucket, list(items)))
-            try:
-                with obs.span("service.device_run", cat="serve",
-                              bucket=bucket):
-                    out = np.asarray(plan(jnp.asarray(batch)))
-            except Exception as e:   # noqa: BLE001 — delivered to callers
-                # fail the batch's futures, not the batcher thread:
-                # clients blocked in fut.result() must see the error,
-                # and later requests should still be served
-                for _, fut in items:
-                    fut.set_exception(e)
-                with self._stats_lock:
-                    self._stats["failed_batches"] += 1
-                return
+            with obs.span("service.device_run", cat="serve",
+                          bucket=bucket):
+                faults.check("device_run", payload=batch,
+                             tag=self._tags.get(bucket))
+                out = np.asarray(plan(jnp.asarray(batch)))
             t_device = time.perf_counter()
+        if self.batch_log is not None:
+            self.batch_log.append((bucket, list(items)))
         with self._stats_lock:
             self._stats["batches"] += 1
             self._stats["padded_slots"] += bucket - n
@@ -294,6 +469,142 @@ class PipelineService:
                 self._lat["total"].record(
                     (time.perf_counter() - t_sub) * 1e3)
             fut.set_result(out[i])
+
+    def _run_batch(self, items: list[tuple[np.ndarray, Future]]) -> bool:
+        """Sweep deadlines, then dispatch with full failure recovery;
+        returns whether anything was actually dispatched."""
+        items = self._sweep_expired(items)
+        if not items:
+            return False
+        self._dispatch(items)
+        return True
+
+    def _dispatch(self, items: list[tuple[np.ndarray, Future]]) -> None:
+        """Dispatch with recovery: retry transient failures with capped
+        exponential backoff; on persistent failure optionally degrade
+        the bucket's lowering, then bisect to isolate poison rows so
+        healthy requests still resolve.  The batcher thread survives
+        every path — clients see results or typed exceptions, never a
+        dead consumer."""
+        bucket, plan = self._plan_for(len(items))
+        attempt = 0
+        while True:
+            try:
+                self._execute_once(bucket, plan, items)
+                self._bucket_fails[bucket] = 0
+                return
+            except Exception as e:   # noqa: BLE001 — recovery boundary
+                err = e
+                # persistent faults (poison payloads) can't be retried
+                # away: skip straight to isolation
+                if getattr(e, "persistent", False) \
+                        or attempt >= self.max_retries:
+                    break
+                attempt += 1
+                with self._stats_lock:
+                    self._stats["retries"] += 1
+                _RETRIED.add()
+                delay = min(
+                    self.retry_backoff_ms * (2 ** (attempt - 1)),
+                    self.retry_backoff_max_ms) / 1e3
+                with obs.span("service.retry", cat="serve", bucket=bucket,
+                              attempt=attempt, error=type(e).__name__):
+                    if delay > 0:
+                        time.sleep(delay)
+        # post-retry failure: the batch (not the thread) is the casualty
+        with self._stats_lock:
+            self._stats["failed_batches"] += 1
+        fails = self._bucket_fails.get(bucket, 0) + 1
+        self._bucket_fails[bucket] = fails
+        if fails >= self.degrade_after and bucket not in self.downgrades:
+            degraded = self._degrade(bucket, err)
+            if degraded is not None:
+                try:
+                    self._execute_once(bucket, degraded, items)
+                    self._bucket_fails[bucket] = 0
+                    return
+                except Exception as e:   # noqa: BLE001
+                    err = e              # degraded plan failed too
+        if len(items) == 1:
+            self._quarantine(items[0][1], err)
+            return
+        with obs.span("service.bisect", cat="serve", bucket=bucket,
+                      n=len(items), error=type(err).__name__):
+            mid = len(items) // 2
+            self._isolate(items[:mid])
+            self._isolate(items[mid:])
+
+    def _isolate(self, items: list[tuple[np.ndarray, Future]]) -> None:
+        """Bisection step: run ``items`` once through their own bucket
+        plan; on failure split again, down to the single poisoned row —
+        healthy sub-batches deliver results (and are logged for replay),
+        poison rows get the error."""
+        bucket, plan = self._plan_for(len(items))
+        try:
+            self._execute_once(bucket, plan, items)
+        except Exception as e:   # noqa: BLE001
+            if len(items) == 1:
+                self._quarantine(items[0][1], e)
+                return
+            mid = len(items) // 2
+            self._isolate(items[:mid])
+            self._isolate(items[mid:])
+
+    def _quarantine(self, fut: Future, err: BaseException) -> None:
+        """Deliver the isolating error to exactly one future."""
+        with self._stats_lock:
+            self._stats["quarantined"] += 1
+        _QUARANTINED.add()
+        obs.instant("service.quarantine", cat="serve",
+                    error=type(err).__name__)
+        fut.set_exception(err)
+
+    def _degrade(self, bucket: int, err: BaseException):
+        """Recompile a persistently failing bucket with the reference
+        lowering, once — runtime graceful degradation, extending the
+        compile-time ``Plan.downgrades`` contract to runtime.  Returns
+        the degraded plan, or None when there is nothing to shed (the
+        bucket already runs the reference path) or the recompile itself
+        fails (the batcher must survive that too)."""
+        requested = self._lowering
+        if isinstance(requested, str) and requested in ("native",
+                                                        "reference"):
+            return None
+        try:
+            plan = plan_lib.compile(
+                self.graph,
+                {self.graph.inputs[0]: (bucket, self.signal_len)},
+                dtype=str(self.dtype), lowering="reference",
+                mesh=self._mesh)
+        except Exception:   # noqa: BLE001 — degradation must never kill
+            return None     # the batcher; bisection still runs
+        self.plans[bucket] = plan
+        if bucket == self.batch_size:
+            self.plan = plan
+        self.downgrades[bucket] = (requested if isinstance(requested, str)
+                                   else "per-node")
+        self._tags[bucket] = "reference"
+        with self._stats_lock:
+            self._stats["degraded"] += 1
+        _DEGRADED.add()
+        obs.instant("service.degrade", cat="serve", bucket=bucket,
+                    requested=str(requested), error=type(err).__name__)
+        warnings.warn(
+            f"service bucket {bucket}: plan failed "
+            f"{self.degrade_after} consecutive dispatch(es) (last: "
+            f"{type(err).__name__}); recompiled with the reference "
+            f"lowering (was {requested!r}) — see service.downgrades",
+            stacklevel=2)
+        return plan
+
+    def _dequeued(self) -> None:
+        """Admission bookkeeping for one consumed request: free a queue
+        slot and wake one blocked submitter."""
+        if self.queue_limit is None:
+            return
+        with self._space:
+            self._depth -= 1
+            self._space.notify()
 
     def flush(self) -> int:
         """Drain the queue synchronously; returns batches executed.
@@ -332,11 +643,12 @@ class PipelineService:
                 except queue.Empty:
                     break
                 if item is not None:
+                    self._dequeued()
                     items.append(item)
             if not items:
                 return ran
-            self._run_batch(items)
-            ran += 1
+            if self._run_batch(items):
+                ran += 1
 
     # -- background batcher -------------------------------------------------
     def start(self) -> "PipelineService":
@@ -368,6 +680,7 @@ class PipelineService:
             item = self._q.get()          # idle: block for the first request
             if item is None:
                 return
+            self._dequeued()
             items = [item]
             while len(items) < self.batch_size:
                 try:
@@ -379,17 +692,20 @@ class PipelineService:
                 if nxt is None:
                     self._run_batch(items)
                     return
+                self._dequeued()
                 items.append(nxt)
             self._run_batch(items)
 
     def close(self) -> None:
         """Stop the batcher (if started), drain the queue, and reject all
-        future ``submit``/``start`` calls.  Idempotent on success; if the
+        future ``submit``/``start`` calls.  Submitters blocked at a full
+        queue are woken and raise.  Idempotent on success; if the
         batcher doesn't stop within ``close_timeout`` (e.g. a slow
         interpret-mode batch) it raises but stays retryable — a second
         ``close()`` re-joins the thread rather than no-opping."""
-        with self._lifecycle:
+        with self._space:
             self._closed = True      # new submits now raise, not enqueue
+            self._space.notify_all()  # wake admission-blocked submitters
             t = self._thread
         if t is not None:
             self._q.put(None)        # extra sentinels on retry are inert
@@ -441,7 +757,10 @@ def replay_batches(svc: PipelineService) -> int:
     row misindexing, no bucket-dependent corruption.  (Row-level results
     across *different* batch sizes are an XLA tiling decision, so
     cross-bucket bitwise equality is not the contract — per-packing
-    determinism is.)
+    determinism is.)  Only packings that delivered results are logged,
+    so a fault-injected run replays exactly its healthy dispatches —
+    including the healthy halves bisection salvaged from poisoned
+    batches.
     """
     if svc.batch_log is None:
         raise ValueError("service was not built with record_batches=True")

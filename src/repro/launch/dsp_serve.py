@@ -29,6 +29,19 @@ the service accepts traffic, regardless of the ambient
 persists winners to the on-disk cache and the (cached-mode) service
 plan compiles against them.
 
+Robustness: ``--queue-limit N --on-full shed|block|raise`` bounds the
+admission queue, ``--deadline-ms`` stamps a per-request scheduling
+deadline, ``--max-retries`` caps transient-failure retries, and
+``--validate strict`` rejects non-finite payloads at submit.  The drive
+loop is outcome-tolerant — every future resolves with a result or a
+typed exception, and a robustness counter summary (shed / expired /
+retried / quarantined / degraded + injected-fault counts) is printed
+when anything non-nominal happened.  ``--poison K`` deliberately
+corrupts K requests with NaNs and **asserts** they all fail typed (and
+that no healthy request was harmed) — pair it with
+``TINA_FAULTS="device_run:nan"`` to exercise the service's bisection
+quarantine end to end (chaos CI does exactly this).
+
 Observability: ``--trace out.json`` turns span collection on
 (equivalent to ``TINA_TELEMETRY=on``) and writes a Chrome trace of the
 whole run — plan compilation, autotune selection, batch dispatch,
@@ -85,6 +98,33 @@ def build_parser() -> argparse.ArgumentParser:
                          "busy), so this knob has no effect there")
     ap.add_argument("--check", type=int, default=4,
                     help="responses to validate against the numpy oracle")
+    ap.add_argument("--queue-limit", type=int, default=0, metavar="N",
+                    help="bound the admission queue at N requests "
+                         "(0 = unbounded); see --on-full")
+    ap.add_argument("--on-full", default="block",
+                    choices=["block", "shed", "raise"],
+                    help="policy when the bounded queue is full: block "
+                         "the submitter, shed (the future fails with "
+                         "Overloaded immediately), or raise from submit")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request scheduling deadline; requests "
+                         "still queued past it fail with "
+                         "DeadlineExceeded before consuming a device "
+                         "slot (0 = no deadline)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="transient batch-failure retries (capped "
+                         "exponential backoff) before the batch is "
+                         "bisected to isolate poison rows")
+    ap.add_argument("--validate", default="off",
+                    choices=["off", "strict"],
+                    help="strict: reject non-finite payloads at submit "
+                         "(the future fails with InvalidRequest)")
+    ap.add_argument("--poison", type=int, default=0, metavar="K",
+                    help="corrupt K requests with NaNs and assert they "
+                         "all fail with typed exceptions while healthy "
+                         "requests are unaffected; arm "
+                         "TINA_FAULTS=device_run:nan (or --validate "
+                         "strict) so the poison actually faults")
     ap.add_argument("--prewarm", action="store_true",
                     help="run the autotuner for the serving shape "
                          "(batch, signal_len) before accepting traffic, "
@@ -109,6 +149,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "jax.profiler.start_trace/stop_trace writing "
                          "device-level traces to DIR")
     return ap
+
+
+def _result_or_exception(fut, timeout: float = 120.0):
+    try:
+        return fut.result(timeout=timeout)
+    except Exception as e:   # noqa: BLE001 — typed failures ARE outcomes
+        return e
 
 
 def _metrics_snapshot(svc) -> dict:
@@ -236,7 +283,12 @@ def main(argv=None):
                           lowering=args.lowering,
                           block_configs="auto" if args.tune_blocks else None,
                           mesh=args.mesh or None,
-                          max_wait_ms=args.max_wait_ms)
+                          max_wait_ms=args.max_wait_ms,
+                          queue_limit=args.queue_limit or None,
+                          on_full=args.on_full,
+                          deadline_ms=args.deadline_ms or None,
+                          max_retries=args.max_retries,
+                          validate=args.validate)
     t_compile = time.perf_counter() - t0
     tuned = {k: v for k, v in svc.plan.configs.items() if v}
     sharded = ""
@@ -254,6 +306,16 @@ def main(argv=None):
 
     signals = [rng.standard_normal(n).astype(np.float32)
                for _ in range(args.requests)]
+    poison_idx: set = set()
+    if args.poison:
+        if args.poison > len(signals):
+            raise SystemExit(f"--poison {args.poison} > --requests "
+                             f"{len(signals)}")
+        # spread the poison so it lands in different batches
+        poison_idx = set(np.linspace(0, len(signals) - 1,
+                                     args.poison).astype(int).tolist())
+        for i in poison_idx:
+            signals[i][n // 3] = np.nan
     metrics_stop = (_start_metrics_thread(svc, args.metrics_interval)
                     if args.metrics_interval > 0 else None)
     profiling = False
@@ -264,8 +326,16 @@ def main(argv=None):
     t0 = time.perf_counter()
     try:
         with svc:
-            futs = [svc.submit(x) for x in signals]
-            outs = [f.result(timeout=120) for f in futs]
+            futs = []
+            for x in signals:
+                try:
+                    futs.append(svc.submit(x))
+                except Exception as e:   # noqa: BLE001 — on_full="raise"
+                    futs.append(e)
+            # outcome-tolerant: every slot ends up a result array or the
+            # typed exception its future resolved with
+            outs = [f if isinstance(f, Exception) else
+                    _result_or_exception(f) for f in futs]
     finally:
         elapsed = time.perf_counter() - t0
         if profiling:
@@ -278,26 +348,59 @@ def main(argv=None):
             print(json.dumps(_metrics_snapshot(svc)), file=sys.stderr,
                   flush=True)
 
-    for i in range(min(args.check, len(outs))):
-        want = spec.oracle(signals[i])
-        np.testing.assert_allclose(outs[i], want, rtol=2e-3, atol=2e-3)
+    checked = 0
+    for i, (x, o) in enumerate(zip(signals, outs)):
+        if isinstance(o, Exception) or i in poison_idx:
+            continue                 # oracle-check served requests only
+        np.testing.assert_allclose(o, spec.oracle(x), rtol=2e-3, atol=2e-3)
+        checked += 1
+        if checked >= args.check:
+            break
 
     s = svc.stats()                  # one consistent locked snapshot
+    served = sum(1 for o in outs if not isinstance(o, Exception))
     # padded_slots is measured against each batch's own bucket, so the
     # fill ratio is exact for both batching modes
     buckets = (f", buckets {s['bucket_batches']}"
                if "bucket_batches" in s else "")
     traces = max(p.trace_count for p in svc.plans.values())
-    print(f"[dsp_serve] {s['requests']} requests in {elapsed:.3f}s "
-          f"({s['requests'] / elapsed:.1f} req/s), {s['batches']} batches, "
+    print(f"[dsp_serve] {served}/{len(outs)} requests served in "
+          f"{elapsed:.3f}s ({served / elapsed:.1f} req/s), "
+          f"{s['batches']} batches, "
           f"fill {s['fill_ratio']:.0%}{buckets}, plan traces {traces} "
           f"(1 == every batch was a cache hit)")
+    from collections import Counter
+    from repro.obs import faults
+    failures = Counter(type(o).__name__ for o in outs
+                       if isinstance(o, Exception))
+    rob = {k: s[k] for k in ("shed", "expired", "retries", "quarantined",
+                             "degraded", "invalid")}
+    if any(rob.values()) or failures or faults.active():
+        print(f"[dsp_serve] robustness: {rob}, failure types "
+              f"{dict(failures)}, injected {faults.stats()}, runtime "
+              f"downgrades {svc.downgrades}")
+    if args.poison:
+        leaked = [i for i in sorted(poison_idx)
+                  if not isinstance(outs[i], Exception)]
+        if leaked:
+            raise SystemExit(
+                f"[dsp_serve] --poison: corrupted request(s) {leaked} "
+                "received results instead of typed failures — poison "
+                "isolation is broken (is TINA_FAULTS=device_run:nan or "
+                "--validate strict armed?)")
+        harmed = sum(1 for i, o in enumerate(outs)
+                     if i not in poison_idx and isinstance(o, Exception))
+        print(f"[dsp_serve] poison isolation: {len(poison_idx)}/"
+              f"{len(poison_idx)} corrupted request(s) failed typed "
+              f"({sorted({type(outs[i]).__name__ for i in poison_idx})}), "
+              f"{s['quarantined']} quarantined, {harmed} healthy "
+              "request(s) caught in the blast radius")
     lat = s["latency_ms"]
     if lat["total"]["count"]:
         print("[dsp_serve] latency p50/p99 ms — "
               + ", ".join(f"{k} {lat[k]['p50']:.2f}/{lat[k]['p99']:.2f}"
                           for k in ("total", "queued", "pad", "device")))
-    print(f"[dsp_serve] {args.check} responses verified against the "
+    print(f"[dsp_serve] {checked} response(s) verified against the "
           "numpy oracle")
     if args.trace:
         n_events = obs.export_chrome_trace(args.trace)

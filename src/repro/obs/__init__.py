@@ -25,6 +25,12 @@ from repro.obs.telemetry import (ENV_VAR, NULL_SPAN, REGISTRY, Counter,
                                  Gauge, Histogram, Registry, Span)
 from repro.obs.trace import (chrome_trace, export_chrome_trace,
                              validate_nesting)
+# faults rides in obs because fault injection IS an observability
+# concern: armed points meter through the same registry.  Imported after
+# telemetry (faults imports repro.obs.telemetry directly, not this
+# package, to stay cycle-free).
+from repro.obs import faults
+from repro.obs.faults import InjectedFault
 
 counter = REGISTRY.counter
 gauge = REGISTRY.gauge
@@ -47,4 +53,5 @@ __all__ = ["Counter", "Gauge", "Histogram", "Span", "Registry",
            "REGISTRY", "NULL_SPAN", "ENV_VAR", "counter", "gauge",
            "histogram", "span", "instant", "snapshot", "events",
            "enable", "disable", "enabled", "reset", "chrome_trace",
-           "export_chrome_trace", "validate_nesting"]
+           "export_chrome_trace", "validate_nesting", "faults",
+           "InjectedFault"]

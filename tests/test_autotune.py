@@ -285,6 +285,54 @@ def test_mem_cache_invalidated_on_mtime_change(tune_env):
     assert set(autotune._load(str(tune_env))) == {"b"}
 
 
+@pytest.mark.parametrize("garbage, why", [
+    ("{not json", "unparseable JSON"),
+    ("[1, 2, 3]", "not a JSON object"),
+    (json.dumps({"schema": 2, "entries": [1]}), "not an object"),
+], ids=["bad-json", "non-dict", "bad-entries"])
+def test_corrupt_cache_quarantined_to_bak(tune_env, garbage, why):
+    """A cache file that exists but can't be parsed is preserved as
+    .bak (not silently shadowed), warned about, counted, and replaced
+    by a fresh cache — the append_bench_json discipline."""
+    tune_env.write_text(garbage)
+    before = autotune.stats()["cache_corrupt"]
+    with pytest.warns(UserWarning, match=why):
+        entries = autotune._read_file(str(tune_env))
+    assert entries == {}
+    assert autotune.stats()["cache_corrupt"] == before + 1
+    bak = tune_env.with_suffix(tune_env.suffix + ".bak")
+    assert bak.read_text() == garbage       # evidence preserved
+    assert not tune_env.exists()            # fresh start
+    # and the tuner can immediately save a healthy v2 file again
+    autotune._save(str(tune_env), {"k": {"lowering": "native",
+                                         "config": {}}})
+    assert json.load(open(tune_env))["schema"] == autotune.SCHEMA_VERSION
+
+
+def test_missing_cache_is_not_corrupt(tune_env):
+    before = autotune.stats()["cache_corrupt"]
+    assert autotune._read_file(str(tune_env)) == {}     # no file: fresh
+    assert autotune.stats()["cache_corrupt"] == before  # not an anomaly
+
+
+def test_cache_io_fault_falls_back_to_memory(tune_env):
+    """An injected cache_io fault behaves like a read-only FS: reads
+    are a fresh start, saves keep tuning in-memory — never a crash, and
+    a healthy file is never quarantined for an I/O failure."""
+    from repro.obs import faults
+    tune_env.write_text(json.dumps({"schema": 2, "entries": {
+        "k": {"lowering": "conv", "config": {}}}}))
+    faults.configure("cache_io:x2", seed=0)
+    try:
+        assert autotune._read_file(str(tune_env)) == {}     # injected read
+        autotune._save(str(tune_env), {"j": {"lowering": "native",
+                                             "config": {}}})  # injected write
+        assert tune_env.exists()            # file untouched, not .bak'd
+        assert set(autotune._read_file(str(tune_env))) == {"k"}  # healed
+    finally:
+        faults.reset()
+
+
 # ---------------------------------------------------------------------------
 # TINA_AUTOTUNE modes
 # ---------------------------------------------------------------------------

@@ -1,0 +1,176 @@
+"""Fault-injection harness suite: spec grammar, strict validation,
+seeded determinism, tag matching, and the obs metering every chaos run
+relies on.  These tests pin the harness itself; the service/tuner
+behaviors it unlocks are exercised in test_service.py /
+test_autotune.py.
+"""
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import faults
+
+pytestmark = pytest.mark.timeout(60)
+
+
+@pytest.fixture(autouse=True)
+def clean_faults(monkeypatch):
+    """Isolate every test from ambient chaos config (the CI chaos job
+    runs suites with TINA_FAULTS exported) and restore the env-driven
+    state afterwards."""
+    monkeypatch.delenv(faults.ENV_VAR, raising=False)
+    monkeypatch.delenv(faults.SEED_VAR, raising=False)
+    faults.reset()
+    yield
+    faults.reset()      # next load() re-reads the (restored) env
+
+
+def _fires(point="device_run", n=1, **kw):
+    """How many of ``n`` checks raise."""
+    hits = 0
+    for _ in range(n):
+        try:
+            faults.check(point, **kw)
+        except faults.InjectedFault:
+            hits += 1
+    return hits
+
+
+# ---------------------------------------------------------------------------
+# spec grammar
+# ---------------------------------------------------------------------------
+def test_unarmed_check_is_noop():
+    faults.configure("")
+    assert _fires(n=50) == 0
+    assert not faults.active()
+
+
+def test_once_fires_exactly_once():
+    faults.configure("device_run:once")
+    assert faults.active("device_run")
+    assert not faults.active("cache_io")
+    assert _fires(n=10) == 1
+
+
+def test_count_spec_xn():
+    faults.configure("autotune_measure:x3")
+    assert _fires("autotune_measure", n=10) == 3
+
+
+def test_always_and_off():
+    faults.configure("cache_io:always")
+    assert _fires("cache_io", n=5) == 5
+    # "off" explicitly disarms a point even when another entry names it
+    faults.configure("cache_io:off,cache_io:always")
+    assert _fires("cache_io", n=5) == 5     # first entry wins per check,
+    # and "off" never fires — the later "always" still does
+    faults.configure("cache_io:off")
+    assert _fires("cache_io", n=5) == 0
+
+
+def test_rate_is_seed_deterministic():
+    faults.configure("device_run:0.3", seed=42)
+    a = [bool(_fires()) for _ in range(64)]
+    faults.configure("device_run:0.3", seed=42)
+    b = [bool(_fires()) for _ in range(64)]
+    assert a == b and 0 < sum(a) < 64
+    faults.configure("device_run:0.3", seed=43)
+    c = [bool(_fires()) for _ in range(64)]
+    assert a != c                            # the seed is load-bearing
+
+
+def test_nan_spec_fires_only_on_poison_payload():
+    faults.configure("device_run:nan")
+    clean = np.ones(8, np.float32)
+    poison = clean.copy()
+    poison[3] = np.nan
+    assert _fires(payload=clean, n=5) == 0
+    with pytest.raises(faults.InjectedFault) as ei:
+        faults.check("device_run", payload=poison)
+    assert ei.value.persistent               # retrying the same payload
+    assert ei.value.point == "device_run"    # cannot succeed
+    assert _fires(payload=None, n=3) == 0    # no payload: nothing to judge
+
+
+def test_transient_faults_are_not_persistent():
+    faults.configure("device_run:always")
+    with pytest.raises(faults.InjectedFault) as ei:
+        faults.check("device_run")
+    assert not ei.value.persistent
+
+
+# ---------------------------------------------------------------------------
+# tag matching (how lowering degradation is tested end to end)
+# ---------------------------------------------------------------------------
+def test_tagged_entry_matches_only_its_tag():
+    faults.configure("device_run@pallas:always")
+    assert _fires(tag="pallas", n=3) == 3
+    assert _fires(tag="reference", n=3) == 0
+    assert _fires(n=3) == 0                  # untagged check: no match
+
+
+def test_untagged_entry_matches_every_tag():
+    faults.configure("device_run:once")
+    assert _fires(tag="pallas", n=3) == 1
+
+
+# ---------------------------------------------------------------------------
+# strict validation (like TINA_TELEMETRY)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bad", [
+    "device_rnu:0.5",          # typo'd point must not silently disarm
+    "device_run",              # missing value
+    "device_run:1.5",          # probability out of range
+    "device_run:-0.1",
+    "device_run:x0",           # count < 1
+    "device_run:xtwo",
+    "device_run:sometimes",    # unknown value word
+])
+def test_malformed_spec_rejected(bad):
+    with pytest.raises(ValueError):
+        faults.configure(bad)
+
+
+def test_env_spec_validated_at_load(monkeypatch):
+    monkeypatch.setenv(faults.ENV_VAR, "not_a_point:once")
+    faults.reset()
+    with pytest.raises(ValueError, match="unknown fault point"):
+        faults.load()
+
+
+def test_env_seed_validated(monkeypatch):
+    monkeypatch.setenv(faults.SEED_VAR, "banana")
+    with pytest.raises(ValueError, match="integer seed"):
+        faults.configure("device_run:once")
+
+
+def test_unknown_point_in_check_rejected():
+    faults.configure("device_run:always")
+    with pytest.raises(ValueError, match="unknown fault point"):
+        faults.check("not_a_point")
+
+
+def test_env_round_trip(monkeypatch):
+    monkeypatch.setenv(faults.ENV_VAR, "device_run:x2")
+    monkeypatch.setenv(faults.SEED_VAR, "7")
+    faults.reset()
+    faults.load()                            # parses the env
+    assert _fires(n=5) == 2
+    faults.load()                            # idempotent: no re-arm
+    assert _fires(n=5) == 0
+
+
+# ---------------------------------------------------------------------------
+# metering
+# ---------------------------------------------------------------------------
+def test_fires_are_counted_on_the_obs_registry():
+    before = obs.counter("faults.injected.device_run").value
+    faults.configure("device_run:x2")
+    assert _fires(n=5) == 2
+    assert obs.counter("faults.injected.device_run").value == before + 2
+    assert faults.stats()["device_run"] == before + 2
+
+
+def test_obs_package_exports_faults():
+    assert obs.faults is faults
+    assert obs.InjectedFault is faults.InjectedFault

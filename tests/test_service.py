@@ -17,8 +17,12 @@ import pytest
 
 from repro import graph
 from repro.core.registry import PIPELINES, pipelines
+from repro.graph.errors import (DeadlineExceeded, InvalidRequest,
+                                Overloaded)
 from repro.graph.service import (PipelineService, bucket_ladder,
                                  replay_batches)
+from repro.obs import faults
+from repro.obs.faults import InjectedFault
 
 pipelines()
 RNG = np.random.default_rng(23)
@@ -297,3 +301,325 @@ def test_continuous_sharded_indivisible_batch_raises():
     with pytest.raises(ValueError, match="divis"):
         PipelineService(g, signal_len=256, batch_size=n_dev + 1,
                         batching="continuous", mesh=n_dev)
+
+
+# ---------------------------------------------------------------------------
+# robustness: admission, deadlines, validation, retry/bisect/degrade
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def chaos():
+    """Deterministic fault config for one test; teardown disarms and
+    forgets, so later tests re-read the ambient env (the CI chaos job
+    exports TINA_FAULTS for the legacy suites above)."""
+    yield faults.configure
+    faults.reset()
+
+
+def _poison(n=256):
+    x = RNG.standard_normal(n).astype(np.float32)
+    x[n // 3] = np.nan
+    return x
+
+
+def _outcome(f):
+    e = f.exception(timeout=0)
+    return ("err", e) if e is not None else ("ok", f.result(timeout=0))
+
+
+def test_validate_strict_fails_poison_future_at_submit(chaos):
+    spec, svc = _service(batch=2, validate="strict")
+    bad = svc.submit(_poison())
+    with pytest.raises(InvalidRequest, match="non-finite"):
+        bad.result(timeout=0)                  # failed without any batch
+    x = _signals(1)[0]
+    good = svc.submit(x)
+    assert svc.flush() == 1
+    np.testing.assert_allclose(good.result(timeout=5), spec.oracle(x),
+                               rtol=2e-3, atol=2e-3)
+    s = svc.stats
+    assert s["invalid"] == 1 and s["requests"] == 1    # never admitted
+    svc.close()
+
+
+def test_invalid_robustness_knobs_rejected():
+    g = PIPELINES["spectrogram"].build()
+    for kw in ({"on_full": "drop"}, {"validate": "maybe"},
+               {"queue_limit": 0}, {"deadline_ms": -1},
+               {"max_retries": -1}):
+        with pytest.raises(ValueError):
+            PipelineService(g, signal_len=256, batch_size=2, **kw)
+
+
+def test_queue_limit_shed_delivers_overloaded(chaos):
+    spec, svc = _service(batch=4, queue_limit=2, on_full="shed")
+    xs = _signals(5)
+    futs = [svc.submit(x) for x in xs]         # no consumer yet: 2 admit,
+    for f in futs[2:]:                         # 3 shed instantly
+        with pytest.raises(Overloaded, match="queue full"):
+            f.result(timeout=0)
+    assert svc.flush() == 1
+    for x, f in zip(xs[:2], futs[:2]):
+        np.testing.assert_allclose(f.result(timeout=5), spec.oracle(x),
+                                   rtol=2e-3, atol=2e-3)
+    s = svc.stats
+    assert s["shed"] == 3 and s["requests"] == 2       # shed != admitted
+    svc.close()
+
+
+def test_queue_limit_raise_policy(chaos):
+    _, svc = _service(batch=4, queue_limit=1, on_full="raise")
+    svc.submit(_signals(1)[0])
+    with pytest.raises(Overloaded):
+        svc.submit(_signals(1)[0])
+    assert svc.stats["shed"] == 1
+    svc.flush()
+    svc.close()
+
+
+def test_queue_limit_block_admits_when_space_frees(chaos):
+    spec, svc = _service(batch=1, queue_limit=1, on_full="block")
+    x0, x1 = _signals(2)
+    f0 = svc.submit(x0)
+    box = {}
+
+    def blocked_submit():
+        box["fut"] = svc.submit(x1)            # blocks until f0 drains
+
+    t = threading.Thread(target=blocked_submit)
+    t.start()
+    time.sleep(0.05)
+    assert t.is_alive()                        # genuinely blocked, not shed
+    deadline = time.perf_counter() + 30
+    while t.is_alive() and time.perf_counter() < deadline:
+        svc.flush()                            # drain -> space -> admit
+        time.sleep(0.005)
+    t.join(timeout=30)
+    assert not t.is_alive()
+    svc.flush()
+    np.testing.assert_allclose(f0.result(timeout=5), spec.oracle(x0),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(box["fut"].result(timeout=5),
+                               spec.oracle(x1), rtol=2e-3, atol=2e-3)
+    assert svc.stats["shed"] == 0
+    svc.close()
+
+
+def test_blocked_submit_honors_deadline(chaos):
+    _, svc = _service(batch=1, queue_limit=1, on_full="block")
+    svc.submit(_signals(1)[0])                 # fills the queue; no consumer
+    t0 = time.perf_counter()
+    f = svc.submit(_signals(1)[0], deadline_ms=50)
+    assert time.perf_counter() - t0 < 10       # gave up at the deadline,
+    with pytest.raises(DeadlineExceeded):      # didn't block forever
+        f.result(timeout=0)
+    assert svc.stats["expired"] == 1
+    svc.flush()
+    svc.close()
+
+
+def test_close_wakes_blocked_submitter(chaos):
+    _, svc = _service(batch=1, queue_limit=1, on_full="block")
+    f0 = svc.submit(_signals(1)[0])
+    errs = []
+
+    def blocked_submit():
+        try:
+            svc.submit(_signals(1)[0])
+        except RuntimeError as e:
+            errs.append(e)
+
+    t = threading.Thread(target=blocked_submit)
+    t.start()
+    time.sleep(0.05)
+    svc.close()                                # wakes + rejects the waiter,
+    t.join(timeout=30)                         # drains the admitted request
+    assert not t.is_alive()
+    assert len(errs) == 1 and "service closed" in str(errs[0])
+    assert f0.result(timeout=5) is not None
+
+
+def test_deadline_expiry_soak_no_device_slots(chaos):
+    """Satellite (c) deadline soak: every expired future raises
+    DeadlineExceeded and none of them consumed a device slot."""
+    _, svc = _service(batch=8)
+    futs = [svc.submit(x, deadline_ms=0) for x in _signals(50)]
+    time.sleep(0.001)
+    assert svc.flush() == 0                    # swept, nothing dispatched
+    for f in futs:
+        with pytest.raises(DeadlineExceeded):
+            f.result(timeout=0)
+    s = svc.stats
+    assert s["expired"] == 50 and s["batches"] == 0
+    assert svc.batch_log == []                 # zero device dispatches
+    svc.close()
+
+
+def test_mixed_deadlines_only_expired_fail(chaos):
+    spec, svc = _service(batch=8, deadline_ms=0)   # service-wide default
+    x_live = _signals(1)[0]
+    doomed = [svc.submit(x) for x in _signals(3)]
+    live = svc.submit(x_live, deadline_ms=10_000)  # per-request override
+    time.sleep(0.001)
+    assert svc.flush() == 1
+    for f in doomed:
+        with pytest.raises(DeadlineExceeded):
+            f.result(timeout=0)
+    np.testing.assert_allclose(live.result(timeout=5), spec.oracle(x_live),
+                               rtol=2e-3, atol=2e-3)
+    assert svc.stats["expired"] == 3
+    svc.close()
+
+
+def test_transient_fault_retried_to_success(chaos):
+    chaos("device_run:once", seed=0)
+    spec, svc = _service(batch=2, retry_backoff_ms=0.1)
+    x = _signals(1)[0]
+    f = svc.submit(x)
+    assert svc.flush() == 1
+    np.testing.assert_allclose(f.result(timeout=5), spec.oracle(x),
+                               rtol=2e-3, atol=2e-3)
+    s = svc.stats
+    assert s["retries"] == 1 and s["failed_batches"] == 0
+    assert s["quarantined"] == 0
+    assert replay_batches(svc) == 1
+    svc.close()
+
+
+def test_persistent_fault_skips_retries_and_quarantines(chaos):
+    chaos("device_run:nan", seed=0)
+    _, svc = _service(batch=2)
+    f = svc.submit(_poison())
+    assert svc.flush() == 1
+    with pytest.raises(InjectedFault):
+        f.result(timeout=0)
+    s = svc.stats
+    assert s["retries"] == 0                   # pointless retries skipped
+    assert s["failed_batches"] == 1 and s["quarantined"] == 1
+    svc.close()
+
+
+def test_bisect_isolates_poison_rows_healthy_rows_served(chaos):
+    """The poison-isolation contract: one batch, two poison rows — the
+    six healthy futures get bit-correct results (replay-verified), only
+    the poisoned futures get the error."""
+    chaos("device_run:nan", seed=0)
+    spec, svc = _service(batch=8)
+    xs = _signals(8)
+    poison_idx = {2, 5}
+    for i in poison_idx:
+        xs[i] = _poison()
+    futs = [svc.submit(x) for x in xs]
+    svc.flush()
+    for i, (x, f) in enumerate(zip(xs, futs)):
+        if i in poison_idx:
+            with pytest.raises(InjectedFault):
+                f.result(timeout=0)
+        else:
+            np.testing.assert_allclose(f.result(timeout=0), spec.oracle(x),
+                                       rtol=2e-3, atol=2e-3)
+    s = svc.stats
+    assert s["quarantined"] == 2 and s["failed_batches"] == 1
+    # healthy sub-batches were logged and replay bit-exactly; poisoned
+    # dispatches never enter the log
+    assert replay_batches(svc) == 6
+    assert all(not any(np.isnan(x).any() for x, _ in items)
+               for _, items in svc.batch_log)
+    svc.close()
+
+
+def test_runtime_degradation_to_reference_lowering(chaos):
+    """A bucket whose pallas plan keeps failing is recompiled once with
+    the reference lowering (the @tag spec stops matching after the
+    retag), recorded on service.downgrades, and then serves requests."""
+    chaos("device_run@pallas:always", seed=0)
+    spec, svc = _service(batch=1, lowering="pallas", max_retries=0,
+                         degrade_after=2)
+    x1, x2, x3 = _signals(3)
+    f1 = svc.submit(x1)
+    svc.flush()
+    with pytest.raises(InjectedFault):         # first strike: quarantined
+        f1.result(timeout=0)
+    assert svc.downgrades == {}
+    f2 = svc.submit(x2)
+    with pytest.warns(UserWarning, match="reference lowering"):
+        svc.flush()                            # second strike: degrade,
+    np.testing.assert_allclose(f2.result(timeout=0), spec.oracle(x2),
+                               rtol=2e-3, atol=2e-3)   # same batch served
+    assert svc.downgrades == {1: "pallas"}
+    f3 = svc.submit(x3)                        # steady state: degraded plan
+    svc.flush()
+    np.testing.assert_allclose(f3.result(timeout=0), spec.oracle(x3),
+                               rtol=2e-3, atol=2e-3)
+    s = svc.stats
+    assert s["degraded"] == 1 and s["quarantined"] == 1
+    assert replay_batches(svc) == 2            # the two healthy dispatches
+    svc.close()
+
+
+def test_close_under_failure_resolves_everything(chaos):
+    """Satellite (c) shutdown-under-failure: close() while batches are
+    retrying/bisecting resolves every pending future, leaves no live
+    thread, and stays retryable."""
+    chaos("device_run:0.5,device_run:nan", seed=3)
+    _, svc = _service(batch=4, retry_backoff_ms=0.1)
+    xs = _signals(30)
+    for i in range(0, 30, 6):
+        xs[i] = _poison()
+    svc.start()
+    futs = [svc.submit(x) for x in xs]
+    svc.close()                                # mid-chaos shutdown
+    assert svc._thread is None                 # batcher actually exited
+    for i, f in enumerate(futs):
+        kind, val = _outcome(f)                # every future resolved
+        if kind == "err":
+            assert isinstance(val, InjectedFault)
+        if i % 6 == 0:
+            assert kind == "err"               # poison never yields a row
+    svc.close()                                # retryable/idempotent
+    with pytest.raises(RuntimeError, match="service closed"):
+        svc.submit(xs[1])
+
+
+def test_acceptance_soak_faults_poison_overload(chaos):
+    """The ISSUE's acceptance soak: >=5% device_run failure rate, mixed
+    poison payloads, offered load > capacity with shedding.  Every
+    future resolves with a result or a typed exception, healthy rows in
+    poisoned batches replay bit-correct, and the batcher survives."""
+    chaos("device_run:0.05,device_run:nan", seed=7)
+    spec, svc = _service(batch=8, queue_limit=8, on_full="shed",
+                         retry_backoff_ms=0.1)
+    xs = _signals(40)
+    poison_idx = {i for i in range(0, 40, 10)}
+    for i in poison_idx:
+        xs[i] = _poison()
+    # phase 1: a burst into the bounded queue with no consumer —
+    # deterministic overload, everything past the limit sheds
+    futs = [svc.submit(x) for x in xs]
+    assert svc.stats["shed"] == 32
+    svc.start()                                # phase 2: sustained load
+    xs2 = _signals(80)
+    for i in range(0, 80, 10):
+        xs2[i] = _poison()
+    futs2 = [svc.submit(x, deadline_ms=30_000) for x in xs2]
+    expired = [svc.submit(x, deadline_ms=0) for x in _signals(5)]
+    svc.close()
+    assert svc._thread is None                 # the batcher never died
+    for f in futs + futs2 + expired:
+        kind, val = _outcome(f)                # EVERY future resolved
+        if kind == "err":
+            assert isinstance(val, (InjectedFault, Overloaded,
+                                    DeadlineExceeded))
+    for f in expired:
+        assert isinstance(f.exception(timeout=0),
+                          (DeadlineExceeded, Overloaded))
+    for (i, f), x in zip(enumerate(futs2), xs2):
+        kind, val = _outcome(f)
+        if i % 10 == 0:
+            assert kind == "err"               # poison never yields a row
+        elif kind == "ok":
+            np.testing.assert_allclose(val, spec.oracle(x),
+                                       rtol=2e-3, atol=2e-3)
+    s = svc.stats
+    assert s["quarantined"] >= 1 and s["shed"] >= 32
+    assert replay_batches(svc) >= 1            # healthy packings bit-exact
+    assert faults.stats()["device_run"] >= 1
