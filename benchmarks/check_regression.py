@@ -4,7 +4,7 @@ tuned-plan throughput regression.
 
     python -m benchmarks.check_regression \\
         --baseline /tmp/BENCH_baseline.json --fresh BENCH_pipelines.json \\
-        [--threshold 0.25] [--metric t_pallas_tuned_s]
+        [--threshold 0.25] [--metric t_pallas_tuned_s[,more...]]
 
 Mechanics:
   * ``--baseline`` is the accumulator file **as committed** (CI copies
@@ -26,6 +26,14 @@ Mechanics:
     fails when fresh (normalized) throughput drops more than
     ``--threshold`` (default 25%) below baseline:
     ``t_fresh > t_base / (1 - threshold)``.
+  * Both flags accept a comma-separated LIST, zipped positionally
+    (``--relative-to`` may also be a single value, broadcast to every
+    metric; empty entries mean absolute).  One invocation then gates
+    several latency fields of the same file — e.g. the service bench's
+    ``--metric continuous_p50_ms,continuous_p99_ms --relative-to
+    fixed_p50_ms,fixed_p99_ms`` gates continuous-batching tail latency
+    against the same run's fixed-batching baseline.  Every
+    (pipeline, n, metric) triple is gated independently.
 
 Waiver: a commit that knowingly trades this throughput away (e.g. a
 correctness fix in a kernel) adds one line to its message::
@@ -76,6 +84,23 @@ def index_results(run: dict, metric: str,
     return out
 
 
+def parse_metrics(metric: str, relative_to: str) -> list[tuple[str, str | None]]:
+    """Zip the comma-separated ``--metric`` / ``--relative-to`` values
+    into (metric, ref_or_None) pairs.  A single relative-to is broadcast
+    across every metric; empty entries gate on absolute values."""
+    metrics = [m.strip() for m in metric.split(",") if m.strip()]
+    if not metrics:
+        raise SystemExit("--metric: no metric names given")
+    refs = [r.strip() for r in relative_to.split(",")] if relative_to else [""]
+    if len(refs) == 1:
+        refs = refs * len(metrics)
+    if len(refs) != len(metrics):
+        raise SystemExit(
+            f"--relative-to: {len(refs)} entries for {len(metrics)} "
+            "metrics (give one per metric, or one for all)")
+    return [(m, r or None) for m, r in zip(metrics, refs)]
+
+
 def _scan(msg: str | None) -> str | None:
     for line in (msg or "").splitlines():
         if line.strip().lower().startswith(WAIVER_PREFIX):
@@ -121,13 +146,15 @@ def main(argv=None) -> int:
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max tolerated throughput drop (fraction)")
     ap.add_argument("--metric", default="t_pallas_tuned_s",
-                    help="per-result seconds field to gate on")
+                    help="per-result time field(s) to gate on, "
+                         "comma-separated")
     ap.add_argument("--relative-to", default="t_per_op_s",
-                    help="same-record field the metric is divided by "
+                    help="same-record field(s) the metric is divided by "
                          "before comparing, so baseline and fresh runs "
                          "on different machines stay comparable "
-                         "(machine speed cancels in the ratio); '' "
-                         "gates on absolute seconds")
+                         "(machine speed cancels in the ratio); "
+                         "comma-separated, zipped with --metric (one "
+                         "value broadcasts); '' gates on absolute time")
     ap.add_argument("--commit-msg", default=None,
                     help="commit message to scan for the waiver line "
                          "(default: $BENCH_COMMIT_MSG, then git log -1)")
@@ -135,33 +162,35 @@ def main(argv=None) -> int:
 
     base_run = last_run(args.baseline)
     fresh_run = last_run(args.fresh)
-    rel = args.relative_to or None
-    base = index_results(base_run, args.metric, rel)
-    fresh = index_results(fresh_run, args.metric, rel)
-    unit = f"x {rel}" if rel else "s absolute"
+    pairs = parse_metrics(args.metric, args.relative_to)
     print(f"[bench-gate] baseline run {base_run.get('git_rev')} "
           f"({base_run.get('timestamp')}), fresh run "
           f"{fresh_run.get('git_rev')} ({fresh_run.get('timestamp')}); "
-          f"metric {args.metric} ({unit}), threshold {args.threshold:.0%}")
+          f"threshold {args.threshold:.0%}")
 
-    for key in sorted(set(base) - set(fresh)):
-        print(f"[bench-gate] note: {key} only in baseline (skipped)")
-    for key in sorted(set(fresh) - set(base)):
-        print(f"[bench-gate] note: {key} only in fresh run (skipped)")
+    failures, any_overlap = [], False
+    for metric, rel in pairs:
+        base = index_results(base_run, metric, rel)
+        fresh = index_results(fresh_run, metric, rel)
+        unit = f"x {rel}" if rel else "absolute"
+        print(f"[bench-gate] metric {metric} ({unit})")
+        for key in sorted(set(base) - set(fresh)):
+            print(f"[bench-gate] note: {key} only in baseline (skipped)")
+        for key in sorted(set(fresh) - set(base)):
+            print(f"[bench-gate] note: {key} only in fresh run (skipped)")
+        any_overlap = any_overlap or bool(set(base) & set(fresh))
+        for key in sorted(set(base) & set(fresh)):
+            t_base, t_fresh = base[key], fresh[key]
+            ratio = t_base / t_fresh      # fresh throughput / baseline
+            status = "OK"
+            if t_fresh > t_base / (1.0 - args.threshold):
+                status = "REGRESSION"
+                failures.append((*key, metric))
+            print(f"[bench-gate] {key[0]} n={key[1]} {metric}: "
+                  f"{t_base:.4g} -> {t_fresh:.4g} "
+                  f"({ratio:.2f}x throughput)  {status}")
 
-    failures = []
-    for key in sorted(set(base) & set(fresh)):
-        t_base, t_fresh = base[key], fresh[key]
-        ratio = t_base / t_fresh          # fresh throughput / baseline
-        status = "OK"
-        if t_fresh > t_base / (1.0 - args.threshold):
-            status = "REGRESSION"
-            failures.append(key)
-        print(f"[bench-gate] {key[0]} n={key[1]}: "
-              f"{t_base:.4g} -> {t_fresh:.4g} "
-              f"({ratio:.2f}x throughput)  {status}")
-
-    if not (set(base) & set(fresh)):
+    if not any_overlap:
         print("[bench-gate] WARNING: no overlapping (pipeline, n) pairs — "
               "nothing gated")
     if not failures:
@@ -171,8 +200,9 @@ def main(argv=None) -> int:
     if waiver is not None:
         print(f"[bench-gate] {len(failures)} regression(s) WAIVED: {waiver}")
         return 0
-    print(f"[bench-gate] FAIL: {len(failures)} pipeline(s) lost more than "
-          f"{args.threshold:.0%} tuned-plan throughput: {failures}\n"
+    print(f"[bench-gate] FAIL: {len(failures)} (pipeline, n, metric) "
+          f"triple(s) lost more than "
+          f"{args.threshold:.0%} throughput: {failures}\n"
           f"[bench-gate] to accept knowingly, add a commit-message line: "
           f"'{WAIVER_PREFIX} <reason>'")
     return 1

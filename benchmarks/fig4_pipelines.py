@@ -175,6 +175,30 @@ def run(sizes=(2 ** 13, 2 ** 15), repeats=10, autotune_col=False,
                            auto_configs={k: v for k, v in
                                          pa.configs.items() if v})
 
+            # int8-vs-f32 plan: the paper's §1 "quantization inherited
+            # from the NN stack" claim, quantified — throughput side by
+            # side with the achieved accuracy (SQNR vs the f32 plan's
+            # output), so the trajectory records what the speed cost in
+            # bits actually bought
+            from repro.core.opdefs import sqnr_db
+            p_int8 = graph_compile(g, shapes, precision="int8")
+            if "int8" in p_int8.precisions.values():
+                t32b, t_int8 = timeit_group([p, p_int8], x,
+                                            repeats=repeats)
+                q = sqnr_db(np.asarray(p(x)), np.asarray(p_int8(x)))
+                row += [us(t_int8), speedup(t32b, t_int8),
+                        f"{q:.1f}"]
+                rec.update(
+                    t_plan_int8_s=t_int8,
+                    speedup_int8_vs_f32=t32b / t_int8,
+                    int8_sqnr_db=round(q, 2),
+                    int8_precisions=p_int8.precisions,
+                    int8_downgrades=p_int8.downgrades)
+            else:
+                # no node quantizes (e.g. an overlap_add-only tail):
+                # keep the table rectangular
+                row += ["-", "-", "-"]
+
             if do_sharded:
                 # one signal per device: the same batch through the plan
                 # compiled single-device vs batch-sharded over the mesh
@@ -204,6 +228,7 @@ def run(sizes=(2 ** 13, 2 ** 15), repeats=10, autotune_col=False,
         header += ["pallas_def_us", "pallas_tuned_us", "tuned_vs_def"]
     if autotune_col:
         header += ["auto_us", "auto_vs_per_op"]
+    header += ["int8_us", "int8_vs_plan", "int8_sqnr_db"]
     if do_sharded:
         header += ["batch", "batch_single_us", "sharded_us",
                    "sharded_vs_single"]

@@ -23,6 +23,18 @@ and a second hand-maintained ``OpSpec`` catalog in ``graph.plan``.  An
     ``graph.stream.stream_spec`` exactly like conv stride/receptive
     arithmetic.
 
+  * **precision view** — ``precisions`` names the execution tiers the
+    op supports (``"f32"`` always; ``"bf16"`` generically — inputs and
+    outputs rounded through bfloat16 with f32 accumulate, the MXU
+    numerics; ``"int8"`` where a quantized impl exists).  ``budgets``
+    declares the per-precision accuracy :class:`Budget` (SQNR floor /
+    abs tolerance, golden-model style) the tier must meet against the
+    f32 reference; ``qimpl`` is the int8 implementation
+    (``(args, attrs, qpack)``, built on :mod:`repro.core.quantize`) and
+    ``qprep`` quantizes const weights ONCE at plan build
+    (``(attrs, {argpos: const}) -> qpack``), so scales ride the Plan
+    while activations quantize per dispatch.
+
 Adding a workload is now: declare the OpDef(s) here (usually one), then
 build a Graph in ``graph/pipelines.py`` — the planner, fuser, autotuner,
 streaming executor, serving layer, Table-1 sweep, and benchmarks all
@@ -41,7 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import functions, pfb
+from repro.core import functions, pfb, quantize
 
 
 def _kops():
@@ -52,6 +64,75 @@ def _kops():
 def _rows(shape) -> int:
     from repro.kernels import tune
     return tune.leading_rows(shape)
+
+
+# ---------------------------------------------------------------------------
+# precision tiers: accuracy budgets + bf16 rounding
+# ---------------------------------------------------------------------------
+PRECISIONS = ("f32", "bf16", "int8")
+
+
+def sqnr_db(ref, out) -> float:
+    """Signal-to-quantization-noise ratio in dB of ``out`` against the
+    reference: ``10·log10(mean|ref|² / mean|out−ref|²)``.  Infinite for
+    an exact match; the shared accuracy metric of the precision tiers
+    (golden-model discipline: every quantized path is judged against
+    the full-precision oracle by this one number)."""
+    ref = np.asarray(ref)
+    out = np.asarray(out)
+    p_ref = float(np.mean(np.abs(ref) ** 2))
+    p_err = float(np.mean(np.abs(out - ref) ** 2))
+    if p_err == 0.0:
+        return float("inf")
+    if p_ref == 0.0:
+        return float("-inf")
+    return 10.0 * float(np.log10(p_ref / p_err))
+
+
+@dataclasses.dataclass(frozen=True)
+class Budget:
+    """Per-precision accuracy budget: a reduced-precision execution of
+    the op must achieve at least ``sqnr_db`` dB against the f32
+    reference (and/or stay within ``atol`` max abs error).  The
+    autotuner rejects any candidate violating its Budget before timing
+    it, so ``precision="auto"`` can never return a budget-violating
+    winner."""
+    sqnr_db: float | None = None
+    atol: float | None = None
+
+    def check(self, ref, out) -> tuple[bool, dict]:
+        """(ok, achieved) — achieved carries the measured metrics so
+        verdicts persisted in the autotune cache are auditable."""
+        achieved = {"sqnr_db": sqnr_db(ref, out),
+                    "max_abs_err": float(np.max(np.abs(
+                        np.asarray(out) - np.asarray(ref))))}
+        ok = True
+        if self.sqnr_db is not None and achieved["sqnr_db"] < self.sqnr_db:
+            ok = False
+        if self.atol is not None and achieved["max_abs_err"] > self.atol:
+            ok = False
+        return ok, achieved
+
+
+# bf16 numerics on MXU-class hardware: inputs rounded to bfloat16,
+# accumulation in f32.  Simulated exactly that way — round the f32
+# arrays through bfloat16 (and the output once more), compute in f32 —
+# so the bf16 tier composes with EVERY lowering (native/conv/pallas
+# kernels all see f32 dtypes, just bf16-rounded values).
+def bf16_round(x):
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        re = jnp.real(x).astype(jnp.bfloat16).astype(jnp.float32)
+        im = jnp.imag(x).astype(jnp.bfloat16).astype(jnp.float32)
+        return (re + 1j * im).astype(x.dtype)
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return x.astype(jnp.bfloat16).astype(x.dtype)
+    return x
+
+
+# every op supporting bf16 inherits this budget unless it declares its
+# own: 8 mantissa bits give ~48 dB per value, and f32 accumulation
+# keeps composite ops comfortably above 30 dB
+_BF16_DEFAULT_BUDGET = Budget(sqnr_db=30.0)
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +204,23 @@ class OpDef:
     tune_space: str | None = None              # kernels.tune space key
     tune_ctx: Callable | None = None           # (attrs, in_avals) -> dict|None
     stream: StreamRule | None = None           # None = not streamable
+    precisions: tuple[str, ...] = ("f32", "bf16")
+    # execution tiers the op supports.  "bf16" is generic (round-through
+    # bfloat16 around the f32 impl, any lowering); "int8" needs either a
+    # qimpl below or the op to be precision-transparent (pure data
+    # movement — declaring int8 with no qimpl runs the f32 impl, which
+    # IS the int8 behavior for such ops).
+    budgets: tuple[tuple[str, Budget], ...] = ()
+    # per-precision accuracy budgets ((precision, Budget) pairs; bf16
+    # falls back to the module default when undeclared)
+    qimpl: Callable | None = None              # (args, attrs, qpack) -> Array
+    # int8 implementation (jnp-native int8xint8->int32 simulation from
+    # repro.core.quantize); ``qpack`` is the plan-built weight pack from
+    # qprep, or None (quantize weights per call — the tuner-probe path)
+    qprep: Callable | None = None              # (attrs, {argpos: const})
+    # -> qpack|None: quantize const weights once at plan build
+    qok: Callable[[dict], bool] | None = None  # attrs -> bool: attr-level
+    # int8 support guard (e.g. fir only quantizes mode="valid")
 
     def bind(self, attrs: dict) -> dict:
         """Merge ``attrs`` over the schema defaults and validate."""
@@ -145,6 +243,30 @@ class OpDef:
 
     def supports(self, lowering: str) -> bool:
         return lowering in self.lowerings
+
+    def supports_precision(self, precision: str,
+                           attrs: dict | None = None) -> bool:
+        """Can the op run at ``precision``?  f32 always; otherwise the
+        tier must be declared in ``precisions`` and (for int8) pass the
+        op's attr-level ``qok`` guard when bound attrs are given."""
+        if precision in (None, "f32"):
+            return True
+        if precision not in self.precisions:
+            return False
+        if precision == "int8" and self.qok is not None and attrs is not None:
+            return bool(self.qok(attrs))
+        return True
+
+    def budget(self, precision: str) -> Budget | None:
+        """The declared accuracy Budget for ``precision`` (bf16 falls
+        back to the module default; f32 has none — it IS the
+        reference)."""
+        for p, b in self.budgets:
+            if p == precision:
+                return b
+        if precision == "bf16" and "bf16" in self.precisions:
+            return _BF16_DEFAULT_BUDGET
+        return None
 
 
 OPDEFS: dict[str, OpDef] = {}
@@ -268,6 +390,65 @@ def _impl_overlap_add(args, at, lowering, block=None):
 
 
 # ---------------------------------------------------------------------------
+# quantized (int8) implementations — built on repro.core.quantize.  A
+# qimpl receives ``qpack``: the weight pack quantized ONCE at plan build
+# by the op's qprep (None when the weight is not a graph const, in which
+# case the quantize.* function packs it per call).
+# ---------------------------------------------------------------------------
+def _qimpl_matmul(args, at, qpack):
+    x, w = args[0], args[1]
+    wq, ws = qpack if qpack is not None else quantize.quantize_weights(w)
+    return quantize.qmatmul(x, wq, ws.reshape(-1))
+
+
+def _qprep_matmul(at, consts):
+    w = consts.get(1)
+    if w is None:
+        return None
+    wq, ws = quantize.quantize_weights(w)
+    return wq, ws.reshape(-1)
+
+
+def _qimpl_dft(args, at, qpack):
+    return quantize.qdft(args[0])
+
+
+def _qimpl_idft(args, at, qpack):
+    return quantize.qidft(args[0])
+
+
+def _qimpl_fir(args, at, qpack):
+    if at["mode"] != "valid":            # guarded by qok; belt and braces
+        return functions.fir(args[0], args[1], mode=at["mode"],
+                             flip=at["flip"])
+    return quantize.qfir(args[0], args[1], flip=at["flip"], qtaps=qpack)
+
+
+def _qprep_fir(at, consts):
+    taps = consts.get(1)
+    if taps is None or at["mode"] != "valid":
+        return None
+    return quantize.quantize_fir_taps(taps, flip=at["flip"])
+
+
+def _qimpl_pfb_frontend(args, at, qpack):
+    return quantize.qpfb_frontend(args[0], args[1] if len(args) > 1 else None,
+                                  qtaps=qpack)
+
+
+def _qimpl_pfb(args, at, qpack):
+    return quantize.qpfb(args[0], args[1] if len(args) > 1 else None,
+                         qtaps=qpack)
+
+
+def _qprep_pfb(at, consts):
+    taps = consts.get(1)
+    if taps is None:
+        return None
+    return quantize.quantize_pfb_taps(taps)
+
+
+# ---------------------------------------------------------------------------
 # tune contexts (shape facts each kernel's TuneSpace needs)
 # ---------------------------------------------------------------------------
 def _ctx_fir(at, av):
@@ -366,7 +547,10 @@ register(OpDef(
     section="3.2", building_block="pointwise conv",
     eager=functions.matmul, oracle=lambda x, y: x @ y,
     make_args=_NN, table_name="matmul",
-    tune_space="matmul", tune_ctx=_ctx_matmul, stream=_FRAME))
+    tune_space="matmul", tune_ctx=_ctx_matmul, stream=_FRAME,
+    precisions=("f32", "bf16", "int8"),
+    budgets=(("int8", Budget(sqnr_db=28.0)),),
+    qimpl=_qimpl_matmul, qprep=_qprep_matmul))
 
 register(OpDef(
     "summation",
@@ -388,7 +572,10 @@ register(OpDef(
     eager=functions.dft, oracle=lambda x: np.fft.fft(x),
     make_args=lambda rng, n: (
         rng.standard_normal((max(1, n // 8), n), dtype=np.float32),),
-    table_name="dft", tune_space="dft", tune_ctx=_ctx_dft, stream=_FRAME))
+    table_name="dft", tune_space="dft", tune_ctx=_ctx_dft, stream=_FRAME,
+    precisions=("f32", "bf16", "int8"),
+    budgets=(("int8", Budget(sqnr_db=26.0)),),
+    qimpl=_qimpl_dft))
 
 register(OpDef(
     "idft",
@@ -401,7 +588,10 @@ register(OpDef(
     make_args=lambda rng, n: ((rng.standard_normal((max(1, n // 8), n))
                                + 1j * rng.standard_normal(
                                    (max(1, n // 8), n))).astype(np.complex64),),
-    table_name="idft", tune_space="dft", tune_ctx=_ctx_dft, stream=_FRAME))
+    table_name="idft", tune_space="dft", tune_ctx=_ctx_dft, stream=_FRAME,
+    precisions=("f32", "bf16", "int8"),
+    budgets=(("int8", Budget(sqnr_db=26.0)),),
+    qimpl=_qimpl_idft))
 
 register(OpDef(
     "fir",
@@ -415,7 +605,11 @@ register(OpDef(
                                                   dtype=np.float32),
                               rng.standard_normal((31,), dtype=np.float32)),
     table_name="fir", tune_space="fir", tune_ctx=_ctx_fir,
-    stream=StreamRule("time", _stream_fir, needs_taps=True)))
+    stream=StreamRule("time", _stream_fir, needs_taps=True),
+    precisions=("f32", "bf16", "int8"),
+    budgets=(("int8", Budget(sqnr_db=30.0)),),
+    qimpl=_qimpl_fir, qprep=_qprep_fir,
+    qok=lambda at: at["mode"] == "valid"))
 
 register(OpDef(
     "unfold",
@@ -429,7 +623,11 @@ register(OpDef(
                                                   dtype=np.float32), 16),
     table_name="unfold", arg_attrs=("window",),
     tune_space="unfold", tune_ctx=_ctx_unfold,
-    stream=StreamRule("time", lambda at, taps: (1, at["window"], 1))))
+    stream=StreamRule("time", lambda at, taps: (1, at["window"], 1)),
+    # precision-transparent: pure data movement, no qimpl needed — the
+    # f32 impl IS the int8 behavior, so int8 requests pass through
+    # silently instead of downgrading
+    precisions=("f32", "bf16", "int8")))
 
 register(OpDef(
     "overlap_add", _impl_overlap_add, ("native", "conv"),
@@ -454,7 +652,10 @@ register(OpDef(
     table_name="pfb_frontend", tune_space="pfb", tune_ctx=_ctx_pfb,
     stream=StreamRule("time",
                       lambda at, taps: (taps[1], taps[0] * taps[1], 1),
-                      needs_taps=True)))
+                      needs_taps=True),
+    precisions=("f32", "bf16", "int8"),
+    budgets=(("int8", Budget(sqnr_db=26.0)),),
+    qimpl=_qimpl_pfb_frontend, qprep=_qprep_pfb))
 
 register(OpDef(
     "pfb",
@@ -470,7 +671,10 @@ register(OpDef(
     table_name="pfb", tune_space="pfb", tune_ctx=_ctx_pfb,
     stream=StreamRule("time",
                       lambda at, taps: (taps[1], taps[0] * taps[1], 1),
-                      needs_taps=True)))
+                      needs_taps=True),
+    precisions=("f32", "bf16", "int8"),
+    budgets=(("int8", Budget(sqnr_db=26.0)),),
+    qimpl=_qimpl_pfb, qprep=_qprep_pfb))
 
 # ---------------------------------------------------------------------------
 # glue primitives (graph-only: no Table-1 row)
@@ -534,4 +738,5 @@ def elementwise_ops() -> frozenset[str]:
 
 
 __all__ = ["OpDef", "Attr", "StreamRule", "OPDEFS", "REQUIRED",
-           "register", "opdef", "table_ops", "elementwise_ops"]
+           "register", "opdef", "table_ops", "elementwise_ops",
+           "Budget", "sqnr_db", "bf16_round", "PRECISIONS"]

@@ -14,6 +14,20 @@ throughput (v5e: 394 TOPS int8), which is exactly the "NN-accelerator
 feature for free" the paper argues for.  Here the arithmetic is
 simulated in jnp (int32 accumulation semantics preserved) and validated
 by SQNR bounds in tests/test_quantize.py.
+
+This module is the numeric substrate of the graph layer's ``precision``
+dimension (``graph.compile(..., precision="int8")``): each matmul-shaped
+OpDef in :mod:`repro.core.opdefs` declares a quantized impl built from
+these functions, with const weights quantized **once at plan build**
+through the ``quantize_*_taps`` helpers (the resulting ``(q, scale)``
+packs ride on the Plan) while activations quantize per dispatch.
+
+Streaming note: activation quantization always uses per-row (``axis=-1``)
+scales, so a frame's quantized values depend only on that frame — a
+chunked/streamed int8 run therefore produces bit-identical output to the
+offline whole-signal run (int32 accumulation is exact regardless of
+batching), preserving the streamed == offline contract at every
+precision.
 """
 from __future__ import annotations
 
@@ -60,59 +74,139 @@ def qmatmul(x: Array, wq: Array, w_scale: Array, *,
 
 
 # ---------------------------------------------------------------------------
+# weight/tap quantization (done ONCE at plan build; packs ride the Plan)
+# ---------------------------------------------------------------------------
+def quantize_weights(w: Array):
+    """Per-output-channel int8 pack for a dense (k, n) matmul weight."""
+    return quantize_symmetric(jnp.asarray(w, jnp.float32), axis=0)
+
+
+def quantize_fir_taps(taps: Array, *, flip: bool = True):
+    """int8 pack of FIR taps as the (k, 1) unfold-matmul kernel column.
+
+    ``flip=True`` reverses the taps (true convolution); ``flip=False``
+    keeps the literal cross-correlation form (the paper's Eq. 16) — the
+    same semantics as :func:`repro.core.functions.fir`.
+    """
+    taps = jnp.asarray(taps, jnp.float32)
+    kern = taps[::-1] if flip else taps
+    return quantize_symmetric(kern.reshape(-1, 1), axis=0)
+
+
+def quantize_pfb_taps(taps: Array):
+    """int8 pack of a (M, P) PFB prototype, per-branch scales, stored in
+    the (reversed-window) orientation the frontend einsum consumes."""
+    taps = jnp.asarray(taps, jnp.float32)
+    return quantize_symmetric(taps[::-1], axis=0)
+
+
+# ---------------------------------------------------------------------------
 # quantized TINA signal ops
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=16)
-def _qdfm(n: int):
-    """int8-quantized Discrete Fourier Matrix (per-column scales)."""
+def _qdfm(n: int, inverse: bool = False):
+    """int8-quantized (inverse) Discrete Fourier Matrix, per-column
+    scales.  The inverse matrix carries the 1/n factor; per-column
+    scales absorb it, so quantization error stays relative.
+
+    Pure numpy on purpose: the result is lru_cached, and a cached value
+    built from traced jnp ops inside a jit would leak tracers into
+    later traces — numpy arrays are trace-inert and jnp converts them
+    at the use site."""
     lk = np.outer(np.arange(n), np.arange(n))
-    f = np.exp(-2j * np.pi * lk / n)
-    fr, fi = jnp.asarray(f.real, jnp.float32), jnp.asarray(f.imag, jnp.float32)
-    qr, sr = quantize_symmetric(fr, axis=0)
-    qi, si = quantize_symmetric(fi, axis=0)
-    return (qr, sr.reshape(-1)), (qi, si.reshape(-1))
+    sign = 1j if inverse else -1j
+    f = np.exp(sign * 2 * np.pi * lk / n)
+    if inverse:
+        f = f / n
+    qmax = 127
+
+    def qnp(a):
+        scale = np.maximum(np.max(np.abs(a), axis=0, keepdims=True),
+                           1e-12) / qmax
+        q = np.clip(np.round(a / scale), -qmax, qmax).astype(np.int8)
+        return q, scale.reshape(-1).astype(np.float32)
+
+    qr, sr = qnp(f.real.astype(np.float32))
+    qi, si = qnp(f.imag.astype(np.float32))
+    return (qr, sr), (qi, si)
 
 
-def qdft(x: Array, *, quantize_activations: bool = True) -> Array:
-    """DFT with an int8 Fourier-matrix kernel (paper §4.1 mapping +
-    §1 quantization claim)."""
+def qdft(x: Array, *, inverse: bool = False,
+         quantize_activations: bool = True) -> Array:
+    """(I)DFT with an int8 Fourier-matrix kernel (paper §4.1/§4.2
+    mapping + §1 quantization claim).
+
+    Real input runs the 2-real-matmul form; complex input expands to
+    the 4-real-matmul form ``z·W = (zr·Wr − zi·Wi) + i(zr·Wi + zi·Wr)``
+    — each part an int8 x int8 -> int32 matmul, exactly the TINA
+    "complex as channel pairs" layer layout.
+    """
     n = x.shape[-1]
-    (qr, sr), (qi, si) = _qdfm(n)
+    (qr, sr), (qi, si) = _qdfm(n, inverse)
     shp = x.shape
     x2 = x.reshape(-1, n)
-    zr = qmatmul(x2, qr, sr, quantize_activations=quantize_activations)
-    zi = qmatmul(x2, qi, si, quantize_activations=quantize_activations)
-    return (zr + 1j * zi).reshape(shp[:-1] + (n,))
+    mm = functools.partial(qmatmul, quantize_activations=quantize_activations)
+    if jnp.issubdtype(x2.dtype, jnp.complexfloating):
+        zr = jnp.real(x2).astype(jnp.float32)
+        zi = jnp.imag(x2).astype(jnp.float32)
+        out = ((mm(zr, qr, sr) - mm(zi, qi, si))
+               + 1j * (mm(zr, qi, si) + mm(zi, qr, sr)))
+    else:
+        out = mm(x2, qr, sr) + 1j * mm(x2, qi, si)
+    return out.reshape(shp[:-1] + (n,))
 
 
-def qfir(x: Array, taps: Array, *,
-         quantize_activations: bool = False) -> Array:
+def qidft(x: Array, *, quantize_activations: bool = True) -> Array:
+    """Inverse DFT with an int8 inverse-DFM kernel."""
+    return qdft(x, inverse=True, quantize_activations=quantize_activations)
+
+
+def qfir(x: Array, taps: Array | None = None, *, flip: bool = True,
+         quantize_activations: bool = False,
+         qtaps: tuple[Array, Array] | None = None) -> Array:
     """FIR with int8 taps via the unfold + matmul form of the standard
-    conv (weight-only by default: FIR inputs are streaming samples)."""
-    k = taps.shape[-1]
-    tq, ts = quantize_symmetric(taps.reshape(-1, 1), axis=0)
+    conv (weight-only by default: FIR inputs are streaming samples).
+
+    ``qtaps`` accepts a pre-built :func:`quantize_fir_taps` pack (the
+    plan-build path — weights quantized once); otherwise the taps are
+    quantized here.
+    """
+    if qtaps is None:
+        qtaps = quantize_fir_taps(taps, flip=flip)
+    tq, ts = qtaps
+    k = tq.shape[0]
     n = x.shape[-1]
     idx = jnp.arange(n - k + 1)[:, None] + jnp.arange(k)[None, :]
     windows = x[..., idx]                           # (..., n-k+1, k)
     w2 = windows.reshape(-1, k)
-    y = qmatmul(w2, tq[::-1], ts,
-                quantize_activations=quantize_activations)
+    y = qmatmul(w2, tq, ts, quantize_activations=quantize_activations)
     return y.reshape(x.shape[:-1] + (n - k + 1,))
 
 
-def qpfb(x: Array, taps: Array) -> Array:
+def qpfb_frontend(x: Array, taps: Array | None = None, *,
+                  qtaps: tuple[Array, Array] | None = None) -> Array:
+    """PFB frontend (polyphase FIR bank) with int8 prototype taps
+    (per-branch scales), dequantized into the branch einsum."""
+    if qtaps is None:
+        qtaps = quantize_pfb_taps(taps)
+    tq, ts = qtaps
+    m, p = tq.shape
+    frames = x.reshape(x.shape[:-1] + (-1, p))
+    nfr = frames.shape[-2]
+    idx = jnp.arange(nfr - m + 1)[:, None] + jnp.arange(m)[None, :]
+    windows = frames[..., idx, :]                     # (..., t, m, p)
+    return jnp.einsum("...tmp,mp->...tp", windows, dequantize(tq, ts))
+
+
+def qpfb(x: Array, taps: Array | None = None, *,
+         qtaps: tuple[Array, Array] | None = None) -> Array:
     """Full PFB with int8 prototype taps + int8 DFM (paper §5.2 use case
     under the §1 quantization claim — the 'TINA 16 bit' column of the
     paper's Fig. 3, pushed to int8 weights)."""
-    m, p = taps.shape
-    frames = x.reshape(x.shape[:-1] + (-1, p))
-    nfr = frames.shape[-2]
-    tq, ts = quantize_symmetric(taps[::-1], axis=0)   # per-branch scales
-    idx = jnp.arange(nfr - m + 1)[:, None] + jnp.arange(m)[None, :]
-    windows = frames[..., idx, :]                     # (..., t, m, p)
-    y = jnp.einsum("...tmp,mp->...tp", windows, dequantize(tq, ts))
+    y = qpfb_frontend(x, taps, qtaps=qtaps)
     return qdft(y, quantize_activations=False)
 
 
-__all__ = ["quantize_symmetric", "dequantize", "qmatmul", "qdft", "qfir",
-           "qpfb"]
+__all__ = ["quantize_symmetric", "dequantize", "qmatmul", "qdft", "qidft",
+           "qfir", "qpfb_frontend", "qpfb", "quantize_weights",
+           "quantize_fir_taps", "quantize_pfb_taps"]

@@ -433,6 +433,124 @@ def pick(graph, node, avals: dict, *, backend: str = None,
     return best
 
 
+# a reduced-precision candidate must be decisively faster than the f32
+# winner to be selected — same hysteresis as PLAYOFF_MARGIN (a marginal
+# "win" is noise, and f32 is the numerically safest default)
+PRECISION_MARGIN = 0.97
+
+
+def pick_joint(graph, node, avals: dict, *, backend: str = None,
+               lowerings: Sequence[str] | None = None,
+               candidates: Sequence[str] | None = None,
+               tune_configs: bool = True, repeats: int = 3,
+               path: str | None = None) -> tuple[str, dict, str]:
+    """Fastest (lowering, block_config, precision) for ``node`` — the
+    ``precision="auto"`` search, joint over the op's declared precision
+    tiers × the lowering/config search of :func:`pick`.
+
+    Every reduced-precision candidate is checked against the f32
+    reference output FIRST: one that violates the OpDef's declared
+    accuracy :class:`~repro.core.opdefs.Budget` is rejected before it
+    is ever timed, so ``precision="auto"`` can never return a
+    budget-violating winner.  Winners (and the achieved SQNR/abs-err of
+    every probed tier) persist in the v2 cache under the node key +
+    ``|prec=auto``, separate from the precision-blind :func:`pick`
+    entries.  Honors ``$TINA_AUTOTUNE`` like :func:`pick`; anything
+    short of ``on`` without a cache hit answers f32 (never a
+    reduced-precision tier nobody measured).
+    """
+    from repro.core.opdefs import OPDEFS
+    from repro.graph.plan import apply_node
+
+    backend = backend or jax.default_backend()
+    d = OPDEFS[node.op]
+    at = d.bind(node.attr)
+    prec_cands = [p for p in d.precisions
+                  if p != "f32" and d.supports_precision(p, at)]
+    in_avals = [avals[i] for i in node.inputs]
+
+    def f32() -> tuple[str, dict, str]:
+        lw, cfg = pick(graph, node, avals, backend=backend,
+                       lowerings=lowerings, candidates=candidates,
+                       tune_configs=tune_configs, repeats=repeats,
+                       path=path)
+        return lw, cfg, "f32"
+
+    if not prec_cands:
+        return f32()
+
+    m = mode()
+    path = path or cache_path()
+    cache = _load(path)
+    key = node_key(node, in_avals, backend)
+    restrict = lowerings if lowerings is not None else candidates
+    if restrict is not None and list(restrict) != list(d.lowerings):
+        only = [c for c in restrict if c in d.lowerings]
+        key += f"|only={','.join(only)}"
+    key += "|prec=auto"
+    if m != "off":
+        hit = cache.get(key)
+        if hit and hit.get("precision") in ("f32", *prec_cands):
+            _CACHE_HITS.add()
+            return (hit["lowering"], dict(hit.get("config") or {}),
+                    hit["precision"])
+    if m != "on":
+        return f32()
+
+    lw32, cfg32, _ = f32()
+    _MEASURED.add()
+    with obs.span("autotune.pick_joint", cat="autotune", op=node.op,
+                  node=node.name):
+        args = [_dummy(a) for a in in_avals]
+
+        def _fn(lw, cfg, prec):
+            return jax.jit(lambda *a, _l=lw, _c=cfg, _p=prec:
+                           apply_node(node, a, _l, _c, _p))
+
+        try:
+            ref = np.asarray(_fn(lw32, cfg32, "f32")(*args))
+        except Exception:
+            return f32()         # f32 itself doesn't run at these shapes
+        t32 = measure(_fn(lw32, cfg32, "f32"), args, repeats=repeats)
+        best = (t32, lw32, cfg32, "f32")
+        times = {"f32:" + _cfg_label(lw32, cfg32): t32}
+        accuracy: dict[str, dict] = {}
+        for p in prec_cands:
+            if p == "int8" and d.qimpl is not None:
+                lw_p, cfg_p = "native", {}   # the qimpl IS the int8 path
+            else:
+                lw_p, cfg_p = lw32, cfg32
+            fn = _fn(lw_p, cfg_p, p)
+            try:
+                out = np.asarray(fn(*args))
+            except Exception:
+                continue
+            budget = d.budget(p)
+            if budget is not None:
+                ok, achieved = budget.check(ref, out)
+                accuracy[p] = {
+                    k: (round(v, 2) if np.isfinite(v) else None)
+                    for k, v in achieved.items()}
+                accuracy[p]["ok"] = ok
+                if not ok:
+                    continue     # budget violation: never a winner
+            t = measure(fn, args, repeats=repeats, prune_above=best[0])
+            times[f"{p}:{_cfg_label(lw_p, cfg_p)}"] = t
+            if np.isfinite(t) and t < PRECISION_MARGIN * best[0]:
+                best = (t, lw_p, cfg_p, p)
+        _, lw, cfg, prec = best
+        obs.instant("autotune.winner", cat="autotune", op=node.op,
+                    node=node.name, lowering=lw, precision=prec,
+                    config=_cfg_label(lw, cfg))
+        cache[key] = {"lowering": lw, "config": cfg, "precision": prec,
+                      "backend": backend, "accuracy": accuracy,
+                      "times_us": {k: round(v * 1e6, 1)
+                                   for k, v in times.items()
+                                   if np.isfinite(v)}}
+        _save(path, cache)
+    return lw, cfg, prec
+
+
 def pick_lowering(graph, node, avals: dict, *, backend: str = None,
                   candidates: Sequence[str] | None = None,
                   repeats: int = 3, path: str | None = None) -> str:
@@ -548,6 +666,11 @@ def main(argv=None):
     ap.add_argument("--tune-fusion", action="store_true",
                     help="also measure fused-vs-unfused per elementwise "
                          "chain (fuse='auto') and persist the verdicts")
+    ap.add_argument("--precision", default="f32",
+                    choices=("f32", "bf16", "int8", "auto"),
+                    help="execution tier; 'auto' searches precision "
+                         "jointly with lowering x block config, "
+                         "budget-gated (verdicts persist in the cache)")
     args = ap.parse_args(argv)
 
     if at.mode() != "on":
@@ -556,14 +679,17 @@ def main(argv=None):
     spec = PIPELINES[args.pipeline]
     g = spec.build()
     n = spec.valid_len(args.n)
-    fuse = "auto" if args.tune_fusion else True
+    fuse = "auto" if args.tune_fusion else None
     plan = plan_lib.compile(g, {g.inputs[0]: (n,)}, lowering="auto",
-                            fuse=fuse,
+                            fuse=fuse, precision=args.precision,
                             autotune_kwargs={"repeats": args.repeats})
     print(f"[autotune] {args.pipeline} @ n={n} "
-          f"(cache: {at.cache_path()}, mode: {at.mode()})")
+          f"(cache: {at.cache_path()}, mode: {at.mode()}, "
+          f"precision: {args.precision})")
     for name, lw in plan.lowerings.items():
-        print(f"  {name:24s} -> {_cfg_label(lw, plan.configs.get(name, {}))}")
+        prec = plan.precisions.get(name, "f32")
+        print(f"  {name:24s} -> "
+              f"{_cfg_label(lw, plan.configs.get(name, {}))} @ {prec}")
     st = at.stats()
     print(f"[autotune] measured={st['measured']} pruned={st['pruned']} "
           f"cache_hits={st['cache_hits']}")
@@ -574,11 +700,12 @@ def main(argv=None):
     plan_lib.clear_cache()
     before = at.stats()["measured"]
     plan2 = plan_lib.compile(g, {g.inputs[0]: (n,)}, lowering="auto",
-                             fuse=fuse,
+                             fuse=fuse, precision=args.precision,
                              autotune_kwargs={"repeats": args.repeats})
     after = at.stats()["measured"]
     ok = (after == before and plan2.lowerings == plan.lowerings
-          and plan2.configs == plan.configs)
+          and plan2.configs == plan.configs
+          and plan2.precisions == plan.precisions)
     print(f"[autotune] cache roundtrip: "
           f"{'OK' if ok else 'FAILED'} (re-measured {after - before})")
     if at.mode() == "on" and not ok:
@@ -589,5 +716,6 @@ if __name__ == "__main__":
     main()
 
 
-__all__ = ["pick", "pick_lowering", "pick_fusion", "measure", "node_key",
-           "tune_ctx", "space_for", "cache_path", "mode", "stats", "main"]
+__all__ = ["pick", "pick_joint", "pick_lowering", "pick_fusion", "measure",
+           "node_key", "tune_ctx", "space_for", "cache_path", "mode",
+           "stats", "main"]

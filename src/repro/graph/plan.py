@@ -66,7 +66,7 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro import obs
-from repro.core.opdefs import OPDEFS
+from repro.core.opdefs import OPDEFS, bf16_round
 from repro.graph.graph import Graph, Node
 
 # The op catalog IS the unified OpDef registry — kept under the name the
@@ -75,19 +75,36 @@ OPS = OPDEFS
 
 
 def apply_node(node: Node, args: Sequence[jax.Array], lowering: str,
-               block: dict | None = None):
+               block: dict | None = None, precision: str = "f32",
+               qpack=None):
     """Execute one graph node through its OpDef.
 
-    An unsupported ``lowering`` falls back to native *here* for the
-    eager callers (shape inference, per-op benchmarks, the tuner's
-    candidate probes); the planner resolves effective lowerings ahead
-    of time and records the substitution on the plan instead of relying
-    on this fallback.
+    An unsupported ``lowering`` (or ``precision``) falls back to
+    native/f32 *here* for the eager callers (shape inference, per-op
+    benchmarks, the tuner's candidate probes); the planner resolves
+    effective lowerings and precisions ahead of time and records the
+    substitutions on the plan instead of relying on this fallback.
+
+    ``precision``: ``"int8"`` dispatches to the op's quantized impl
+    (``qpack`` is the plan-built weight pack, or None to quantize per
+    call); ``"bf16"`` rounds inputs and output through bfloat16 around
+    the f32 impl (MXU numerics — composes with every lowering).  An op
+    declaring a tier but no qimpl is precision-transparent: the f32
+    impl IS its behavior at that tier.
     """
     d = OPS[node.op]
+    at = d.bind(node.attr)
     if lowering not in d.lowerings:
         lowering = "native"
-    return d.impl(list(args), d.bind(node.attr), lowering, block)
+    if precision not in (None, "f32") \
+            and not d.supports_precision(precision, at):
+        precision = "f32"
+    if precision == "int8" and d.qimpl is not None:
+        return d.qimpl(list(args), at, qpack)
+    if precision == "bf16":
+        args = [bf16_round(a) for a in args]
+        return bf16_round(d.impl(list(args), at, lowering, block))
+    return d.impl(list(args), at, lowering, block)
 
 
 # ---------------------------------------------------------------------------
@@ -95,8 +112,12 @@ def apply_node(node: Node, args: Sequence[jax.Array], lowering: str,
 # ---------------------------------------------------------------------------
 def _execute(graph: Graph, inputs: dict[str, jax.Array],
              lowerings: dict[str, str],
-             configs: dict[str, dict] | None = None):
+             configs: dict[str, dict] | None = None,
+             precisions: dict[str, str] | None = None,
+             qconsts: dict[str, tuple] | None = None):
     configs = configs or {}
+    precisions = precisions or {}
+    qconsts = qconsts or {}
     env: dict[str, jax.Array] = {}
     for node in graph.topo():
         if node.op == "input":
@@ -107,7 +128,9 @@ def _execute(graph: Graph, inputs: dict[str, jax.Array],
             args = [env[i] for i in node.inputs]
             env[node.name] = apply_node(node, args,
                                         lowerings.get(node.name, "native"),
-                                        configs.get(node.name))
+                                        configs.get(node.name),
+                                        precisions.get(node.name, "f32"),
+                                        qconsts.get(node.name))
     outs = tuple(env[o] for o in graph.outputs)
     return outs[0] if len(outs) == 1 else outs
 
@@ -266,8 +289,14 @@ class Plan:
     configs: dict[str, dict] = dataclasses.field(default_factory=dict)
     # node name -> chosen Pallas block config ({} = kernel defaults)
     downgrades: dict[str, str] = dataclasses.field(default_factory=dict)
-    # node name -> the *requested* lowering the node couldn't honor
-    # (its effective entry in ``lowerings`` is what actually runs)
+    # node name -> dimension-tagged request(s) the node couldn't honor:
+    # "lowering:pallas", "precision:int8", or both comma-joined (the
+    # effective entries in ``lowerings``/``precisions`` are what runs)
+    precisions: dict[str, str] = dataclasses.field(default_factory=dict)
+    # node name -> effective execution precision (absent == "f32")
+    qconsts: dict[str, tuple] = dataclasses.field(default_factory=dict)
+    # node name -> int8 (q, scale) weight pack, quantized ONCE at plan
+    # build by the OpDef's qprep (activations quantize per dispatch)
     mesh: Mesh | None = None      # device mesh of a sharded plan
     batch_axis: str | None = None  # mesh axis carrying the batch dim
     input_shardings: tuple = ()   # NamedSharding per input (sharded plans)
@@ -281,6 +310,14 @@ class Plan:
         here and in :attr:`downgrades`).  The same mapping as
         :attr:`lowerings`; treat it as read-only."""
         return self.lowerings
+
+    @property
+    def node_precisions(self) -> dict[str, str]:
+        """Effective per-node precisions (what each node actually runs —
+        requested tiers a node doesn't support appear as ``f32`` here
+        and dimension-tagged in :attr:`downgrades`).  The same mapping
+        as :attr:`precisions`; treat it as read-only."""
+        return self.precisions
 
     @property
     def trace_count(self) -> int:
@@ -330,21 +367,40 @@ def clear_cache() -> None:
 
 
 def _warn_downgrades(graph: Graph, downgrades: dict[str, str]) -> None:
-    """Surface requested-but-unsupported lowerings, once per (graph,
-    downgrade set) — a requested-pallas-got-native plan must be visible
-    instead of silently slow."""
+    """Surface requested-but-unsupported lowerings/precisions, once per
+    (graph, downgrade set) — a requested-pallas-got-native (or
+    requested-int8-got-f32) plan must be visible instead of silently
+    slow/full-precision.  Downgrade values are dimension-tagged
+    (``"lowering:pallas"`` / ``"precision:int8"``, comma-joined when a
+    node downgraded on both), and the warning says which dimension fell
+    back."""
     key = (graph.name, tuple(sorted(downgrades.items())))
     if key in _WARNED_DOWNGRADES:
         return
     _WARNED_DOWNGRADES.add(key)
-    detail = ", ".join(
-        f"{name} ({OPS[graph.nodes[name].op].name}: requested {req!r}, "
-        f"supports {'/'.join(OPS[graph.nodes[name].op].lowerings)})"
-        for name, req in sorted(downgrades.items()))
+    by_dim: dict[str, dict[str, str]] = {"lowering": {}, "precision": {}}
+    for name, tags in downgrades.items():
+        for tag in tags.split(","):
+            dim, _, req = tag.partition(":")
+            by_dim.setdefault(dim, {})[name] = req
+    parts = []
+    if by_dim["lowering"]:
+        detail = ", ".join(
+            f"{name} ({OPS[graph.nodes[name].op].name}: requested {req!r}, "
+            f"supports {'/'.join(OPS[graph.nodes[name].op].lowerings)})"
+            for name, req in sorted(by_dim["lowering"].items()))
+        parts.append(f"{len(by_dim['lowering'])} node(s) fell back to "
+                     f"lowering='native': {detail}")
+    if by_dim["precision"]:
+        detail = ", ".join(
+            f"{name} ({OPS[graph.nodes[name].op].name}: requested {req!r}, "
+            f"supports {'/'.join(OPS[graph.nodes[name].op].precisions)})"
+            for name, req in sorted(by_dim["precision"].items()))
+        parts.append(f"{len(by_dim['precision'])} node(s) fell back to "
+                     f"precision='f32': {detail}")
     warnings.warn(
-        f"plan for {graph.name!r}: {len(downgrades)} node(s) fell back to "
-        f"lowering='native': {detail}; see Plan.downgrades / "
-        "Plan.node_lowerings", stacklevel=3)
+        f"plan for {graph.name!r}: " + "; ".join(parts)
+        + "; see Plan.downgrades / Plan.node_lowerings", stacklevel=3)
 
 
 def _norm_mesh(mesh, shard) -> tuple[Mesh | None, str | None]:
@@ -394,8 +450,8 @@ def _norm_specs(graph: Graph, shapes, dtype) -> dict[str, jax.ShapeDtypeStruct]:
 
 
 def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
-            lowering="native", block_configs=None, fuse=True,
-            mesh=None, shard: str | None = None,
+            lowering="native", precision="f32", block_configs=None,
+            fuse=None, mesh=None, shard: str | None = None,
             autotune_kwargs: dict | None = None) -> Plan:
     """Compile ``graph`` for the given input shapes; memoized.
 
@@ -408,6 +464,19 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
     downgrades live on ``PipelineService.downgrades``, extending the
     compile-time ``Plan.downgrades`` contract).
 
+    ``precision``: the execution tier, mirroring the ``lowering``
+    contract — ``"f32"`` (default), ``"bf16"`` (inputs/outputs rounded
+    through bfloat16 around f32 accumulate, MXU numerics, any lowering),
+    ``"int8"`` (quantized impls for the matmul-shaped ops; const
+    weights quantized ONCE here and carried on ``Plan.qconsts``,
+    activations per dispatch), a per-node dict, or ``"auto"`` (the
+    autotuner searches precision jointly with lowering × block config,
+    rejecting candidates that violate the OpDef's accuracy Budget).
+    Nodes that don't support the requested tier run f32 — recorded
+    dimension-tagged on ``Plan.downgrades`` (``"precision:int8"``) and
+    warned once, like lowering downgrades.  int8 nodes with a quantized
+    impl always run it natively (the lowering dimension collapses).
+
     ``block_configs``: Pallas block sizes per node — ``None`` (kernel
     defaults; with ``lowering="auto"`` the autotuner picks them jointly
     with the lowering), ``"auto"`` (tune configs for whatever lowering
@@ -418,7 +487,11 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
     ``False`` never fuses, ``"auto"`` asks the autotuner to measure
     fused vs unfused per chain (``TINA_AUTOTUNE=on`` measures and
     persists the verdict; ``cached`` replays it; ``off`` keeps the
-    fused default).
+    fused default).  The default (``None``) resolves to ``"auto"`` for
+    ``lowering="auto"`` plans — tuned plans get tuned fusion — and
+    ``True`` otherwise.  Chains whose members request different
+    precisions (dict form) refuse to fuse: a fused node runs at ONE
+    tier, so precision boundaries are fusion boundaries.
 
     ``mesh`` / ``shard``: ``mesh=`` (a Mesh or a device count) shards
     the batch axis — the leading dim of every input — across the mesh's
@@ -434,6 +507,20 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
         lowering = "native"      # alias: "run the trusted slow path" —
         # shares native's cache key so degraded buckets reuse any
         # already-compiled native plan
+    if fuse is None:
+        fuse = "auto" if lowering == "auto" else True
+    if precision is None:
+        precision = "f32"
+    _tiers = ("f32", "bf16", "int8", "auto")
+    bad = ({p for p in precision.values() if p not in _tiers}
+           if isinstance(precision, dict)
+           else (set() if precision in _tiers else {precision}))
+    if bad:
+        raise ValueError(f"precision: unknown tier(s) {sorted(bad)}; "
+                         f"expected one of {_tiers} or a per-node dict")
+    prec_auto = (precision == "auto"
+                 or (isinstance(precision, dict)
+                     and "auto" in precision.values()))
     specs = _norm_specs(graph, shapes, dtype)
     mesh, batch_axis = _norm_mesh(mesh, shard)
     mesh_key = None
@@ -457,11 +544,14 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
                      for n in graph.inputs)
     low_key = (tuple(sorted(lowering.items()))
                if isinstance(lowering, dict) else lowering)
+    prec_key = (tuple(sorted(precision.items()))
+                if isinstance(precision, dict) else precision)
     cfg_key = (tuple(sorted((n, tuple(sorted(c.items())))
                             for n, c in block_configs.items()))
                if isinstance(block_configs, dict) else block_configs)
     tune_key = None
-    if lowering == "auto" or block_configs == "auto" or fuse == "auto":
+    if (lowering == "auto" or block_configs == "auto" or fuse == "auto"
+            or prec_auto):
         # tuned selections depend on the autotune mode, the cache file
         # (path AND content — another process tuning entries must reach
         # plans compiled after its write, hence the mtime), and the
@@ -471,8 +561,8 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
         path = (autotune_kwargs or {}).get("path") or autotune.cache_path()
         tune_key = (autotune.mode(), path, autotune._mtime(path),
                     repr(sorted((autotune_kwargs or {}).items())))
-    key = (graph.signature, spec_key, backend, low_key, cfg_key, fuse,
-           mesh_key, tune_key)
+    key = (graph.signature, spec_key, backend, low_key, prec_key, cfg_key,
+           fuse, mesh_key, tune_key)
     plan = _CACHE.get(key)
     if plan is not None:
         _HITS.add()
@@ -480,6 +570,7 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
     _MISSES.add()
     with obs.span("plan.compile", cat="compile", graph=graph.name,
                   backend=backend, lowering=str(low_key),
+                  precision=str(prec_key),
                   shapes=",".join(f"{n}:{specs[n].shape}"
                                   for n in graph.inputs)):
         for node in graph.topo():
@@ -502,8 +593,22 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
                                         + tuple(s.shape[1:]), s.dtype)
                 for n, s in specs.items()}
         avals = infer(graph, body_specs)
+
+        def req_prec(name: str) -> str:
+            """The precision requested for a (pre-fusion) node name."""
+            if not isinstance(precision, dict):
+                return precision
+            return precision.get(name, "f32")
+
         with obs.span("plan.fuse", cat="compile", graph=graph.name,
                       mode=str(fuse)):
+            keeps: list[Callable] = []
+            if isinstance(precision, dict):
+                # precision boundaries are fusion boundaries: a fused
+                # node executes at ONE tier, so a run whose members
+                # request different tiers stays unfused
+                keeps.append(lambda run: len(
+                    {req_prec(n.name) for n in run}) == 1)
             if fuse == "auto":
                 from repro.graph import autotune
                 if isinstance(lowering, str) and lowering in (
@@ -517,13 +622,13 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
                     # native probe would answer a question the autotuned
                     # plan never asks.
                     probe_lw = "pallas"
-                g = fuse_elementwise(
-                    graph, avals,
-                    keep=lambda run: autotune.pick_fusion(
-                        graph, run, avals, backend=backend,
-                        lowering=probe_lw, **(autotune_kwargs or {})))
-            elif fuse:
-                g = fuse_elementwise(graph, avals)
+                keeps.append(lambda run: autotune.pick_fusion(
+                    graph, run, avals, backend=backend,
+                    lowering=probe_lw, **(autotune_kwargs or {})))
+            if fuse:
+                keep = (None if not keeps else
+                        lambda run: all(k(run) for k in keeps))
+                g = fuse_elementwise(graph, avals, keep=keep)
             else:
                 g = graph
         if g is not graph:
@@ -532,7 +637,14 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
         lowerings: dict[str, str] = {}
         configs: dict[str, dict] = {}
         downgrades: dict[str, str] = {}
+        precisions_map: dict[str, str] = {}
+        qconsts: dict[str, tuple] = {}
         compute = [n for n in g.topo() if n.op not in ("input", "const")]
+
+        def _tag_downgrade(name: str, dim: str, req: str) -> None:
+            tag = f"{dim}:{req}"
+            downgrades[name] = (f"{downgrades[name]},{tag}"
+                                if name in downgrades else tag)
 
         def resolve(node: Node, requested: str | None) -> None:
             """Record the node's effective lowering (+ the downgrade when
@@ -547,7 +659,42 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
                 lowerings[node.name] = "native"
                 if requested != "native" \
                         and not OPS[node.op].lowering_agnostic:
-                    downgrades[node.name] = requested
+                    _tag_downgrade(node.name, "lowering", requested)
+
+        def req_prec_node(node: Node) -> str:
+            """The precision requested for a post-fusion node (fused_ew
+            honors the members' request when they agree — the fusion
+            keep-filter guarantees they do for dict requests)."""
+            if not isinstance(precision, dict):
+                return precision
+            if node.name in precision:
+                return precision[node.name]
+            if node.op == "fused_ew":
+                req = {precision[m] for m in node.attr.get("members", ())
+                       if m in precision}
+                if len(req) == 1:
+                    return req.pop()
+            return "f32"
+
+        def resolve_prec(node: Node, rp: str) -> None:
+            """Record the node's effective precision.  int8 with a
+            quantized impl collapses the lowering dimension (qimpls are
+            jnp-native); unsupported tiers fall back to f32 — recorded
+            dimension-tagged + warned, unless the op is
+            lowering-agnostic (pure data movement runs identically at
+            any tier, so the request is satisfied, not downgraded)."""
+            d = OPS[node.op]
+            if rp in (None, "f32"):
+                precisions_map[node.name] = "f32"
+            elif d.supports_precision(rp, d.bind(node.attr)):
+                precisions_map[node.name] = rp
+                if rp == "int8" and d.qimpl is not None:
+                    lowerings[node.name] = "native"
+                    configs.pop(node.name, None)
+            else:
+                precisions_map[node.name] = "f32"
+                if not d.lowering_agnostic:
+                    _tag_downgrade(node.name, "precision", rp)
 
         # one lowering-selection span whatever the mode: the phase that
         # consults (or bypasses) the autotuner, so every compile's trace
@@ -556,16 +703,46 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
         with obs.span("plan.autotune", cat="autotune", graph=g.name,
                       mode=(lowering if isinstance(lowering, str)
                             else "per-node")):
+            def tune_prec(node: Node, only=None) -> None:
+                """precision="auto" for one node: joint (precision ×
+                lowering × block) search, budget-gated vs the numpy
+                oracle (``only`` restricts the lowering candidates when
+                the lowering was fixed by the caller)."""
+                from repro.graph import autotune
+                kw = dict(autotune_kwargs or {})
+                if only is not None:
+                    kw["lowerings"] = only
+                with obs.span("plan.lower", cat="autotune",
+                              node=node.name, op=node.op):
+                    lw, cfg, prec = autotune.pick_joint(
+                        g, node, avals, backend=backend, **kw)
+                lowerings[node.name] = lw
+                configs[node.name] = cfg
+                precisions_map[node.name] = prec
+
             if lowering == "auto":
                 from repro.graph import autotune
                 for node in compute:
-                    with obs.span("plan.lower", cat="autotune",
-                                  node=node.name, op=node.op):
-                        lw, cfg = autotune.pick(
-                            g, node, avals, backend=backend,
-                            **(autotune_kwargs or {}))
-                    lowerings[node.name] = lw
-                    configs[node.name] = cfg
+                    rp = req_prec_node(node)
+                    d = OPS[node.op]
+                    if rp == "auto":
+                        tune_prec(node)
+                    elif (rp == "int8" and d.qimpl is not None
+                          and d.supports_precision(rp, d.bind(node.attr))):
+                        # the quantized impl is the only int8 path —
+                        # nothing for the lowering tuner to choose
+                        lowerings[node.name] = "native"
+                        configs[node.name] = {}
+                        precisions_map[node.name] = "int8"
+                    else:
+                        with obs.span("plan.lower", cat="autotune",
+                                      node=node.name, op=node.op):
+                            lw, cfg = autotune.pick(
+                                g, node, avals, backend=backend,
+                                **(autotune_kwargs or {}))
+                        lowerings[node.name] = lw
+                        configs[node.name] = cfg
+                        resolve_prec(node, rp)
             elif isinstance(lowering, dict):
                 for node in compute:
                     if node.name in lowering:
@@ -580,9 +757,21 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
                         resolve(node, req.pop() if len(req) == 1 else None)
                     else:
                         resolve(node, None)
+                for node in compute:
+                    rp = req_prec_node(node)
+                    if rp == "auto":
+                        tune_prec(node, only=(lowerings[node.name],))
+                    else:
+                        resolve_prec(node, rp)
             else:
                 for node in compute:
                     resolve(node, lowering)
+                for node in compute:
+                    rp = req_prec_node(node)
+                    if rp == "auto":
+                        tune_prec(node, only=(lowerings[node.name],))
+                    else:
+                        resolve_prec(node, rp)
             if downgrades:
                 _DOWNGRADES.add(len(downgrades))
                 _warn_downgrades(g, downgrades)
@@ -611,15 +800,32 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
             key = key[:-1] + ((tune_key[0], path, autotune._mtime(path),
                                tune_key[3]),)
 
+        # quantize const weights ONCE, here at plan build: the (q, scale)
+        # packs ride the Plan and are closed over by the jitted body, so
+        # dispatches only quantize activations
+        for node in compute:
+            if precisions_map.get(node.name) != "int8":
+                continue
+            d = OPS[node.op]
+            if d.qprep is None:
+                continue
+            consts = {i: jnp.asarray(g.consts[ref])
+                      for i, ref in enumerate(node.inputs)
+                      if g.nodes[ref].op == "const"}
+            qp = d.qprep(d.bind(node.attr), consts)
+            if qp is not None:
+                qconsts[node.name] = qp
+
         plan = Plan(graph=g, input_names=tuple(g.inputs),
                     lowerings=lowerings, key=key, configs=configs,
-                    downgrades=downgrades, mesh=mesh,
+                    downgrades=downgrades, precisions=precisions_map,
+                    qconsts=qconsts, mesh=mesh,
                     batch_axis=batch_axis)
 
         def raw(*arrays):
             plan._traces.append(1)  # side effect fires only while tracing
             return _execute(g, dict(zip(g.inputs, arrays)), lowerings,
-                            configs)
+                            configs, precisions_map, qconsts)
 
         if mesh is None:
             plan._fn = jax.jit(raw)

@@ -168,7 +168,8 @@ _INVALID = obs.counter("service.invalid")
 class PipelineService:
     def __init__(self, graph: Graph, signal_len: int, *,
                  batch_size: int = 8, batching: str = "fixed",
-                 dtype="float32", lowering="native", block_configs=None,
+                 dtype="float32", lowering="native", precision="f32",
+                 block_configs=None,
                  mesh=None, max_wait_ms: float = 2.0,
                  close_timeout: float = 30.0, record_batches: bool = False,
                  queue_limit: int | None = None, on_full: str = "block",
@@ -263,6 +264,7 @@ class PipelineService:
         mesh, batch_axis = plan_lib._norm_mesh(mesh, None)
         self._mesh = mesh
         self._lowering = lowering
+        self._precision = precision
         shards = 1 if mesh is None else int(mesh.shape[batch_axis])
         if batching == "continuous":
             self.buckets = bucket_ladder(self.batch_size, shards)
@@ -278,6 +280,7 @@ class PipelineService:
             b: plan_lib.compile(
                 graph, {graph.inputs[0]: (b, self.signal_len)},
                 dtype=str(self.dtype), lowering=lowering,
+                precision=precision,
                 block_configs=block_configs, mesh=mesh, **compile_opts)
             for b in self.buckets}
         self.plan = self.plans[self.batch_size]
@@ -561,14 +564,18 @@ class PipelineService:
 
     def _degrade(self, bucket: int, err: BaseException):
         """Recompile a persistently failing bucket with the reference
-        lowering, once — runtime graceful degradation, extending the
-        compile-time ``Plan.downgrades`` contract to runtime.  Returns
-        the degraded plan, or None when there is nothing to shed (the
-        bucket already runs the reference path) or the recompile itself
-        fails (the batcher must survive that too)."""
+        lowering at f32, once — runtime graceful degradation, extending
+        the compile-time ``Plan.downgrades`` contract to runtime.
+        Returns the degraded plan, or None when there is nothing to
+        shed (the bucket already runs the reference path at full
+        precision) or the recompile itself fails (the batcher must
+        survive that too)."""
         requested = self._lowering
-        if isinstance(requested, str) and requested in ("native",
-                                                        "reference"):
+        prec = self._precision
+        lowering_trivial = (isinstance(requested, str)
+                            and requested in ("native", "reference"))
+        precision_trivial = prec in (None, "f32")
+        if lowering_trivial and precision_trivial:
             return None
         try:
             plan = plan_lib.compile(
@@ -581,8 +588,16 @@ class PipelineService:
         self.plans[bucket] = plan
         if bucket == self.batch_size:
             self.plan = plan
-        self.downgrades[bucket] = (requested if isinstance(requested, str)
-                                   else "per-node")
+        # record what the bucket gave up: the lowering request when one
+        # was non-trivial (the historical record shape), else the
+        # dimension-tagged precision request
+        if not lowering_trivial:
+            self.downgrades[bucket] = (requested
+                                       if isinstance(requested, str)
+                                       else "per-node")
+        else:
+            self.downgrades[bucket] = "precision:" + (
+                prec if isinstance(prec, str) else "per-node")
         self._tags[bucket] = "reference"
         with self._stats_lock:
             self._stats["degraded"] += 1

@@ -28,7 +28,12 @@ Plans are compiled through :func:`repro.graph.plan.compile`, so pushes
 of equal size after warm-up are pure plan-cache hits.  ``compile_opts``
 pass through verbatim — ``lowering="auto"`` / ``block_configs="auto"``
 make every chunk run the autotuner's tuned kernels (tuned once per push
-shape, then cached).
+shape, then cached), and ``precision="bf16"|"int8"`` streams at a
+reduced execution tier.  Streamed output equals offline output at
+EVERY precision: bf16 rounding is pointwise, and int8 activation
+quantization uses per-row (last-axis) scales, so each emitted window's
+quantized values depend only on that window — exactly the samples the
+offline run feeds the same op (int32 accumulation is batch-invariant).
 
 Bucketed pushes: ``ChunkedRunner(..., step_buckets=True)`` quantizes
 every push to a power-of-two number of output steps (the remainder

@@ -73,6 +73,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--signal-len", type=int, default=4096)
     ap.add_argument("--lowering", default="native",
                     choices=["native", "conv", "pallas", "auto"])
+    ap.add_argument("--precision", default="f32",
+                    choices=["f32", "bf16", "int8", "auto"],
+                    help="execution tier for every bucket plan: int8 "
+                         "runs the quantized kernels (weights quantized "
+                         "once at plan build), bf16 rounds through "
+                         "bfloat16 around f32 accumulate, auto lets the "
+                         "autotuner pick per node under each OpDef's "
+                         "accuracy budget (responses are oracle-checked "
+                         "by SQNR instead of allclose below f32)")
     ap.add_argument("--tune-blocks", action="store_true",
                     help="autotune Pallas block sizes for the chosen "
                          "lowering (lowering=auto already tunes them "
@@ -186,14 +195,16 @@ def _start_metrics_thread(svc, interval: float):
 
 
 def prewarm(graph_obj, batch: int, signal_len: int, *, lowering: str,
-            mesh=None, repeats: int = 2) -> dict:
+            precision: str = "f32", mesh=None, repeats: int = 2) -> dict:
     """Measure-and-persist autotune entries for the serving shape.
 
     Temporarily forces ``TINA_AUTOTUNE=on`` (the whole point is to
     measure ahead of traffic even when serving runs ``cached``),
     compiles the serving-shaped plan with the tuner engaged, and
     returns the tuner's stats delta.  ``lowering="auto"`` tunes
-    lowering + tiling jointly; a fixed lowering tunes its tiling only.
+    lowering + tiling jointly; a fixed lowering tunes its tiling only;
+    ``precision="auto"`` adds the budget-gated precision dimension to
+    whichever search runs.
     """
     from repro.graph import autotune, plan as plan_lib
 
@@ -205,7 +216,8 @@ def prewarm(graph_obj, batch: int, signal_len: int, *, lowering: str,
                   else dict(lowering=lowering, block_configs="auto"))
         plan_lib.compile(graph_obj,
                          {graph_obj.inputs[0]: (batch, signal_len)},
-                         mesh=mesh, autotune_kwargs={"repeats": repeats},
+                         mesh=mesh, precision=precision,
+                         autotune_kwargs={"repeats": repeats},
                          **kwargs)
         after = autotune.stats()
         return {k: after[k] - before[k] for k in after}
@@ -264,6 +276,7 @@ def main(argv=None):
         delta: dict = {}
         for b in sizes:
             d = prewarm(g, b, n, lowering=args.lowering,
+                        precision=args.precision,
                         mesh=args.mesh or None, repeats=args.tune_repeats)
             delta = {k: delta.get(k, 0) + v for k, v in d.items()}
         print(f"[dsp_serve] prewarm: tuned {len(sizes)} serving shape(s) "
@@ -281,6 +294,7 @@ def main(argv=None):
     svc = PipelineService(g, signal_len=n, batch_size=args.batch,
                           batching=args.batching,
                           lowering=args.lowering,
+                          precision=args.precision,
                           block_configs="auto" if args.tune_blocks else None,
                           mesh=args.mesh or None,
                           max_wait_ms=args.max_wait_ms,
@@ -299,10 +313,12 @@ def main(argv=None):
                    "rows/device)")
     ladder = (f", buckets {list(svc.buckets)}"
               if args.batching == "continuous" else "")
+    prec = ("" if args.precision == "f32"
+            else f", precisions: {svc.plan.precisions}")
     print(f"[dsp_serve] {args.pipeline}: {len(svc.plans)} plan(s) compiled "
           f"in {t_compile:.2f}s (lowerings: {svc.plan.lowerings}"
           + (f", block configs: {tuned}" if tuned else "")
-          + sharded + ladder + ")")
+          + prec + sharded + ladder + ")")
 
     signals = [rng.standard_normal(n).astype(np.float32)
                for _ in range(args.requests)]
@@ -349,10 +365,25 @@ def main(argv=None):
                   flush=True)
 
     checked = 0
+    min_sqnr = float("inf")
     for i, (x, o) in enumerate(zip(signals, outs)):
         if isinstance(o, Exception) or i in poison_idx:
             continue                 # oracle-check served requests only
-        np.testing.assert_allclose(o, spec.oracle(x), rtol=2e-3, atol=2e-3)
+        if args.precision == "f32":
+            np.testing.assert_allclose(o, spec.oracle(x), rtol=2e-3,
+                                       atol=2e-3)
+        else:
+            # reduced-precision responses are judged the way their
+            # budgets are: SQNR against the oracle, floored well below
+            # any OpDef budget so a quantization bug (not quantization
+            # noise) fails the launch
+            from repro.core.opdefs import sqnr_db
+            q = sqnr_db(spec.oracle(x), np.asarray(o))
+            min_sqnr = min(min_sqnr, q)
+            assert q > 20.0, (
+                f"response {i}: SQNR {q:.1f} dB vs the numpy oracle at "
+                f"precision={args.precision} — below the 20 dB sanity "
+                "floor")
         checked += 1
         if checked >= args.check:
             break
@@ -400,8 +431,10 @@ def main(argv=None):
         print("[dsp_serve] latency p50/p99 ms — "
               + ", ".join(f"{k} {lat[k]['p50']:.2f}/{lat[k]['p99']:.2f}"
                           for k in ("total", "queued", "pad", "device")))
+    sq = (f" (min SQNR {min_sqnr:.1f} dB @ {args.precision})"
+          if np.isfinite(min_sqnr) else "")
     print(f"[dsp_serve] {checked} response(s) verified against the "
-          "numpy oracle")
+          f"numpy oracle{sq}")
     if args.trace:
         n_events = obs.export_chrome_trace(args.trace)
         dropped = obs.REGISTRY.dropped_events

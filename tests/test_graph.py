@@ -472,6 +472,53 @@ def test_check_regression_gate(tmp_path, monkeypatch):
                                   "--fresh", str(fresh)]) == 0
 
 
+def test_check_regression_multi_metric(tmp_path, monkeypatch):
+    """Comma-separated --metric gates each metric independently (the
+    bench-gate service-latency invocation): a regression in the second
+    metric alone fails, a single --relative-to broadcasts to all
+    metrics, and mismatched list lengths are a usage error."""
+    import json as json_lib
+
+    from benchmarks import check_regression
+
+    def bench(path, p50, p99):
+        path.write_text(json_lib.dumps({"figure": "fig4_service", "runs": [
+            {"git_rev": "x", "timestamp": "t", "results": [
+                {"pipeline": "pfb_power", "n": 4096,
+                 "fixed_p50_ms": 10.0, "fixed_p99_ms": 20.0,
+                 "continuous_p50_ms": p50, "continuous_p99_ms": p99}]}]}))
+
+    base, fresh = tmp_path / "base.json", tmp_path / "fresh.json"
+    bench(base, 2.0, 5.0)
+    monkeypatch.setenv("BENCH_COMMIT_MSG", "normal commit message")
+    monkeypatch.setattr(check_regression, "_git_msg", lambda *rev: "")
+    args = ["--baseline", str(base), "--fresh", str(fresh),
+            "--metric", "continuous_p50_ms,continuous_p99_ms",
+            "--relative-to", "fixed_p50_ms,fixed_p99_ms"]
+
+    bench(fresh, 2.1, 5.2)            # both inside the 25% budget
+    assert check_regression.main(args) == 0
+    bench(fresh, 2.1, 9.0)            # p50 fine, p99 regressed 80%
+    assert check_regression.main(args) == 1
+    # the waiver mechanism covers every metric in the invocation
+    monkeypatch.setenv("BENCH_COMMIT_MSG",
+                       "tail hit\n\nbench-waiver: scheduler rework")
+    assert check_regression.main(args) == 0
+    monkeypatch.setenv("BENCH_COMMIT_MSG", "normal commit message")
+    # one --relative-to broadcasts across all metrics
+    bench(fresh, 2.1, 5.2)
+    assert check_regression.main(
+        ["--baseline", str(base), "--fresh", str(fresh),
+         "--metric", "continuous_p50_ms,continuous_p99_ms",
+         "--relative-to", "fixed_p50_ms"]) == 0
+    # 2 metrics x 3 relative-to entries is a usage error, not a pass
+    with pytest.raises(SystemExit):
+        check_regression.main(
+            ["--baseline", str(base), "--fresh", str(fresh),
+             "--metric", "continuous_p50_ms,continuous_p99_ms",
+             "--relative-to", "a,b,c"])
+
+
 def test_autotune_save_merges_concurrent_entries(tmp_path, monkeypatch):
     """_save must not clobber entries another process persisted — and a
     v1-format file on disk must survive the merge (migrated to v2)."""

@@ -259,7 +259,8 @@ def test_plan_records_downgrades_and_warns_once():
     # overlap_add is a genuinely missing pallas kernel -> recorded;
     # real/frame_decimate are lowering-agnostic data movement -> not
     assert down_ops == {"overlap_add"}
-    assert all(req == "pallas" for req in p.downgrades.values())
+    # downgrade values are dimension-tagged: which axis fell back
+    assert all(req == "lowering:pallas" for req in p.downgrades.values())
     assert all(p.node_lowerings[n] == "native" for n in p.downgrades)
     dft_nodes = [n.name for n in p.graph.topo() if n.op == "dft"]
     assert all(p.node_lowerings[n] == "pallas" for n in dft_nodes)

@@ -56,6 +56,80 @@ def test_qfir_matches_float_taps():
     assert sqnr_db(want, np.asarray(got)) > 35
 
 
+@pytest.mark.parametrize("axis", [None, 0, 1, -1])
+def test_quantize_roundtrip_every_axis(axis):
+    """Per-channel scales along any axis (and per-tensor): dequantized
+    error stays within half a quantization step everywhere."""
+    x = jnp.asarray(RNG.standard_normal((16, 48)) *
+                    np.logspace(0, 3, 48), jnp.float32)   # wild dynamic range
+    q, s = quantize_symmetric(x, axis=axis)
+    assert q.dtype == jnp.int8
+    # scale shape broadcasts against x (keepdims along the reduced axis)
+    err = np.abs(np.asarray(dequantize(q, s)) - np.asarray(x))
+    assert (err <= np.asarray(s) / 2 + 1e-7).all(), axis
+
+
+def test_quantize_all_zero_rows_no_nan():
+    """An all-zero channel must not divide by zero: the scale floors at
+    1e-12, q is exactly 0, and dequantize returns exact zeros."""
+    x = jnp.zeros((4, 32), jnp.float32)
+    x = x.at[1].set(jnp.asarray(RNG.standard_normal(32), jnp.float32))
+    q, s = quantize_symmetric(x, axis=-1)
+    assert np.isfinite(np.asarray(s)).all()
+    deq = np.asarray(dequantize(q, s))
+    assert np.isfinite(deq).all()
+    assert (deq[0] == 0).all() and (deq[2:] == 0).all()
+    # the all-zeros tensor too (every scale floored)
+    q0, s0 = quantize_symmetric(jnp.zeros((8, 8), jnp.float32))
+    assert (np.asarray(q0) == 0).all() and np.isfinite(np.asarray(s0)).all()
+    # and qmatmul through a zero row stays finite and exactly zero
+    w = jnp.asarray(RNG.standard_normal((32, 8)), jnp.float32)
+    wq, ws = quantize_symmetric(w, axis=0)
+    y = np.asarray(qmatmul(jnp.zeros((2, 32), jnp.float32), wq,
+                           ws.reshape(-1)))
+    assert (y == 0).all()
+
+
+def test_quantize_clips_symmetric_at_qmax():
+    """Symmetric int8 never uses -128: extremes land exactly on ±127,
+    and out-of-scale values (per-tensor scale dominated by an outlier
+    column) clip rather than wrap."""
+    x = jnp.asarray([[-1000.0, -1.0, 0.5, 1.0, 1000.0]], jnp.float32)
+    q, s = quantize_symmetric(x)               # per-tensor scale
+    qn = np.asarray(q)
+    assert qn.min() == -127 and qn.max() == 127
+    assert (qn >= -127).all() and (qn <= 127).all()
+    # per-channel: each column saturates its own range exactly
+    q2, s2 = quantize_symmetric(x, axis=0)
+    assert set(np.abs(np.asarray(q2)).flat) == {127}
+    np.testing.assert_allclose(np.asarray(dequantize(q2, s2)),
+                               np.asarray(x), rtol=1e-6)
+
+
+def test_int8_sqnr_floor_sweep_quantized_op_set():
+    """Every OpDef declaring a quantized impl meets its own declared
+    Budget when executed through apply_node(precision="int8") — the
+    same dispatch path plans use — on the op's canonical make_args."""
+    from repro.core.opdefs import OPDEFS
+    from repro.graph.graph import Node
+    from repro.graph.plan import apply_node
+
+    quantized = {name: d for name, d in OPDEFS.items()
+                 if d.qimpl is not None}
+    assert set(quantized) == {"matmul", "dft", "idft", "fir",
+                              "pfb_frontend", "pfb"}
+    for name, d in quantized.items():
+        budget = d.budget("int8")
+        assert budget is not None, name
+        rng = np.random.default_rng(3)
+        args = [jnp.asarray(a) for a in d.make_args(rng, 16)]
+        node = Node("probe", name, tuple(f"i{k}" for k in range(len(args))))
+        ref = np.asarray(apply_node(node, args, "native"))
+        out = np.asarray(apply_node(node, args, "native", precision="int8"))
+        ok, achieved = budget.check(ref, out)
+        assert ok, (name, budget.sqnr_db, achieved)
+
+
 def test_qpfb_preserves_channelization():
     """int8 PFB must still channelize: a pure tone lands in the right
     channel and leakage suppression survives quantization."""
