@@ -26,6 +26,10 @@ Mechanics:
     fails when fresh (normalized) throughput drops more than
     ``--threshold`` (default 25%) below baseline:
     ``t_fresh > t_base / (1 - threshold)``.
+  * ``--higher-is-better`` flips the gate into a quality FLOOR for
+    metrics where bigger is better (``int8_sqnr_db``): a pair fails
+    when ``fresh < base * (1 - threshold)``.  Quality metrics are
+    machine-independent, so pair it with ``--relative-to ''``.
   * Both flags accept a comma-separated LIST, zipped positionally
     (``--relative-to`` may also be a single value, broadcast to every
     metric; empty entries mean absolute).  One invocation then gates
@@ -69,12 +73,15 @@ def last_run(path: str) -> dict:
 
 
 def index_results(run: dict, metric: str,
-                  relative_to: str | None = None) -> dict[tuple, float]:
+                  relative_to: str | None = None,
+                  floor_mode: bool = False) -> dict[tuple, float]:
     out = {}
     for rec in run.get("results", []):
         t = rec.get(metric)
-        if not t or t <= 0:
+        if t is None or not isinstance(t, (int, float)):
             continue
+        if not floor_mode and t <= 0:
+            continue              # a time of 0 is unusable, skip
         if relative_to:
             ref = rec.get(relative_to)
             if not ref or ref <= 0:
@@ -158,6 +165,14 @@ def main(argv=None) -> int:
     ap.add_argument("--commit-msg", default=None,
                     help="commit message to scan for the waiver line "
                          "(default: $BENCH_COMMIT_MSG, then git log -1)")
+    ap.add_argument("--higher-is-better", action="store_true",
+                    help="gate the metric as a FLOOR instead of a "
+                         "latency ceiling: fail when the fresh value "
+                         "drops more than --threshold below baseline "
+                         "(for quality metrics like int8_sqnr_db; "
+                         "values <= 0 are gated, not skipped). Applies "
+                         "to every metric in this invocation — run the "
+                         "gate twice to mix directions")
     args = ap.parse_args(argv)
 
     base_run = last_run(args.baseline)
@@ -170,10 +185,11 @@ def main(argv=None) -> int:
 
     failures, any_overlap = [], False
     for metric, rel in pairs:
-        base = index_results(base_run, metric, rel)
-        fresh = index_results(fresh_run, metric, rel)
+        base = index_results(base_run, metric, rel, args.higher_is_better)
+        fresh = index_results(fresh_run, metric, rel, args.higher_is_better)
         unit = f"x {rel}" if rel else "absolute"
-        print(f"[bench-gate] metric {metric} ({unit})")
+        kind = "floor" if args.higher_is_better else "ceiling"
+        print(f"[bench-gate] metric {metric} ({unit}, {kind})")
         for key in sorted(set(base) - set(fresh)):
             print(f"[bench-gate] note: {key} only in baseline (skipped)")
         for key in sorted(set(fresh) - set(base)):
@@ -181,14 +197,22 @@ def main(argv=None) -> int:
         any_overlap = any_overlap or bool(set(base) & set(fresh))
         for key in sorted(set(base) & set(fresh)):
             t_base, t_fresh = base[key], fresh[key]
-            ratio = t_base / t_fresh      # fresh throughput / baseline
+            if args.higher_is_better:
+                # quality floor: fresh value itself is the goodness
+                ratio = t_fresh / t_base
+                bad = t_fresh < t_base * (1.0 - args.threshold)
+                label = "of baseline"
+            else:
+                ratio = t_base / t_fresh  # fresh throughput / baseline
+                bad = t_fresh > t_base / (1.0 - args.threshold)
+                label = "throughput"
             status = "OK"
-            if t_fresh > t_base / (1.0 - args.threshold):
+            if bad:
                 status = "REGRESSION"
                 failures.append((*key, metric))
             print(f"[bench-gate] {key[0]} n={key[1]} {metric}: "
                   f"{t_base:.4g} -> {t_fresh:.4g} "
-                  f"({ratio:.2f}x throughput)  {status}")
+                  f"({ratio:.2f}x {label})  {status}")
 
     if not any_overlap:
         print("[bench-gate] WARNING: no overlapping (pipeline, n) pairs — "

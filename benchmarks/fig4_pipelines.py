@@ -194,6 +194,17 @@ def run(sizes=(2 ** 13, 2 ** 15), repeats=10, autotune_col=False,
                     int8_sqnr_db=round(q, 2),
                     int8_precisions=p_int8.precisions,
                     int8_downgrades=p_int8.downgrades)
+                # true integer kernels vs the dequantize-then-f32-dot
+                # reference engine: what int8 *compute* buys over int8
+                # *storage*.  The engine joins the plan-cache key, and
+                # tracing is lazy — compile AND warm/time inside the
+                # override so the ref path is what gets jitted.
+                from repro.core import quantize
+                with quantize.engine_override("ref"):
+                    p_ref = graph_compile(g, shapes, precision="int8")
+                    (t_ref,) = timeit_group([p_ref], x, repeats=repeats)
+                rec.update(t_plan_int8_dequant_s=t_ref,
+                           speedup_int8_true_vs_dequant=t_ref / t_int8)
             else:
                 # no node quantizes (e.g. an overlap_add-only tail):
                 # keep the table rectangular

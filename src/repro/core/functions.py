@@ -253,7 +253,10 @@ def overlap_add(frames: Array, hop: int, *, lowering: str = "native",
     identity kernel scatters each frame at its hop offset
     (:func:`repro.core.blocks.transposed_conv`), sliced to the valid
     region.  ``native`` sums the K diagonal sub-block contributions
-    directly (pure data movement + adds).
+    directly (pure data movement + adds).  ``pallas`` is the blocked
+    kernel form of the same diagonal sum (:mod:`repro.kernels.unfold`),
+    bit-identical to ``native`` — adds happen in the same ascending-m
+    order.
     """
     t, j = frames.shape[-2], frames.shape[-1]
     h = int(hop)
@@ -265,6 +268,14 @@ def overlap_add(frames: Array, hop: int, *, lowering: str = "native",
                          f"at hop {h}, got {t}")
     nt = t - k + 1
     batch = frames.shape[:-2]
+    if lowering == "pallas":
+        if jnp.issubdtype(frames.dtype, jnp.complexfloating):
+            # Pallas TPU has no complex dtypes: scatter real and imag
+            # halves separately (pure adds — exact recombination).
+            re = _kernels_ops().overlap_add(jnp.real(frames), h, **(block or {}))
+            im = _kernels_ops().overlap_add(jnp.imag(frames), h, **(block or {}))
+            return (re + 1j * im).astype(frames.dtype)
+        return _kernels_ops().overlap_add(frames, h, **(block or {}))
     if lowering == "conv":
         xi = frames.reshape((-1, t, j))
         eye = jnp.eye(j, dtype=frames.dtype)[:, :, None]   # (K=J, I=J, O=1)

@@ -30,7 +30,10 @@ and a second hand-maintained ``OpSpec`` catalog in ``graph.plan``.  An
     declares the per-precision accuracy :class:`Budget` (SQNR floor /
     abs tolerance, golden-model style) the tier must meet against the
     f32 reference; ``qimpl`` is the int8 implementation
-    (``(args, attrs, qpack)``, built on :mod:`repro.core.quantize`) and
+    (``(args, attrs, qpack, lowering, block)``, built on
+    :mod:`repro.core.quantize` — true int8×int8→int32 dot_generals, with
+    ``lowering="pallas"`` routing to the int8 Pallas kernels in
+    :mod:`repro.kernels` per ``q_lowerings``/``qtune_space``) and
     ``qprep`` quantizes const weights ONCE at plan build
     (``(attrs, {argpos: const}) -> qpack``), so scales ride the Plan
     while activations quantize per dispatch.
@@ -190,8 +193,8 @@ class OpDef:
     # — slicing, jnp.real, scalar mult), so requesting conv/pallas is
     # satisfied by the native code path and is NOT a downgrade worth
     # warning about.  Leave False for native-only ops that are missing
-    # a real kernel (e.g. overlap_add's pallas path): those fallbacks
-    # should stay visible.
+    # a real kernel: those fallbacks should stay visible (every Table-1
+    # op now has a real pallas path — overlap_add was the last holdout).
     attrs: tuple[Attr, ...] = ()               # attr schema
     section: str = ""                          # paper section
     building_block: str = ""                   # paper Table 1 column
@@ -213,14 +216,24 @@ class OpDef:
     budgets: tuple[tuple[str, Budget], ...] = ()
     # per-precision accuracy budgets ((precision, Budget) pairs; bf16
     # falls back to the module default when undeclared)
-    qimpl: Callable | None = None              # (args, attrs, qpack) -> Array
-    # int8 implementation (jnp-native int8xint8->int32 simulation from
-    # repro.core.quantize); ``qpack`` is the plan-built weight pack from
-    # qprep, or None (quantize weights per call — the tuner-probe path)
+    qimpl: Callable | None = None
+    # (args, attrs, qpack, lowering, block) -> Array: int8 implementation
+    # (true int8×int8→int32 dot_generals from repro.core.quantize;
+    # lowering="pallas" dispatches the int8 Pallas kernel with the tuned
+    # ``block``); ``qpack`` is the plan-built weight pack from qprep, or
+    # None (quantize weights per call — the tuner-probe path)
     qprep: Callable | None = None              # (attrs, {argpos: const})
     # -> qpack|None: quantize const weights once at plan build
     qok: Callable[[dict], bool] | None = None  # attrs -> bool: attr-level
     # int8 support guard (e.g. fir only quantizes mode="valid")
+    q_lowerings: tuple[str, ...] = ("native",)
+    # lowerings the qimpl understands; the planner/tuner restrict the
+    # int8 (lowering × block) search to these and silently pin any other
+    # request to "native" (the jnp integer path — bit-identical anyway)
+    qtune_space: str | None = None
+    # kernels.tune space of the op's INT8 Pallas kernel (int8 tiles pack
+    # 4× denser than f32, so the quantized winners differ); shares
+    # tune_ctx with the f32 space
 
     def bind(self, attrs: dict) -> dict:
         """Merge ``attrs`` over the schema defaults and validate."""
@@ -386,18 +399,27 @@ def _impl_overlap_add(args, at, lowering, block=None):
         raise ValueError(
             f"overlap_add: frames have length {frames.shape[-1]} but the "
             f"window attr says {at['window']}")
-    return functions.overlap_add(frames, at["hop"], lowering=lowering)
+    return functions.overlap_add(frames, at["hop"], lowering=lowering,
+                                 block=block)
 
 
 # ---------------------------------------------------------------------------
-# quantized (int8) implementations — built on repro.core.quantize.  A
-# qimpl receives ``qpack``: the weight pack quantized ONCE at plan build
-# by the op's qprep (None when the weight is not a graph const, in which
-# case the quantize.* function packs it per call).
+# quantized (int8) implementations — built on repro.core.quantize: TRUE
+# integer compute (int8×int8 contractions accumulating in int32, one f32
+# rescale at the epilogue).  A qimpl receives ``qpack``: the weight pack
+# quantized ONCE at plan build by the op's qprep (None when the weight
+# is not a graph const, in which case the quantize.* function packs it
+# per call), plus the resolved ``lowering``/``block``:
+# lowering="pallas" dispatches the int8 Pallas kernel variant, anything
+# else runs the jnp dot_general path — both bit-identical (same
+# quantization decisions, exact int32 accumulation, byte-identical f32
+# epilogue), so the tuner's choice is purely about speed.
 # ---------------------------------------------------------------------------
-def _qimpl_matmul(args, at, qpack):
+def _qimpl_matmul(args, at, qpack, lowering="native", block=None):
     x, w = args[0], args[1]
     wq, ws = qpack if qpack is not None else quantize.quantize_weights(w)
+    if lowering == "pallas":
+        return _kops().qmatmul(x, wq, ws.reshape(-1), **(block or {}))
     return quantize.qmatmul(x, wq, ws.reshape(-1))
 
 
@@ -409,18 +431,26 @@ def _qprep_matmul(at, consts):
     return wq, ws.reshape(-1)
 
 
-def _qimpl_dft(args, at, qpack):
+def _qimpl_dft(args, at, qpack, lowering="native", block=None):
+    if lowering == "pallas":
+        return _kops().qdft(args[0], **(block or {}))
     return quantize.qdft(args[0])
 
 
-def _qimpl_idft(args, at, qpack):
+def _qimpl_idft(args, at, qpack, lowering="native", block=None):
+    if lowering == "pallas":
+        return _kops().qdft(args[0], inverse=True, **(block or {}))
     return quantize.qidft(args[0])
 
 
-def _qimpl_fir(args, at, qpack):
+def _qimpl_fir(args, at, qpack, lowering="native", block=None):
     if at["mode"] != "valid":            # guarded by qok; belt and braces
         return functions.fir(args[0], args[1], mode=at["mode"],
                              flip=at["flip"])
+    if lowering == "pallas":
+        qtaps = (qpack if qpack is not None
+                 else quantize.quantize_fir_taps(args[1], flip=at["flip"]))
+        return _kops().qfir(args[0], *qtaps, **(block or {}))
     return quantize.qfir(args[0], args[1], flip=at["flip"], qtaps=qpack)
 
 
@@ -431,12 +461,20 @@ def _qprep_fir(at, consts):
     return quantize.quantize_fir_taps(taps, flip=at["flip"])
 
 
-def _qimpl_pfb_frontend(args, at, qpack):
+def _qimpl_pfb_frontend(args, at, qpack, lowering="native", block=None):
+    # native-only (q_lowerings default): the f32 pallas frontend rides
+    # pfb_fused with an identity DFT, which has no integer analogue —
+    # the identity matrix would be quantized too.  The jnp int8 einsum
+    # is already a true integer contraction.
     return quantize.qpfb_frontend(args[0], args[1] if len(args) > 1 else None,
                                   qtaps=qpack)
 
 
-def _qimpl_pfb(args, at, qpack):
+def _qimpl_pfb(args, at, qpack, lowering="native", block=None):
+    if lowering == "pallas":
+        qtaps = (qpack if qpack is not None
+                 else quantize.quantize_pfb_taps(args[1]))
+        return _kops().qpfb(args[0], *qtaps, **(block or {}))
     return quantize.qpfb(args[0], args[1] if len(args) > 1 else None,
                          qtaps=qpack)
 
@@ -474,6 +512,13 @@ def _ctx_dft(at, av):
 def _ctx_pfb(at, av):
     m, p = int(av[1].shape[0]), int(av[1].shape[1])
     return {"m": m, "p": p, "t": int(av[0].shape[-1]) // p}
+
+
+def _ctx_overlap_add(at, av):
+    j = int(av[0].shape[-1])
+    hop = int(at["hop"])
+    return {"j": j, "hop": hop, "k": j // hop,
+            "t": int(av[0].shape[-2]), "rows": _rows(av[0].shape[:-1])}
 
 
 def _ctx_ew_binary(at, av):
@@ -550,7 +595,8 @@ register(OpDef(
     tune_space="matmul", tune_ctx=_ctx_matmul, stream=_FRAME,
     precisions=("f32", "bf16", "int8"),
     budgets=(("int8", Budget(sqnr_db=28.0)),),
-    qimpl=_qimpl_matmul, qprep=_qprep_matmul))
+    qimpl=_qimpl_matmul, qprep=_qprep_matmul,
+    q_lowerings=("native", "pallas"), qtune_space="matmul_int8"))
 
 register(OpDef(
     "summation",
@@ -575,7 +621,8 @@ register(OpDef(
     table_name="dft", tune_space="dft", tune_ctx=_ctx_dft, stream=_FRAME,
     precisions=("f32", "bf16", "int8"),
     budgets=(("int8", Budget(sqnr_db=26.0)),),
-    qimpl=_qimpl_dft))
+    qimpl=_qimpl_dft,
+    q_lowerings=("native", "pallas"), qtune_space="dft_int8"))
 
 register(OpDef(
     "idft",
@@ -591,7 +638,8 @@ register(OpDef(
     table_name="idft", tune_space="dft", tune_ctx=_ctx_dft, stream=_FRAME,
     precisions=("f32", "bf16", "int8"),
     budgets=(("int8", Budget(sqnr_db=26.0)),),
-    qimpl=_qimpl_idft))
+    qimpl=_qimpl_idft,
+    q_lowerings=("native", "pallas"), qtune_space="dft_int8"))
 
 register(OpDef(
     "fir",
@@ -609,7 +657,8 @@ register(OpDef(
     precisions=("f32", "bf16", "int8"),
     budgets=(("int8", Budget(sqnr_db=30.0)),),
     qimpl=_qimpl_fir, qprep=_qprep_fir,
-    qok=lambda at: at["mode"] == "valid"))
+    qok=lambda at: at["mode"] == "valid",
+    q_lowerings=("native", "pallas"), qtune_space="fir_int8"))
 
 register(OpDef(
     "unfold",
@@ -630,13 +679,14 @@ register(OpDef(
     precisions=("f32", "bf16", "int8")))
 
 register(OpDef(
-    "overlap_add", _impl_overlap_add, ("native", "conv"),
+    "overlap_add", _impl_overlap_add, ("native", "conv", "pallas"),
     attrs=(Attr("hop"), Attr("window", 0)),
     section="4.4 (inverse)", building_block="transposed conv",
     eager=functions.overlap_add, oracle=_np_overlap_add,
     make_args=lambda rng, n: (
         rng.standard_normal((max(2, n // 8), 64), dtype=np.float32), 32),
     table_name="overlap_add", arg_attrs=("hop",),
+    tune_space="overlap_add", tune_ctx=_ctx_overlap_add,
     stream=StreamRule("framed", _stream_overlap_add)))
 
 register(OpDef(
@@ -674,7 +724,8 @@ register(OpDef(
                       needs_taps=True),
     precisions=("f32", "bf16", "int8"),
     budgets=(("int8", Budget(sqnr_db=26.0)),),
-    qimpl=_qimpl_pfb, qprep=_qprep_pfb))
+    qimpl=_qimpl_pfb, qprep=_qprep_pfb,
+    q_lowerings=("native", "pallas"), qtune_space="pfb_int8"))
 
 # ---------------------------------------------------------------------------
 # glue primitives (graph-only: no Table-1 row)

@@ -11,19 +11,29 @@ conv/dense weights that carry the DFM, FIR taps, PFB prototype):
 
 On TPU the int8 x int8 -> int32 matmul runs on the MXU at 2x bf16
 throughput (v5e: 394 TOPS int8), which is exactly the "NN-accelerator
-feature for free" the paper argues for.  Here the arithmetic is
-simulated in jnp (int32 accumulation semantics preserved) and validated
-by SQNR bounds in tests/test_quantize.py.
+feature for free" the paper argues for.  Every contraction here is TRUE
+integer compute: ``jnp.int8 × jnp.int8`` ``lax.dot_general`` with
+``preferred_element_type=jnp.int32`` — the operands reach the dot as
+int8, not dequantized floats — and the single f32 rescale by
+``(x_scale · w_scale)`` happens once at the epilogue.
 
-This module is the numeric substrate of the graph layer's ``precision``
-dimension (``graph.compile(..., precision="int8")``): each matmul-shaped
-OpDef in :mod:`repro.core.opdefs` declares a quantized impl built from
-these functions, with const weights quantized **once at plan build**
-through the ``quantize_*_taps`` helpers (the resulting ``(q, scale)``
-packs ride on the Plan) while activations quantize per dispatch.
+Engines: :func:`int8_dot` / :func:`int8_einsum` consult a module-level
+engine switch.  ``"int"`` (default) emits the int8 dot_general the MXU
+executes natively; ``"ref"`` is the dequantized reference substrate —
+the same quantization decisions, contraction computed as an
+int32-upcast jnp matmul/einsum (the dequantize-then-dot formulation
+with the scales factored out of the contraction, preserving exact int32
+accumulation semantics).  Both are exact integer arithmetic with a
+byte-identical f32 epilogue, so the engines are bit-identical — "ref"
+exists as the oracle the integer path is tested against and as the
+baseline ``fig4_pipelines`` times the true-int8 speedup over.  Switch
+with :func:`engine_override` (the graph planner keys its plan cache on
+the active engine, so plans compiled under an override don't collide).
 
-Streaming note: activation quantization always uses per-row (``axis=-1``)
-scales, so a frame's quantized values depend only on that frame — a
+Streaming note: activation quantization always uses per-row/per-window
+scales over axes a streamed chunk carries whole (``axis=-1`` rows;
+per-window scales for FIR; per-(frame, branch) scales for the PFB
+frontend), so a frame's quantized values depend only on that frame — a
 chunked/streamed int8 run therefore produces bit-identical output to the
 offline whole-signal run (int32 accumulation is exact regardless of
 batching), preserving the streamed == offline contract at every
@@ -31,6 +41,7 @@ precision.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
@@ -38,6 +49,57 @@ import jax.numpy as jnp
 import numpy as np
 
 Array = jax.Array
+
+_ENGINES = ("int", "ref")
+_ENGINE = "int"
+
+
+def engine() -> str:
+    """The active integer-compute engine: ``"int"`` (int8 dot_general)
+    or ``"ref"`` (int32-upcast jnp reference substrate)."""
+    return _ENGINE
+
+
+@contextlib.contextmanager
+def engine_override(name: str):
+    """Temporarily switch the contraction engine (trace-time switch:
+    functions traced inside the context bake the engine in).  The graph
+    planner includes :func:`engine` in its plan-cache key, so compiling
+    the same graph under an override yields a distinct plan."""
+    global _ENGINE
+    if name not in _ENGINES:
+        raise ValueError(f"unknown quantize engine {name!r}; "
+                         f"expected one of {_ENGINES}")
+    prev, _ENGINE = _ENGINE, name
+    try:
+        yield
+    finally:
+        _ENGINE = prev
+
+
+def int8_dot(xq: Array, wq: Array) -> Array:
+    """int8 × int8 → int32 contraction of ``xq``'s last axis with
+    ``wq``'s first (matmul shape rules; leading ``xq`` axes are free).
+
+    Engine "int" is the MXU-native form — the int8 operands feed
+    ``lax.dot_general(..., preferred_element_type=jnp.int32)`` directly.
+    Engine "ref" upcasts to int32 first and contracts with jnp.matmul:
+    the dequantized-reference substrate with scales factored out.  Both
+    accumulate exactly in int32, so they are bit-identical.
+    """
+    if _ENGINE == "ref":
+        return jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32))
+    return jax.lax.dot_general(
+        xq, wq, (((xq.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def int8_einsum(spec: str, xq: Array, wq: Array) -> Array:
+    """int8 × int8 → int32 einsum (same engine switch as
+    :func:`int8_dot`)."""
+    if _ENGINE == "ref":
+        return jnp.einsum(spec, xq.astype(jnp.int32), wq.astype(jnp.int32))
+    return jnp.einsum(spec, xq, wq, preferred_element_type=jnp.int32)
 
 
 def quantize_symmetric(x: Array, *, axis=None, bits: int = 8):
@@ -48,7 +110,13 @@ def quantize_symmetric(x: Array, *, axis=None, bits: int = 8):
         amax = jnp.max(jnp.abs(x))
     else:
         amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
-    scale = jnp.maximum(amax, 1e-12) / qmax
+    # Explicit reciprocal multiply, NOT `/ qmax`: the int8 Pallas kernels
+    # recompute per-window scales in VMEM with this exact formula, and a
+    # constant divisor gets strength-reduced to a reciprocal multiply
+    # inside kernels but not in plain XLA — a one-ulp divergence that
+    # would break kernel-vs-jnp bit-identity.  One IEEE mul is the same
+    # everywhere.
+    scale = jnp.maximum(amax, 1e-12) * (1.0 / qmax)
     q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
     return q, scale.astype(jnp.float32)
 
@@ -62,11 +130,12 @@ def qmatmul(x: Array, wq: Array, w_scale: Array, *,
     """TINA matmul (pointwise-conv mapping) with an int8 kernel.
 
     ``quantize_activations=True`` is the full-int8 path (int8 x int8 ->
-    int32 accumulate, the MXU-native form); False keeps activations in
-    float (weight-only quantization, the LLM-serving default)."""
+    int32 accumulate through :func:`int8_dot`, the MXU-native form);
+    False keeps activations in float (weight-only quantization, the
+    LLM-serving default — NOT used by the int8 tier)."""
     if quantize_activations:
         xq, x_scale = quantize_symmetric(x, axis=-1)
-        acc = jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32))
+        acc = int8_dot(xq, wq)
         return acc.astype(jnp.float32) * x_scale * w_scale.reshape(
             (1,) * (acc.ndim - 1) + (-1,))
     return jnp.matmul(x.astype(jnp.float32),
@@ -149,6 +218,13 @@ def qdft(x: Array, *, inverse: bool = False,
     if jnp.issubdtype(x2.dtype, jnp.complexfloating):
         zr = jnp.real(x2).astype(jnp.float32)
         zi = jnp.imag(x2).astype(jnp.float32)
+        # NOTE: under jit XLA may FMA-contract each term's f32 rescale
+        # into this cross-term combine (the unrounded product shifts
+        # the result one ulp).  Both jnp engines contract identically,
+        # so int == ref stays bitwise; the Pallas 4-matmul route
+        # materializes each term first and may differ by that one ulp
+        # on backends with FMA contraction (asserted in
+        # tests/test_precision.py).
         out = ((mm(zr, qr, sr) - mm(zi, qi, si))
                + 1j * (mm(zr, qi, si) + mm(zi, qr, sr)))
     else:
@@ -162,14 +238,17 @@ def qidft(x: Array, *, quantize_activations: bool = True) -> Array:
 
 
 def qfir(x: Array, taps: Array | None = None, *, flip: bool = True,
-         quantize_activations: bool = False,
+         quantize_activations: bool = True,
          qtaps: tuple[Array, Array] | None = None) -> Array:
     """FIR with int8 taps via the unfold + matmul form of the standard
-    conv (weight-only by default: FIR inputs are streaming samples).
+    conv.  Activations quantize per WINDOW (each unfold row gets its own
+    scale): window t depends only on samples [t, t+k), so streamed
+    chunks quantize exactly as offline, and the contraction stays int8.
 
     ``qtaps`` accepts a pre-built :func:`quantize_fir_taps` pack (the
     plan-build path — weights quantized once); otherwise the taps are
-    quantized here.
+    quantized here.  ``quantize_activations=False`` keeps the
+    weight-only float path.
     """
     if qtaps is None:
         qtaps = quantize_fir_taps(taps, flip=flip)
@@ -186,7 +265,10 @@ def qfir(x: Array, taps: Array | None = None, *, flip: bool = True,
 def qpfb_frontend(x: Array, taps: Array | None = None, *,
                   qtaps: tuple[Array, Array] | None = None) -> Array:
     """PFB frontend (polyphase FIR bank) with int8 prototype taps
-    (per-branch scales), dequantized into the branch einsum."""
+    (per-branch scales) and int8 activations: each (frame t, branch p)
+    window quantizes over its M-tap extent (``axis=-2``), so the branch
+    contraction is a true int8 × int8 → int32 einsum and the per-window
+    scales depend only on frames [t, t+M) — streaming-safe."""
     if qtaps is None:
         qtaps = quantize_pfb_taps(taps)
     tq, ts = qtaps
@@ -195,18 +277,23 @@ def qpfb_frontend(x: Array, taps: Array | None = None, *,
     nfr = frames.shape[-2]
     idx = jnp.arange(nfr - m + 1)[:, None] + jnp.arange(m)[None, :]
     windows = frames[..., idx, :]                     # (..., t, m, p)
-    return jnp.einsum("...tmp,mp->...tp", windows, dequantize(tq, ts))
+    wq, w_scale = quantize_symmetric(windows, axis=-2)
+    acc = int8_einsum("...tmp,mp->...tp", wq, tq)     # int32, exact
+    return acc.astype(jnp.float32) * w_scale[..., 0, :] * ts
 
 
 def qpfb(x: Array, taps: Array | None = None, *,
          qtaps: tuple[Array, Array] | None = None) -> Array:
     """Full PFB with int8 prototype taps + int8 DFM (paper §5.2 use case
     under the §1 quantization claim — the 'TINA 16 bit' column of the
-    paper's Fig. 3, pushed to int8 weights)."""
+    paper's Fig. 3, pushed to int8 weights), integer end to end: the
+    frontend runs the int8 einsum and the DFT stage re-quantizes the
+    subfiltered frames per row for the int8 DFM matmul."""
     y = qpfb_frontend(x, taps, qtaps=qtaps)
-    return qdft(y, quantize_activations=False)
+    return qdft(y, quantize_activations=True)
 
 
 __all__ = ["quantize_symmetric", "dequantize", "qmatmul", "qdft", "qidft",
            "qfir", "qpfb_frontend", "qpfb", "quantize_weights",
-           "quantize_fir_taps", "quantize_pfb_taps"]
+           "quantize_fir_taps", "quantize_pfb_taps", "int8_dot",
+           "int8_einsum", "engine", "engine_override"]

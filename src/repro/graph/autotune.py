@@ -196,14 +196,21 @@ def tune_ctx(node, in_avals: Sequence[jax.ShapeDtypeStruct]) -> dict | None:
     return d.tune_ctx(d.bind(node.attr), list(in_avals))
 
 
-def space_for(op: str):
-    """The TuneSpace tuning a graph op's kernel (None: not tunable)."""
+def space_for(op: str, precision: str = "f32"):
+    """The TuneSpace tuning a graph op's kernel (None: not tunable).
+
+    ``precision="int8"`` answers with the op's *integer* kernel space
+    (``qtune_space`` — int8 tiles pack 4x denser in VMEM, so the spaces
+    are genuinely different); ops without one are untunable at int8."""
     from repro.core.opdefs import OPDEFS
     d = OPDEFS.get(op)
-    if d is None or d.tune_space is None:
+    if d is None:
+        return None
+    name = d.qtune_space if precision == "int8" else d.tune_space
+    if name is None:
         return None
     from repro.kernels import tune
-    return tune.space(d.tune_space)
+    return tune.space(name)
 
 
 # ---------------------------------------------------------------------------
@@ -280,21 +287,29 @@ def pick(graph, node, avals: dict, *, backend: str = None,
          lowerings: Sequence[str] | None = None,
          candidates: Sequence[str] | None = None,
          tune_configs: bool = True, repeats: int = 3,
-         path: str | None = None) -> tuple[str, dict]:
+         path: str | None = None,
+         precision: str = "f32") -> tuple[str, dict]:
     """Fastest (lowering, block_config) for ``node`` at its inferred
     shapes (cached).
 
     ``lowerings``/``candidates`` restrict the lowering search (e.g.
     ``("pallas",)`` to tune only block configs for a fixed lowering);
     ``tune_configs=False`` reverts to lowering-only v1 behavior.
-    Honors ``$TINA_AUTOTUNE``: off -> fixed defaults, cached -> cache
-    hit or defaults (never measures), on -> measure & persist.
+    ``precision="int8"`` (for ops with a quantized impl) searches the
+    *integer* path instead: candidates come from the OpDef's
+    ``q_lowerings``, pallas configs from its ``qtune_space``, every
+    probe executes the real int8 kernels, and winners persist under a
+    ``|prec=int8``-suffixed key so they never collide with the f32
+    entries.  Honors ``$TINA_AUTOTUNE``: off -> fixed defaults, cached
+    -> cache hit or defaults (never measures), on -> measure & persist.
     """
     from repro.core.opdefs import OPDEFS
     from repro.graph.plan import apply_node
 
     backend = backend or jax.default_backend()
-    supported = OPDEFS[node.op].lowerings
+    d = OPDEFS[node.op]
+    integer = precision == "int8" and d.qimpl is not None
+    supported = d.q_lowerings if integer else d.lowerings
     restrict = lowerings if lowerings is not None else candidates
     cands = [c for c in (restrict or supported) if c in supported]
     if not cands:
@@ -302,7 +317,7 @@ def pick(graph, node, avals: dict, *, backend: str = None,
 
     in_avals = [avals[i] for i in node.inputs]
     ctx = tune_ctx(node, in_avals) if tune_configs else None
-    space = space_for(node.op) if ctx is not None else None
+    space = space_for(node.op, precision) if ctx is not None else None
     # fixed-defaults fallback — must stay inside the caller's candidate
     # set (a restricted search must never answer with an excluded
     # lowering)
@@ -324,6 +339,10 @@ def pick(graph, node, avals: dict, *, backend: str = None,
         # a restricted search answers a different question; don't let it
         # collide with (or clobber) the full-auto winner for this node
         key += f"|only={','.join(cands)}"
+    if integer:
+        # integer winners live in their own cells: different kernels,
+        # different spaces — never collide with the f32 entries
+        key += "|prec=int8"
     hit = cache.get(key)
     if hit and hit.get("lowering") in cands:
         cfg = dict(hit.get("config") or {})
@@ -354,8 +373,8 @@ def pick(graph, node, avals: dict, *, backend: str = None,
         def _jit(label, lw, cfg):
             if label not in fns:
                 fns[label] = jax.jit(
-                    lambda *a, _lw=lw, _cfg=cfg: apply_node(node, a, _lw,
-                                                            _cfg))
+                    lambda *a, _lw=lw, _cfg=cfg: apply_node(
+                        node, a, _lw, _cfg, precision))
             return fns[label]
 
         default_cfg: dict = {}
@@ -517,7 +536,15 @@ def pick_joint(graph, node, avals: dict, *, backend: str = None,
         accuracy: dict[str, dict] = {}
         for p in prec_cands:
             if p == "int8" and d.qimpl is not None:
-                lw_p, cfg_p = "native", {}   # the qimpl IS the int8 path
+                # the integer path has its own (lowering x block) cell
+                # structure: run the real int8 search — jnp dot_general
+                # vs the int8 Pallas kernels over the op's qtune_space —
+                # and budget-gate + race its winner against f32 below
+                lw_p, cfg_p = pick(
+                    graph, node, avals, backend=backend,
+                    lowerings=lowerings, candidates=candidates,
+                    tune_configs=tune_configs, repeats=repeats,
+                    path=path, precision="int8")
             else:
                 lw_p, cfg_p = lw32, cfg32
             fn = _fn(lw_p, cfg_p, p)

@@ -66,6 +66,7 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro import obs
+from repro.core import quantize
 from repro.core.opdefs import OPDEFS, bf16_round
 from repro.graph.graph import Graph, Node
 
@@ -87,10 +88,13 @@ def apply_node(node: Node, args: Sequence[jax.Array], lowering: str,
 
     ``precision``: ``"int8"`` dispatches to the op's quantized impl
     (``qpack`` is the plan-built weight pack, or None to quantize per
-    call); ``"bf16"`` rounds inputs and output through bfloat16 around
-    the f32 impl (MXU numerics — composes with every lowering).  An op
-    declaring a tier but no qimpl is precision-transparent: the f32
-    impl IS its behavior at that tier.
+    call) — the lowering routes within the op's ``q_lowerings``
+    (``"pallas"`` runs the int8 Pallas kernel, anything unsupported
+    falls back to the jnp integer dot_general); ``"bf16"`` rounds
+    inputs and output through bfloat16 around the f32 impl (MXU
+    numerics — composes with every lowering).  An op declaring a tier
+    but no qimpl is precision-transparent: the f32 impl IS its
+    behavior at that tier.
     """
     d = OPS[node.op]
     at = d.bind(node.attr)
@@ -100,7 +104,9 @@ def apply_node(node: Node, args: Sequence[jax.Array], lowering: str,
             and not d.supports_precision(precision, at):
         precision = "f32"
     if precision == "int8" and d.qimpl is not None:
-        return d.qimpl(list(args), at, qpack)
+        if lowering not in d.q_lowerings:
+            lowering = "native"
+        return d.qimpl(list(args), at, qpack, lowering, block)
     if precision == "bf16":
         args = [bf16_round(a) for a in args]
         return bf16_round(d.impl(list(args), at, lowering, block))
@@ -475,7 +481,11 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
     Nodes that don't support the requested tier run f32 — recorded
     dimension-tagged on ``Plan.downgrades`` (``"precision:int8"``) and
     warned once, like lowering downgrades.  int8 nodes with a quantized
-    impl always run it natively (the lowering dimension collapses).
+    impl route the lowering through the OpDef's ``q_lowerings``:
+    ``pallas`` runs the op's int8 Pallas kernel (tuned over its
+    ``qtune_space``), any other request quietly runs the jnp integer
+    dot_general (not a downgrade — the integer path is the tier's
+    contract either way, bit-identically).
 
     ``block_configs``: Pallas block sizes per node — ``None`` (kernel
     defaults; with ``lowering="auto"`` the autotuner picks them jointly
@@ -561,8 +571,11 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
         path = (autotune_kwargs or {}).get("path") or autotune.cache_path()
         tune_key = (autotune.mode(), path, autotune._mtime(path),
                     repr(sorted((autotune_kwargs or {}).items())))
-    key = (graph.signature, spec_key, backend, low_key, prec_key, cfg_key,
-           fuse, mesh_key, tune_key)
+    # quantize.engine() is part of the key: an engine_override("ref")
+    # compile must not collide with (or poison) the default "int" plans
+    # — Graph.signature carries no engine information.
+    key = (graph.signature, spec_key, backend, low_key, prec_key,
+           quantize.engine(), cfg_key, fuse, mesh_key, tune_key)
     plan = _CACHE.get(key)
     if plan is not None:
         _HITS.add()
@@ -678,9 +691,12 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
 
         def resolve_prec(node: Node, rp: str) -> None:
             """Record the node's effective precision.  int8 with a
-            quantized impl collapses the lowering dimension (qimpls are
-            jnp-native); unsupported tiers fall back to f32 — recorded
-            dimension-tagged + warned, unless the op is
+            quantized impl keeps the resolved lowering when the qimpl
+            supports it (``q_lowerings`` — the int8 Pallas kernels);
+            otherwise the lowering quietly collapses to native (the jnp
+            integer dot_general — not a downgrade: the quantized path
+            IS the int8 contract).  Unsupported tiers fall back to f32
+            — recorded dimension-tagged + warned, unless the op is
             lowering-agnostic (pure data movement runs identically at
             any tier, so the request is satisfied, not downgraded)."""
             d = OPS[node.op]
@@ -688,7 +704,8 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
                 precisions_map[node.name] = "f32"
             elif d.supports_precision(rp, d.bind(node.attr)):
                 precisions_map[node.name] = rp
-                if rp == "int8" and d.qimpl is not None:
+                if rp == "int8" and d.qimpl is not None \
+                        and lowerings.get(node.name) not in d.q_lowerings:
                     lowerings[node.name] = "native"
                     configs.pop(node.name, None)
             else:
@@ -729,10 +746,18 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
                         tune_prec(node)
                     elif (rp == "int8" and d.qimpl is not None
                           and d.supports_precision(rp, d.bind(node.attr))):
-                        # the quantized impl is the only int8 path —
-                        # nothing for the lowering tuner to choose
-                        lowerings[node.name] = "native"
-                        configs[node.name] = {}
+                        # the integer path has its own lowering × block
+                        # search (q_lowerings / qtune_space): time the
+                        # jnp int8 dot_general against the int8 Pallas
+                        # kernel on the node's actual shapes
+                        with obs.span("plan.lower", cat="autotune",
+                                      node=node.name, op=node.op):
+                            lw, cfg = autotune.pick(
+                                g, node, avals, backend=backend,
+                                precision="int8",
+                                **(autotune_kwargs or {}))
+                        lowerings[node.name] = lw
+                        configs[node.name] = cfg
                         precisions_map[node.name] = "int8"
                     else:
                         with obs.span("plan.lower", cat="autotune",
@@ -785,6 +810,7 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
                         _, cfg = autotune.pick(
                             g, node, avals, backend=backend,
                             lowerings=(lowerings[node.name],),
+                            precision=precisions_map.get(node.name, "f32"),
                             **(autotune_kwargs or {}))
                     configs[node.name] = cfg
             elif isinstance(block_configs, dict):

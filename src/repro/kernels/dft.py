@@ -23,7 +23,8 @@ from repro.kernels import tune
 
 # ctx: {"m": rows, "n": out cols, "k": inner}.  Like matmul but every
 # buffer is doubled (real + imag inputs, F matrices, accumulators,
-# outputs), which halves the VMEM-feasible block volume.
+# outputs), which halves the VMEM-feasible block volume.  The int8
+# variant below shares the ctx but prices operand blocks at 1 B/elem.
 TUNE_SPACE = tune.register(tune.TuneSpace(
     kernel="dft",
     params=("bm", "bn", "bk"),
@@ -102,3 +103,90 @@ def dft(xr: jax.Array, xi: jax.Array, fr: jax.Array, fi: jax.Array, *,
                         pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(xr, xi, fr, fi)
+
+
+# int8 variant: one shared int8 signal block feeds BOTH Fourier-matrix
+# dots (real + imag), int32 accumulators, f32 rescale at the epilogue.
+# Operand blocks are 1 byte/element; acc + out stay 4 B — deep-K tiles
+# get cheap exactly as in matmul_int8.
+TUNE_SPACE_INT8 = tune.register(tune.TuneSpace(
+    kernel="dft_int8",
+    params=("bm", "bn", "bk"),
+    candidates=lambda ctx: (
+        {"bm": 128, "bn": 128, "bk": 128},
+        {"bm": 128, "bn": 128, "bk": 256},
+        {"bm": 128, "bn": 128, "bk": 512},
+        {"bm": 256, "bn": 128, "bk": 256},
+        {"bm": 256, "bn": 256, "bk": 256},
+        {"bm": 512, "bn": 256, "bk": 512},
+    ),
+    valid=lambda cfg, ctx: (
+        min(cfg.values()) >= 1
+        and (cfg["bm"] * cfg["bk"] + 2 * cfg["bk"] * cfg["bn"]  # int8 x, Fr, Fi
+             + 16 * cfg["bm"] * cfg["bn"]                       # 2 acc + 2 out
+             + 4 * (cfg["bm"] + 2 * cfg["bn"])                  # scale vectors
+             ) <= tune.VMEM_BUDGET),
+    default=lambda ctx: {"bm": 128, "bn": 128, "bk": 256},
+))
+
+
+def _dft_int8_kernel(x_ref, fr_ref, fi_ref, sx_ref, sr_ref, si_ref,
+                     zr_ref, zi_ref, accr_ref, acci_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        accr_ref[...] = jnp.zeros_like(accr_ref)
+        acci_ref[...] = jnp.zeros_like(acci_ref)
+
+    x = x_ref[...]
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.int32)
+    accr_ref[...] += dot(x, fr_ref[...])
+    acci_ref[...] += dot(x, fi_ref[...])
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _store():
+        # Same left-associated (acc · x_scale) · col_scale epilogue as
+        # quantize.qmatmul — bit-identical rescale.
+        zr_ref[...] = accr_ref[...].astype(jnp.float32) * sx_ref[...] * sr_ref[...]
+        zi_ref[...] = acci_ref[...].astype(jnp.float32) * sx_ref[...] * si_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def dft_int8(xq: jax.Array, fr: jax.Array, fi: jax.Array, sx: jax.Array,
+             sr: jax.Array, si: jax.Array, *, bm: int = 128, bn: int = 128,
+             bk: int = 256, interpret: bool = False):
+    """Real-signal int8 DFT: xq (B, L) int8 rows with per-row scales
+    sx (B, 1); fr/fi (L, N) int8 quantized Fourier matrix with per-col
+    scales sr/si (1, N).  Returns f32 (Zr, Zi) = (Xq·Fr)·sx·sr,
+    (Xq·Fi)·sx·si with exact int32 accumulation.  Complex signals take
+    the 4-matmul route through ``matmul_int8`` instead (ops.qdft)."""
+    b, l = xq.shape
+    l2, n = fr.shape
+    assert l == l2 and fi.shape == fr.shape, (xq.shape, fr.shape, fi.shape)
+    assert xq.dtype == jnp.int8 and fr.dtype == jnp.int8, (xq.dtype, fr.dtype)
+    assert sx.shape == (b, 1) and sr.shape == (1, n) and si.shape == (1, n)
+    assert b % bm == 0 and n % bn == 0 and l % bk == 0, (xq.shape, fr.shape)
+    nk = l // bk
+    grid = (b // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_dft_int8_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),   # xq
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),   # fr
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),   # fi
+            pl.BlockSpec((bm, 1), lambda i, j, s: (i, 0)),    # sx
+            pl.BlockSpec((1, bn), lambda i, j, s: (0, j)),    # sr
+            pl.BlockSpec((1, bn), lambda i, j, s: (0, j)),    # si
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32),
+                        pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(xq, fr, fi, sx, sr, si)

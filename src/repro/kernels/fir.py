@@ -81,3 +81,83 @@ def fir_valid(x: jax.Array, kern: jax.Array, *, bb: int = 8, bn: int = 512,
         interpret=interpret,
     )(xp, xp, kern.reshape(1, k))
     return out[:, :nout]
+
+
+# int8 variant: activations quantize per WINDOW inside the kernel (each
+# output position's K-sample window gets its own scale — exactly
+# quantize.quantize_symmetric(windows, axis=-1), recomputed in VMEM so
+# no unfolded int8 copy ever hits HBM), then an int32 MAC against the
+# int8 taps and one f32 (scale · tap_scale) rescale at the epilogue.
+# Working set: xcat (2·bb·bn f32) + amax/scale/acc (3·bb·bn) + out.
+TUNE_SPACE_INT8 = tune.register(tune.TuneSpace(
+    kernel="fir_int8",
+    params=("bb", "bn"),
+    candidates=lambda ctx: tuple(
+        {"bb": bb, "bn": bn}
+        for bb in (8, 16) for bn in (256, 512, 1024, 2048)),
+    valid=lambda cfg, ctx: (
+        cfg["bb"] >= 1 and cfg["bn"] >= 1
+        and ctx["k"] - 1 <= cfg["bn"]
+        and 4 * (6 * cfg["bb"] * cfg["bn"] + ctx["k"]) <= tune.VMEM_BUDGET),
+    default=lambda ctx: {"bb": 8,
+                         "bn": max(512, tune.pow2_at_least(ctx["k"] - 1))},
+))
+
+
+def _fir_int8_kernel(x_ref, xnext_ref, tq_ref, ts_ref, o_ref, *, ktaps: int):
+    xcat = jnp.concatenate([x_ref[...], xnext_ref[...]], axis=1)  # (bb, 2bn)
+    bb, bn = o_ref.shape
+
+    # Pass 1: per-window amax (window t = samples [t, t+K)) — the exact
+    # f32 max quantize_symmetric(axis=-1) computes on unfolded rows.
+    def amax_body(k, amax):
+        win = jax.lax.dynamic_slice(xcat, (0, k), (bb, bn))
+        return jnp.maximum(amax, jnp.abs(win.astype(jnp.float32)))
+
+    amax = jax.lax.fori_loop(
+        0, ktaps, amax_body, jnp.zeros((bb, bn), jnp.float32))
+    scale = jnp.maximum(amax, 1e-12) * (1.0 / 127.0)
+
+    # Pass 2: int32 MAC of the quantized window against the int8 taps.
+    def mac_body(k, acc):
+        win = jax.lax.dynamic_slice(xcat, (0, k), (bb, bn))
+        q = jnp.clip(jnp.round(win.astype(jnp.float32) / scale),
+                     -127, 127).astype(jnp.int32)
+        return acc + q * tq_ref[0, k].astype(jnp.int32)
+
+    acc = jax.lax.fori_loop(
+        0, ktaps, mac_body, jnp.zeros((bb, bn), jnp.int32))
+    # Same left-associated (acc · x_scale) · tap_scale as quantize.qmatmul.
+    o_ref[...] = acc.astype(jnp.float32) * scale * ts_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bn", "interpret"))
+def fir_valid_int8(x: jax.Array, tq: jax.Array, ts: jax.Array, *,
+                   bb: int = 8, bn: int = 512,
+                   interpret: bool = False) -> jax.Array:
+    """x: (B, N) f32; tq: (1, K) int8 quantized (pre-flipped) taps with
+    scalar scale ts (1, 1).  Returns f32 (B, N − K + 1), bit-identical
+    to quantize.qfir's unfold + int8 matmul on the same pack."""
+    b, n = x.shape
+    k = tq.shape[1]
+    assert tq.dtype == jnp.int8, tq.dtype
+    assert ts.shape == (1, 1), ts.shape
+    assert b % bb == 0 and n % bn == 0, (x.shape, (bb, bn))
+    assert k - 1 <= bn, f"taps {k} exceed halo block {bn}"
+    nout = n - k + 1
+    nblocks = pl.cdiv(nout, bn)
+    xp = jnp.pad(x, ((0, 0), (0, 2 * bn)))  # halo for the last block
+    out = pl.pallas_call(
+        functools.partial(_fir_int8_kernel, ktaps=k),
+        grid=(b // bb, nblocks),
+        in_specs=[
+            pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bb, bn), lambda i, j: (i, j + 1)),
+            pl.BlockSpec((1, k), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, nblocks * bn), jnp.float32),
+        interpret=interpret,
+    )(xp, xp, tq, ts)
+    return out[:, :nout]

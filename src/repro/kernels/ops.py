@@ -57,16 +57,23 @@ def _resolve(space: tune.TuneSpace, ctx: dict, **explicit) -> dict:
         {k: v for k, v in explicit.items() if v is not None}, ctx)
 
 
+def _quantize():
+    # Lazy: keeps the kernels package importable without the core layer.
+    from repro.core import quantize
+    return quantize
+
+
 # ---------------------------------------------------------------------------
 def matmul(x: Array, y: Array, *, bm: int | None = None,
-           bn: int | None = None, bk: int | None = None) -> Array:
+           bn: int | None = None, bk: int | None = None,
+           order: str | None = None) -> Array:
     """x (..., M, L) @ y (L, N) through the MXU-tiled kernel."""
     m, l = x.shape[-2], x.shape[-1]
     n = y.shape[1]
     batch = x.shape[:-2]
     rows = tune.leading_rows(x.shape)          # prod(batch) * m
     cfg = _resolve(mm_kernel.TUNE_SPACE, {"m": rows, "n": n, "k": l},
-                   bm=bm, bn=bn, bk=bk)
+                   bm=bm, bn=bn, bk=bk, order=order)
     x2 = _pad_to(x.reshape((-1, l)), (cfg["bm"], cfg["bk"]))
     y2 = _pad_to(y, (cfg["bk"], cfg["bn"]))
     out = mm_kernel.matmul(x2, y2, interpret=_interpret(), **cfg)
@@ -196,7 +203,7 @@ def unfold(x: Array, window: int, *, bb: int | None = None,
 
 
 def pfb_fir(frames: Array, taps: Array, *, bt: int | None = None,
-            bn: int | None = None) -> Array:
+            bn: int | None = None, order: str | None = None) -> Array:
     """Frontend only: (..., T, P), (M, P) -> (..., T − M + 1, P).
     Runs the fused kernel with the identity 'DFT' (F = I) so the FIR
     path is exercised; cheaper than a separate kernel and still fused."""
@@ -204,7 +211,7 @@ def pfb_fir(frames: Array, taps: Array, *, bt: int | None = None,
     batch = frames.shape[:-2]
     t = frames.shape[-2]
     cfg = _resolve(pfb_kernel.TUNE_SPACE, {"m": m, "p": p, "t": t},
-                   bt=bt, bn=bn)
+                   bt=bt, bn=bn, order=order)
     f3 = frames.reshape((-1, t, p))
     f3 = jnp.pad(f3, ((0, 0), (0, (-t) % cfg["bt"]), (0, 0)))
     eye = jnp.eye(p, dtype=jnp.float32)
@@ -216,7 +223,8 @@ def pfb_fir(frames: Array, taps: Array, *, bt: int | None = None,
 
 
 def pfb(x: Array, taps: Array, *, variant: str = "4mult",
-        bt: int | None = None, bn: int | None = None) -> Array:
+        bt: int | None = None, bn: int | None = None,
+        order: str | None = None) -> Array:
     """Full fused PFB: (..., n_samples), (M, P) -> complex
     (..., n_frames − M + 1, P)."""
     m, p = taps.shape
@@ -226,7 +234,7 @@ def pfb(x: Array, taps: Array, *, variant: str = "4mult",
     frames = x.reshape((-1, x.shape[-1] // p, p))
     t = frames.shape[1]
     cfg = _resolve(pfb_kernel.TUNE_SPACE, {"m": m, "p": p, "t": t},
-                   bt=bt, bn=bn)
+                   bt=bt, bn=bn, order=order)
     frames = jnp.pad(frames, ((0, 0), (0, (-t) % cfg["bt"]), (0, 0)))
     lk = np.outer(np.arange(p), np.arange(p))
     f = np.exp(-2j * np.pi * lk / p)
@@ -240,6 +248,132 @@ def pfb(x: Array, taps: Array, *, variant: str = "4mult",
     return z.reshape(batch + (tout, p))
 
 
+def overlap_add(frames: Array, hop: int, *, bb: int | None = None,
+                bt: int | None = None) -> Array:
+    """frames (..., T, J) with hop | J -> (..., (T − J/hop + 1) · hop)
+    through the blocked transposed-conv kernel (unfold's adjoint)."""
+    t, j = frames.shape[-2], frames.shape[-1]
+    k = j // hop
+    batch = frames.shape[:-2]
+    rows = tune.leading_rows(frames.shape[:-1])   # prod(batch)
+    cfg = _resolve(unfold_kernel.OLA_TUNE_SPACE,
+                   {"j": j, "hop": hop, "k": k, "t": t, "rows": rows},
+                   bb=bb, bt=bt)
+    f3 = _pad_to(frames.reshape((-1, t, j)), (cfg["bb"], cfg["bt"], j))
+    out = unfold_kernel.overlap_add(f3, hop, interpret=_interpret(), **cfg)
+    nt = t - k + 1
+    return out[:rows, :nt].reshape(batch + (nt * hop,))
+
+
+# ---------------------------------------------------------------------------
+# int8 wrappers — the qimpl lowering targets.  Activations quantize here
+# (or inside the kernel, per window) with the SAME quantize_symmetric
+# decisions as repro.core.quantize, and every contraction is int8 × int8
+# → int32, so these are bit-identical to the jnp integer paths.
+def qmatmul(x: Array, wq: Array, w_scale: Array, *, bm: int | None = None,
+            bn: int | None = None, bk: int | None = None,
+            order: str | None = None) -> Array:
+    """x (..., L) f32 against an int8 (L, N) weight with per-col scales;
+    per-row activation quantization (quantize.qmatmul's convention)."""
+    quantize = _quantize()
+    l = x.shape[-1]
+    n = wq.shape[1]
+    rows = tune.leading_rows(x.shape)             # prod of all but last
+    cfg = _resolve(mm_kernel.TUNE_SPACE_INT8, {"m": rows, "n": n, "k": l},
+                   bm=bm, bn=bn, bk=bk, order=order)
+    xq, sx = quantize.quantize_symmetric(x.reshape((-1, l)), axis=-1)
+    out = mm_kernel.matmul_int8(
+        _pad_to(xq, (cfg["bm"], cfg["bk"])),
+        _pad_to(wq, (cfg["bk"], cfg["bn"])),
+        _pad_to(sx, (cfg["bm"], 1)),
+        _pad_to(w_scale.reshape((1, -1)), (1, cfg["bn"])),
+        interpret=_interpret(), **cfg)
+    return out[:rows, :n].reshape(x.shape[:-1] + (n,))
+
+
+def qdft(x: Array, *, inverse: bool = False, bm: int | None = None,
+         bn: int | None = None, bk: int | None = None) -> Array:
+    """(I)DFT with the int8-quantized Fourier matrix: real signals run
+    the shared-x dft_int8 kernel (2 integer matmuls per block step);
+    complex signals expand to the 4-real-matmul form through
+    matmul_int8, quantizing the real/imag rows once each."""
+    quantize = _quantize()
+    n = x.shape[-1]
+    (qr, sr), (qi, si) = quantize._qdfm(n, inverse)
+    rows = tune.leading_rows(x.shape)
+    cfg = _resolve(dft_kernel.TUNE_SPACE_INT8, {"m": rows, "n": n, "k": n},
+                   bm=bm, bn=bn, bk=bk)
+    x2 = x.reshape((-1, n))
+    bm_, bn_, bk_ = cfg["bm"], cfg["bn"], cfg["bk"]
+    qr_p = _pad_to(jnp.asarray(qr), (bk_, bn_))
+    qi_p = _pad_to(jnp.asarray(qi), (bk_, bn_))
+    sr_p = _pad_to(jnp.asarray(sr).reshape((1, -1)), (1, bn_))
+    si_p = _pad_to(jnp.asarray(si).reshape((1, -1)), (1, bn_))
+    if jnp.issubdtype(x2.dtype, jnp.complexfloating):
+        def mm(xq, sx, wq_p, sw_p):
+            o = mm_kernel.matmul_int8(
+                _pad_to(xq, (bm_, bk_)), wq_p, _pad_to(sx, (bm_, 1)), sw_p,
+                bm=bm_, bn=bn_, bk=bk_, interpret=_interpret())
+            return o[:rows, :n]
+
+        zrq, szr = quantize.quantize_symmetric(
+            jnp.real(x2).astype(jnp.float32), axis=-1)
+        ziq, szi = quantize.quantize_symmetric(
+            jnp.imag(x2).astype(jnp.float32), axis=-1)
+        out = ((mm(zrq, szr, qr_p, sr_p) - mm(ziq, szi, qi_p, si_p))
+               + 1j * (mm(zrq, szr, qi_p, si_p) + mm(ziq, szi, qr_p, sr_p)))
+    else:
+        xq, sx = quantize.quantize_symmetric(x2, axis=-1)
+        zr, zi = dft_kernel.dft_int8(
+            _pad_to(xq, (bm_, bk_)), qr_p, qi_p, _pad_to(sx, (bm_, 1)),
+            sr_p, si_p, interpret=_interpret(), **cfg)
+        out = zr[:rows, :n] + 1j * zi[:rows, :n]
+    return out.reshape(x.shape[:-1] + (n,))
+
+
+def qfir(x: Array, tq: Array, ts: Array, *, bb: int | None = None,
+         bn: int | None = None) -> Array:
+    """'valid' FIR against a quantize_fir_taps pack ((K, 1) int8 taps +
+    (1, 1) scale); per-window activation quantization happens inside the
+    kernel."""
+    k = tq.shape[0]
+    batch = x.shape[:-1]
+    n = x.shape[-1]
+    rows = tune.leading_rows(x.shape)
+    cfg = _resolve(fir_kernel.TUNE_SPACE_INT8,
+                   {"k": k, "n": n, "rows": rows}, bb=bb, bn=bn)
+    x2 = _pad_to(x.reshape((-1, n)), (cfg["bb"], cfg["bn"]))
+    out = fir_kernel.fir_valid_int8(
+        x2, tq.reshape((1, k)), ts.reshape((1, 1)),
+        interpret=_interpret(), **cfg)
+    return out[:rows, : n - k + 1].reshape(batch + (n - k + 1,))
+
+
+def qpfb(x: Array, tq: Array, ts: Array, *, bt: int | None = None,
+         bn: int | None = None, order: str | None = None) -> Array:
+    """Full fused int8 PFB against a quantize_pfb_taps pack ((M, P) int8
+    pre-reversed prototype + (1, P) scales): (..., n_samples) -> complex
+    (..., n_frames − M + 1, P)."""
+    quantize = _quantize()
+    m, p = tq.shape
+    if x.shape[-1] % p:
+        raise ValueError(f"n_samples {x.shape[-1]} not divisible by P={p}")
+    batch = x.shape[:-1]
+    frames = x.reshape((-1, x.shape[-1] // p, p)).astype(jnp.float32)
+    t = frames.shape[1]
+    cfg = _resolve(pfb_kernel.TUNE_SPACE_INT8, {"m": m, "p": p, "t": t},
+                   bt=bt, bn=bn, order=order)
+    frames = jnp.pad(frames, ((0, 0), (0, (-t) % cfg["bt"]), (0, 0)))
+    (qr, sr), (qi, si) = quantize._qdfm(p, False)
+    zr, zi = pfb_kernel.pfb_fused_int8(
+        frames, tq, ts.reshape((1, p)), jnp.asarray(qr), jnp.asarray(qi),
+        jnp.asarray(sr).reshape((1, -1)), jnp.asarray(si).reshape((1, -1)),
+        interpret=_interpret(), **cfg)
+    tout = t - m + 1
+    z = zr[:, :tout] + 1j * zi[:, :tout]
+    return z.reshape(batch + (tout, p))
+
+
 __all__ = ["matmul", "elementwise_mult", "elementwise_add",
            "fused_elementwise", "abs2", "dft", "fir", "unfold", "pfb_fir",
-           "pfb"]
+           "pfb", "overlap_add", "qmatmul", "qdft", "qfir", "qpfb"]

@@ -68,7 +68,11 @@ class TuneSpace:
             raise ValueError(
                 f"{self.kernel}: unknown block param(s) {sorted(unknown)}; "
                 f"tunable: {list(self.params)}")
-        full = {**self.default(ctx), **{k: int(v) for k, v in cfg.items()}}
+        # Non-numeric params (e.g. a grid "order") pass through as-is;
+        # numeric ones coerce to int (JSON round-trips floats).
+        full = {**self.default(ctx),
+                **{k: (v if isinstance(v, str) else int(v))
+                   for k, v in cfg.items()}}
         if cfg and not self.valid(full, ctx):
             raise ValueError(
                 f"{self.kernel}: invalid block config {full} for {ctx}")

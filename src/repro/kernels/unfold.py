@@ -69,3 +69,68 @@ def unfold(x: jax.Array, window: int, *, bb: int = 8, bt: int = 512,
         interpret=interpret,
     )(xp, xp)
     return out[:, :nout]
+
+
+# overlap_add — unfold's adjoint (the transposed conv the paper would
+# use).  ctx: {"j": window, "hop", "k": j // hop overlapping frames,
+# "t": frames, "rows": batch rows}.  Halo: an output frame t sums
+# frames [t, t + K), so K − 1 ≤ bt; VMEM: two (bb, bt, J) frame views
+# plus the (bb, bt, hop) accumulator and output.
+OLA_TUNE_SPACE = tune.register(tune.TuneSpace(
+    kernel="overlap_add",
+    params=("bb", "bt"),
+    candidates=lambda ctx: tuple(
+        {"bb": bb, "bt": bt} for bb in (8, 16)
+        for bt in (64, 128, 256, 512, 1024)),
+    valid=lambda cfg, ctx: (
+        cfg["bb"] >= 1 and cfg["bt"] >= 1
+        and ctx["k"] - 1 <= cfg["bt"]
+        and 4 * cfg["bb"] * cfg["bt"]
+        * (2 * ctx["j"] + 2 * ctx["hop"]) <= tune.VMEM_BUDGET),
+    default=lambda ctx: {"bb": 8,
+                         "bt": max(64, tune.pow2_at_least(ctx["k"] - 1))},
+))
+
+
+def _overlap_add_kernel(x_ref, xnext_ref, o_ref, *, k: int, hop: int):
+    bb, bt, _ = x_ref.shape
+    xcat = jnp.concatenate([x_ref[...], xnext_ref[...]], axis=1)  # (bb, 2bt, J)
+
+    # Ascending-m adds onto a zero accumulator reproduce the native
+    # path's  acc = frames[t] tail; acc += ...  f32 summation order.
+    def body(m, acc):
+        seg = jax.lax.dynamic_slice(
+            xcat, (0, m, (k - 1 - m) * hop), (bb, bt, hop))
+        return acc + seg.astype(jnp.float32)
+
+    acc = jax.lax.fori_loop(0, k, body, jnp.zeros((bb, bt, hop), jnp.float32))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("hop", "bb", "bt", "interpret"))
+def overlap_add(frames: jax.Array, hop: int, *, bb: int = 8, bt: int = 128,
+                interpret: bool = False) -> jax.Array:
+    """frames: (B, T, J) with hop | J -> (B, T − K + 1, hop) where
+    K = J / hop: output frame t = Σ_m frames[t + m, (K−1−m)·hop : (K−m)·hop]
+    (the 'valid' overlap-add used by core.functions).  B % bb == 0 and
+    T % bt == 0 required (ops.py pads); K − 1 ≤ bt."""
+    b, t, j = frames.shape
+    assert j % hop == 0, (j, hop)
+    k = j // hop
+    assert b % bb == 0 and t % bt == 0, (frames.shape, (bb, bt))
+    assert k - 1 <= bt, f"overlap frames {k} exceed halo block {bt}"
+    nt = t - k + 1
+    tblocks = pl.cdiv(nt, bt)
+    xp = jnp.pad(frames, ((0, 0), (0, 2 * bt), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_overlap_add_kernel, k=k, hop=hop),
+        grid=(b // bb, tblocks),
+        in_specs=[
+            pl.BlockSpec((bb, bt, j), lambda i, tt: (i, tt, 0)),
+            pl.BlockSpec((bb, bt, j), lambda i, tt: (i, tt + 1, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bt, hop), lambda i, tt: (i, tt, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, tblocks * bt, hop), frames.dtype),
+        interpret=interpret,
+    )(xp, xp)
+    return out[:, :nt]

@@ -545,3 +545,94 @@ def test_append_bench_json_migrates_single_run_format(tmp_path):
     data = json.load(open(path))
     assert len(data["runs"]) == 2
     assert data["runs"][0]["results"][0]["t"] == 2.0
+
+
+# ---------------------------------------------------------------------------
+# int8 tune spaces: separate |prec= cache cells, grid-order candidates
+# ---------------------------------------------------------------------------
+def _one_matmul(n=64):
+    g = graph.Graph("one_qmm")
+    w = RNG.standard_normal((n, n)).astype(np.float32)
+    g.output(g.apply("matmul", g.input("x"), g.const(w, "w")))
+    return g
+
+
+@pytest.mark.parametrize(
+    "cfg", ktune.space("matmul_int8").configs(_MM_CTX),
+    ids=lambda c: f"bm{c['bm']}bn{c['bn']}bk{c['bk']}{c['order']}")
+def test_matmul_int8_all_valid_configs_bit_identical(cfg):
+    """Every int8 matmul tile/order is exact int32 accumulation plus one
+    f32 rescale — so every candidate must be *bitwise* equal to the
+    native integer path, not merely close."""
+    g = _one_matmul()
+    node = next(n for n in g.topo() if n.op == "matmul")
+    x = jnp.asarray(RNG.standard_normal((96, 80)).astype(np.float32))
+    w = jnp.asarray(RNG.standard_normal((80, 48)).astype(np.float32))
+    want = np.asarray(plan_lib.apply_node(node, (x, w), "native", None, "int8"))
+    got = np.asarray(plan_lib.apply_node(node, (x, w), "pallas", cfg, "int8"))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize(
+    "cfg", ktune.space("pfb_int8").configs(_PFB_CTX),
+    ids=lambda c: f"bt{c['bt']}bn{c['bn']}{c['order']}")
+def test_pfb_int8_all_valid_configs_bit_identical(cfg):
+    from repro.core import pfb as pfb_lib
+    taps = pfb_lib.pfb_window(16, 8).astype(np.float32)
+    g = graph.Graph("one_qpfb")
+    g.output(g.apply("pfb", g.input("x"), g.const(taps, "taps")))
+    node = next(n for n in g.topo() if n.op == "pfb")
+    x = jnp.asarray(RNG.standard_normal(16 * 64).astype(np.float32))
+    tj = jnp.asarray(taps)
+    want = np.asarray(plan_lib.apply_node(node, (x, tj), "native", None, "int8"))
+    got = np.asarray(plan_lib.apply_node(node, (x, tj), "pallas", cfg, "int8"))
+    assert np.array_equal(got, want)
+
+
+def test_grid_order_candidates_gated_by_validity():
+    """matmul and pfb spaces enumerate both grid-walk orders, and an
+    order the kernel cannot walk is rejected by the validity predicate
+    (pruned like any other illegal block config)."""
+    for name, ctx, base in (
+            ("matmul", _MM_CTX, {"bm": 128, "bn": 128, "bk": 128}),
+            ("matmul_int8", _MM_CTX, {"bm": 128, "bn": 128, "bk": 128}),
+            ("pfb", _PFB_CTX, {"bt": 64, "bn": 16}),
+            ("pfb_int8", _PFB_CTX, {"bt": 64, "bn": 16})):
+        sp = ktune.space(name)
+        orders = {c["order"] for c in sp.configs(ctx)}
+        assert len(orders) == 2, name
+        with pytest.raises(ValueError, match="invalid block config"):
+            sp.check({**base, "order": "zz"}, ctx)
+
+
+def test_int8_winners_cached_under_distinct_prec_keys(tune_env, monkeypatch):
+    """precision="int8" tuning races the *integer* candidates and writes
+    them to their own `|prec=int8` cache cell — the f32 winners for the
+    same node live under the unsuffixed key — and cached mode replays
+    the int8 cell without measuring."""
+    g = _one_matmul()
+    shapes = {"x": (32, 64)}
+    p32 = graph.compile(g, shapes, lowering="auto",
+                        autotune_kwargs={"repeats": 1})
+    p8 = graph.compile(g, shapes, lowering="auto", precision="int8",
+                       autotune_kwargs={"repeats": 1})
+    entries = json.load(open(tune_env))["entries"]
+    int8_keys = [k for k in entries if k.endswith("|prec=int8")]
+    f32_keys = [k for k in entries if "|prec=" not in k]
+    assert len(int8_keys) == 1 and len(f32_keys) == 1
+    assert int8_keys[0] == f32_keys[0] + "|prec=int8"
+    # the int8 cell raced real integer-kernel candidates, incl. pallas
+    labels = entries[int8_keys[0]]["times_us"]
+    assert any(lbl.startswith("pallas[") for lbl in labels)
+    assert set(p8.node_precisions.values()) == {"int8"}
+    # replay: a fresh process in cached mode re-reads the int8 winner
+    # without any measurement and lands on the same plan
+    monkeypatch.setenv("TINA_AUTOTUNE", "cached")
+    autotune._MEM.clear()
+    plan_lib.clear_cache()
+    before = autotune.stats()["measured"]
+    p8b = graph.compile(g, shapes, lowering="auto", precision="int8",
+                        autotune_kwargs={"repeats": 1})
+    assert autotune.stats()["measured"] == before
+    assert p8b.lowerings == p8.lowerings and p8b.configs == p8.configs
+    assert p32.lowerings is not None    # f32 plan unaffected by int8 cell

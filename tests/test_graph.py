@@ -519,6 +519,46 @@ def test_check_regression_multi_metric(tmp_path, monkeypatch):
              "--relative-to", "a,b,c"])
 
 
+def test_check_regression_higher_is_better_floor(tmp_path, monkeypatch):
+    """--higher-is-better turns the gate into a quality floor (the CI
+    int8_sqnr_db invocation): a drop below threshold fails, a *rise*
+    never does, and values <= 0 are gated instead of skipped."""
+    import json as json_lib
+
+    from benchmarks import check_regression
+
+    def bench(path, q):
+        path.write_text(json_lib.dumps({"figure": "fig4_pipelines", "runs": [
+            {"git_rev": "x", "timestamp": "t", "results": [
+                {"pipeline": "pfb_power", "n": 4096,
+                 "t_pallas_tuned_s": 1e-3, "int8_sqnr_db": q}]}]}))
+
+    base, fresh = tmp_path / "base.json", tmp_path / "fresh.json"
+    bench(base, 30.0)
+    monkeypatch.setenv("BENCH_COMMIT_MSG", "normal commit message")
+    monkeypatch.setattr(check_regression, "_git_msg", lambda *rev: "")
+    args = ["--baseline", str(base), "--fresh", str(fresh),
+            "--threshold", "0.10", "--metric", "int8_sqnr_db",
+            "--relative-to", "", "--higher-is-better"]
+
+    bench(fresh, 28.0)                # -6.7%: inside the 10% budget
+    assert check_regression.main(args) == 0
+    bench(fresh, 45.0)                # better accuracy never fails
+    assert check_regression.main(args) == 0
+    bench(fresh, 24.0)                # -20%: floor fires
+    assert check_regression.main(args) == 1
+    bench(fresh, -3.0)                # catastrophic: gated, not skipped
+    assert check_regression.main(args) == 1
+    monkeypatch.setenv("BENCH_COMMIT_MSG",
+                       "tradeoff\n\nbench-waiver: tile change")
+    assert check_regression.main(args) == 0
+    # without the flag the same drop would PASS (ceiling semantics
+    # reads a smaller value as faster) — the flag is load-bearing
+    monkeypatch.setenv("BENCH_COMMIT_MSG", "normal commit message")
+    bench(fresh, 24.0)
+    assert check_regression.main(args[:-1]) == 0
+
+
 def test_autotune_save_merges_concurrent_entries(tmp_path, monkeypatch):
     """_save must not clobber entries another process persisted — and a
     v1-format file on disk must survive the merge (migrated to v2)."""

@@ -131,3 +131,30 @@ def test_pfb_fused_matches_unfused():
     unfused = pfb_mod.pfb(x, taps, lowering="conv")
     np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
                                rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_int8_accumulator_headroom_at_largest_tile():
+    """Worst-case ±127 inputs at the largest tuned int8 tile must not
+    wrap the int32 accumulator.  Saturated operands give |acc| =
+    K·127·127 (wraparound needs K ≥ 2^31/127² ≈ 133k — far above any
+    tuned depth); the kernel output must equal an int64 numpy
+    accumulation rescaled in f32, bitwise."""
+    from repro.core import quantize
+    from repro.kernels import tune as ktune
+    m, n, k = 512, 512, 2048
+    cfg = max(ktune.space("matmul_int8").configs({"m": m, "n": n, "k": k}),
+              key=lambda c: c["bm"] * c["bn"] * c["bk"])
+    # all-equal rows quantize to exactly +127; random signs keep the
+    # products saturated at ±16129 while exercising both acc directions
+    signs = np.where(RNG.random((m, k)) < 0.5, -1.0, 1.0).astype(np.float32)
+    x = jnp.asarray(7.0 * signs)
+    wq = jnp.asarray(np.where(RNG.random((k, n)) < 0.5, -127, 127)
+                     .astype(np.int8))
+    w_scale = jnp.ones((n,), jnp.float32)
+    xq, sx = quantize.quantize_symmetric(x, axis=-1)
+    assert int(jnp.abs(xq).min()) == 127          # saturated as intended
+    acc = np.asarray(xq, np.int64) @ np.asarray(wq, np.int64)
+    assert np.abs(acc).max() < 2**31              # int32 headroom holds
+    want = acc.astype(np.float32) * np.asarray(sx) * np.asarray(w_scale)
+    got = np.asarray(ops.qmatmul(x, wq, w_scale, **cfg))
+    assert np.array_equal(got, want)

@@ -251,23 +251,38 @@ def test_cascaded_channelizer_mesh_sharded():
 # effective lowerings are recorded, downgrades warned once
 # ---------------------------------------------------------------------------
 def test_plan_records_downgrades_and_warns_once():
+    """overlap_add gained a real Pallas kernel, so a pallas STFT->OLA
+    plan now has NO lowering downgrades at all (it was the last
+    always-downgraded op); the downgrade machinery is exercised on the
+    precision dimension instead — overlap_add declares no int8 tier,
+    so requesting int8 records + warns exactly once."""
     plan_lib._WARNED_DOWNGRADES.clear()
     g = graph.build_stft_overlap_add(window=64, hop=32)
-    with pytest.warns(UserWarning, match="fell back to lowering='native'"):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
         p = graph.compile(g, {"x": (300,)}, lowering="pallas")
-    down_ops = {p.graph.nodes[n].op for n in p.downgrades}
-    # overlap_add is a genuinely missing pallas kernel -> recorded;
-    # real/frame_decimate are lowering-agnostic data movement -> not
-    assert down_ops == {"overlap_add"}
-    # downgrade values are dimension-tagged: which axis fell back
-    assert all(req == "lowering:pallas" for req in p.downgrades.values())
-    assert all(p.node_lowerings[n] == "native" for n in p.downgrades)
+    assert p.downgrades == {}
+    ola = [n.name for n in p.graph.topo() if n.op == "overlap_add"]
+    assert ola and all(p.node_lowerings[n] == "pallas" for n in ola)
     dft_nodes = [n.name for n in p.graph.topo() if n.op == "dft"]
     assert all(p.node_lowerings[n] == "pallas" for n in dft_nodes)
+    # the pallas plan agrees with the native one end to end
+    x = jnp.asarray(RNG.standard_normal(300).astype(np.float32))
+    p_nat = graph.compile(g, {"x": (300,)}, lowering="native")
+    np.testing.assert_allclose(np.asarray(p(x)), np.asarray(p_nat(x)),
+                               rtol=1e-5, atol=1e-5)
+    # precision downgrades: overlap_add has no int8 tier and is not
+    # lowering-agnostic -> recorded dimension-tagged + warned
+    with pytest.warns(UserWarning, match="fell back to precision='f32'"):
+        p8 = graph.compile(g, {"x": (300,)}, precision="int8")
+    down_ops = {p8.graph.nodes[n].op for n in p8.downgrades}
+    assert "overlap_add" in down_ops
+    assert all("precision:int8" in req for req in p8.downgrades.values())
+    assert all(p8.node_precisions[n] == "f32" for n in p8.downgrades)
     # the same downgrade set warns only once, even for a new shape
     with warnings.catch_warnings():
         warnings.simplefilter("error")
-        graph.compile(g, {"x": (364,)}, lowering="pallas")
+        graph.compile(g, {"x": (364,)}, precision="int8")
 
 
 def test_agnostic_data_movement_ops_do_not_warn():

@@ -284,6 +284,148 @@ def test_streamed_equals_offline_at_every_precision(name, prec):
                                rtol=1e-5, atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# true integer kernels: the int8 tier really computes in int8
+# ---------------------------------------------------------------------------
+QUANT_OPS = sorted(n for n, d in OPDEFS.items() if d.qimpl is not None)
+
+
+def _qnode(d):
+    """A single node + jnp args for a quantized OpDef, from make_args."""
+    g = graph.Graph(f"q_{d.name}")
+    refs, attrs = [], {}
+    attr_names = list(d.arg_attrs)
+    args = d.make_args(RNG, 256)
+    for i, a in enumerate(args):
+        if isinstance(a, np.ndarray):
+            refs.append(g.input("x") if not refs else g.const(a, f"c{i}"))
+        else:
+            attrs[attr_names.pop(0)] = a
+    node = g.nodes[g.apply(d.name, *refs, **attrs)]
+    jargs = [jnp.asarray(a) for a in args if isinstance(a, np.ndarray)]
+    return node, jargs
+
+
+def _has_int8_dot(jaxpr) -> bool:
+    """Walk a jaxpr (into pallas_call bodies and other sub-jaxprs) for a
+    dot_general whose operands are int8 and whose result is int32 — the
+    MXU-native integer MAC the tentpole promises."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in ("dot_general", "dot"):
+            if (all(str(v.aval.dtype) == "int8" for v in eqn.invars)
+                    and str(eqn.outvars[0].aval.dtype) == "int32"):
+                return True
+        for v in eqn.params.values():
+            sub = getattr(v, "jaxpr", v)
+            if hasattr(sub, "eqns") and _has_int8_dot(sub):
+                return True
+    return False
+
+
+@pytest.mark.parametrize("name", QUANT_OPS)
+def test_int8_tier_emits_integer_dot_general(name):
+    """At the int8 tier every quantized op's jaxpr contains an
+    int8 x int8 -> int32 dot — the tier computes in integers, it does
+    not dequantize back to f32 first."""
+    d = OPDEFS[name]
+    node, jargs = _qnode(d)
+    for lw in d.q_lowerings:
+        if (name, lw) == ("fir", "pallas"):
+            # the fir kernel quantizes each sliding window in-registers
+            # and MACs int32 scalars over the taps loop — integer
+            # compute, but there is no dot_general to find (its
+            # bit-identity to the integer reference is asserted in
+            # test_integer_paths_bit_identical_to_dequantized_reference)
+            continue
+        jx = jax.make_jaxpr(
+            lambda *a, _lw=lw: plan_lib.apply_node(node, a, _lw, None,
+                                                   "int8"))(*jargs)
+        assert _has_int8_dot(jx.jaxpr), (name, lw)
+    # and the f32 tier does NOT (the quantized path is tier-gated)
+    jx32 = jax.make_jaxpr(
+        lambda *a: plan_lib.apply_node(node, a, "native"))(*jargs)
+    assert not _has_int8_dot(jx32.jaxpr), name
+
+
+@pytest.mark.parametrize("name", QUANT_OPS)
+def test_integer_paths_bit_identical_to_dequantized_reference(name):
+    """The integer engine (jnp int8 dot_general) and every int8 Pallas
+    kernel are BIT-identical to the dequantize-then-f32 reference at
+    the int8 tier: same int32 accumulation, same one-multiply epilogue
+    — so streamed == offline == serving holds unchanged.
+
+    One carve-out: a complex-input (I)DFT recombines its four real
+    matmuls with a cross-term subtract/add, and XLA FMA-contracts the
+    jnp terms' rescale into that combine (the unrounded product is one
+    ulp away); the Pallas route materializes each term first.  Both jnp
+    engines contract identically — int == ref stays bitwise — but
+    pallas-vs-jnp there is exact only to one ulp."""
+    from repro.core import quantize
+    d = OPDEFS[name]
+    node, jargs = _qnode(d)
+    complex_in = any(jnp.issubdtype(a.dtype, jnp.complexfloating)
+                     for a in jargs)
+    with quantize.engine_override("ref"):
+        want = np.asarray(jax.jit(
+            lambda *a: plan_lib.apply_node(node, a, "native", None,
+                                           "int8"))(*jargs))
+    for lw in d.q_lowerings:
+        got = np.asarray(jax.jit(
+            lambda *a, _lw=lw: plan_lib.apply_node(node, a, _lw, None,
+                                                   "int8"))(*jargs))
+        if lw != "native" and complex_in:
+            # one ulp of the pre-cancellation term magnitude
+            ulp = np.float32(np.finfo(np.float32).eps) * np.abs(want).max()
+            np.testing.assert_allclose(got, want, rtol=0, atol=2 * ulp,
+                                       err_msg=f"{name}/{lw}")
+        else:
+            assert np.array_equal(got, want), (name, lw)
+
+
+def test_int8_pallas_plan_keeps_pallas_lowering():
+    """precision="int8" + lowering="pallas" no longer collapses to
+    native: the quantized ops run their int8 Pallas kernels (recorded
+    on the plan), matching the native integer path to the ulp."""
+    spec = PIPELINES["pfb_power"]
+    g = _unique(spec.build(), "q_pallas")
+    (x,) = spec.make_args(RNG, 2048)
+    shapes = {g.inputs[0]: x.shape}
+    p_pl = _compile_quiet(g, shapes, lowering="pallas", precision="int8")
+    p_nat = _compile_quiet(g, shapes, lowering="native", precision="int8")
+    q_nodes = [n for n, pr in p_pl.precisions.items() if pr == "int8"
+               and OPDEFS[p_pl.graph.nodes[n].op].qimpl is not None]
+    assert q_nodes
+    assert all(p_pl.node_lowerings[n] == "pallas" for n in q_nodes), \
+        p_pl.node_lowerings
+    # 2-ulp bound, not array_equal: full-plan jits give XLA:CPU more
+    # fusion context than the per-node jits above, and under some
+    # process configs (e.g. a forced multi-device host platform, set
+    # by an earlier test module) it FMA-contracts the f32 rescale into
+    # the jnp route's complex recombination — the documented one-ulp
+    # divergence from the Pallas route (see quantize.qdft).
+    got = np.asarray(p_pl(jnp.asarray(x)))
+    want = np.asarray(p_nat(jnp.asarray(x)))
+    np.testing.assert_allclose(
+        got, want, rtol=2 * np.float32(np.finfo(np.float32).eps), atol=0)
+
+
+def test_quantize_engine_joins_plan_cache_key():
+    """engine_override("ref") compiles must get their own plan-cache
+    slot — a ref-engine benchmark must never poison the int plans."""
+    from repro.core import quantize
+    spec = PIPELINES["pfb_power"]
+    g = _unique(spec.build(), "engine_key")
+    (x,) = spec.make_args(RNG, 1024)
+    shapes = {g.inputs[0]: x.shape}
+    p_int = _compile_quiet(g, shapes, precision="int8")
+    with quantize.engine_override("ref"):
+        p_ref = _compile_quiet(g, shapes, precision="int8")
+    assert p_ref is not p_int
+    # both engines compute the int8 tier bit-identically
+    np.testing.assert_array_equal(np.asarray(p_int(jnp.asarray(x))),
+                                  np.asarray(p_ref(jnp.asarray(x))))
+
+
 def test_service_serves_int8_plans_matching_offline():
     spec = PIPELINES["pfb_power"]
     g = spec.build()
