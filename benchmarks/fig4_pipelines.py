@@ -47,7 +47,7 @@ from benchmarks.common import (append_bench_json, fmt_table, speedup,
 from repro.core.registry import PIPELINES, pipelines as _load_pipelines
 from repro.graph import autotune
 from repro.graph import plan as plan_lib
-from repro.graph import compile as graph_compile
+from repro.graph import CompileOptions, compile as graph_compile
 
 
 def make_per_op_dispatch(graph):
@@ -148,10 +148,12 @@ def run(sizes=(2 ** 13, 2 ** 15), repeats=10, autotune_col=False,
             if tuned:
                 # the tentpole comparison: fixed-default vs block-tuned
                 # tiling of the same all-Pallas plan
-                p_def = graph_compile(g, shapes, lowering="pallas")
+                p_def = graph_compile(
+                    g, shapes, options=CompileOptions(lowering="pallas"))
                 p_tuned = graph_compile(
-                    g, shapes, lowering="pallas", block_configs="auto",
-                    autotune_kwargs={"repeats": tune_repeats})
+                    g, shapes, options=CompileOptions(
+                        lowering="pallas", block_configs="auto",
+                        autotune_kwargs={"repeats": tune_repeats}))
                 same = tuned_equals_default(p_tuned, shapes)
                 if same:
                     (t_def,) = timeit_group([p_def], x, repeats=repeats)
@@ -165,8 +167,9 @@ def run(sizes=(2 ** 13, 2 ** 15), repeats=10, autotune_col=False,
                            tuned_configs={k: v for k, v in
                                           p_tuned.configs.items() if v})
             if autotune_col:
-                pa = graph_compile(g, shapes, lowering="auto",
-                                   autotune_kwargs={"repeats": tune_repeats})
+                pa = graph_compile(g, shapes, options=CompileOptions(
+                    lowering="auto",
+                    autotune_kwargs={"repeats": tune_repeats}))
                 (t_auto,) = timeit_group([pa], x, repeats=repeats)
                 row += [us(t_auto), speedup(t_naive, t_auto)]
                 rec.update(t_plan_auto_s=t_auto,
@@ -181,7 +184,8 @@ def run(sizes=(2 ** 13, 2 ** 15), repeats=10, autotune_col=False,
             # output), so the trajectory records what the speed cost in
             # bits actually bought
             from repro.core.opdefs import sqnr_db
-            p_int8 = graph_compile(g, shapes, precision="int8")
+            p_int8 = graph_compile(
+                g, shapes, options=CompileOptions(precision="int8"))
             if "int8" in p_int8.precisions.values():
                 t32b, t_int8 = timeit_group([p, p_int8], x,
                                             repeats=repeats)
@@ -201,7 +205,9 @@ def run(sizes=(2 ** 13, 2 ** 15), repeats=10, autotune_col=False,
                 # override so the ref path is what gets jitted.
                 from repro.core import quantize
                 with quantize.engine_override("ref"):
-                    p_ref = graph_compile(g, shapes, precision="int8")
+                    p_ref = graph_compile(
+                        g, shapes,
+                        options=CompileOptions(precision="int8"))
                     (t_ref,) = timeit_group([p_ref], x, repeats=repeats)
                 rec.update(t_plan_int8_dequant_s=t_ref,
                            speedup_int8_true_vs_dequant=t_ref / t_int8)
@@ -217,7 +223,8 @@ def run(sizes=(2 ** 13, 2 ** 15), repeats=10, autotune_col=False,
                     [spec.make_args(rng, n)[0] for _ in range(n_dev)]))
                 bshapes = {g.inputs[0]: xb.shape}
                 p_single = graph_compile(g, bshapes)
-                p_shard = graph_compile(g, bshapes, shard="batch")
+                p_shard = graph_compile(g, bshapes,
+                        options=CompileOptions(shard="batch"))
                 xb_sharded = p_shard.shard_inputs(xb)
                 t_single, t_shard = timeit_group(
                     [lambda: p_single(xb), lambda: p_shard(xb_sharded)],

@@ -39,6 +39,24 @@ phase-attributed latency split (``<mode>_queued_ms_p50``,
 ``check_regression.py --metric continuous_device_ms_p50`` can gate an
 *attributed* phase, not just the end-to-end number.
 
+The continuous mode is additionally run **twice** — once with the
+blocking scheduler (``overlap=False``: pack, run, wait, repeat) and
+once double-buffered (the service default: batch N+1 packs on the host
+while N runs on the device) — with telemetry on, and each run's mean
+inter-batch device idle gap is read straight off its
+``service.device_run`` spans (``noverlap_idle_gap_ms`` vs
+``continuous_idle_gap_ms``).  That is the overlap claim as a gateable
+number: the overlapped scheduler should shrink the gap without
+costing end-to-end p50/p99 (``noverlap_p50_ms``/``noverlap_p99_ms``
+are recorded for the comparison).
+
+Each record also carries a **multi-tenant priority point**: a second
+pipeline served as a named tenant of the same service, requests
+offered as one interleaved burst with the aux tenant on the ``rt``
+priority class — per-class p50/p99 (``mt_rt_*``, ``mt_batch_*``) show
+the rt class jumping the queue, and replay is verified bit-for-bit
+per tenant (``mt_replayed``).
+
 Each record also carries an **overload point**: the same trace offered
 at ``--overload-load`` (default 1.5x) times capacity against a bounded
 queue (``queue_limit = 2 * batch``) with ``on_full="shed"`` — served
@@ -58,6 +76,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import append_bench_json, fmt_table
+from repro import obs
 from repro.core.registry import PIPELINES, pipelines as _load_pipelines
 from repro.graph import plan as plan_lib
 from repro.graph.errors import Overloaded
@@ -65,7 +84,7 @@ from repro.graph.service import PipelineService, replay_batches
 
 
 def drive(svc: PipelineService, signals, gaps, *, timeout=180.0,
-          allow_shed=False):
+          allow_shed=False, tenants=None, priorities=None):
     """Submit ``signals`` on the ``gaps`` inter-arrival schedule against
     a started service; returns (per-request latencies [s], makespan [s],
     served mask).
@@ -93,7 +112,10 @@ def drive(svc: PipelineService, signals, gaps, *, timeout=180.0,
         if delay > 0:
             time.sleep(delay)        # the Poisson arrival process
         t_sub = time.perf_counter()
-        fut = svc.submit(x)
+        fut = svc.submit(
+            x,
+            priority=priorities[i] if priorities else "batch",
+            tenant=tenants[i] if tenants else None)
 
         def _done(f, i=i, t_sub=t_sub):
             done_t[i] = time.perf_counter()
@@ -115,8 +137,23 @@ def drive(svc: PipelineService, signals, gaps, *, timeout=180.0,
 def _warm(svc: PipelineService) -> None:
     """Execute each bucket plan once so XLA compiles outside the
     measured window (steady-state serving, not cold start)."""
-    for b, p in svc.plans.items():
-        np.asarray(p(jnp.zeros((b, svc.signal_len), svc.dtype)))
+    for t in svc.tenants.values():
+        for b, p in t.plans.items():
+            np.asarray(p(jnp.zeros((b, t.signal_len), t.dtype)))
+
+
+def _device_idle_gap_ms(events) -> float:
+    """Mean gap between consecutive ``service.device_run`` spans, in ms.
+
+    The spans carry explicit microsecond timestamps + durations (chrome
+    "X" events), so the gap between batch k's end and batch k+1's start
+    is exactly the time the device sat idle while the host packed — the
+    number the double-buffered scheduler exists to shrink."""
+    runs = sorted((float(e["ts"]), float(e["ts"]) + float(e["dur"]))
+                  for e in events
+                  if e.get("name") == "service.device_run")
+    gaps = [max(0.0, b0 - a1) for (_, a1), (b0, _) in zip(runs, runs[1:])]
+    return float(np.mean(gaps)) / 1e3 if gaps else 0.0
 
 
 def run(pipeline="spectrogram", *, requests=200, max_batch=8,
@@ -130,9 +167,11 @@ def run(pipeline="spectrogram", *, requests=200, max_batch=8,
     signals = [rng.standard_normal(n).astype(np.float32)
                for _ in range(requests)]
 
+    opts = plan_lib.CompileOptions(lowering=lowering, mesh=mesh)
+
     # capacity: how fast a saturated device turns over full batches
     probe = PipelineService(g, signal_len=n, batch_size=max_batch,
-                            batching="fixed", lowering=lowering, mesh=mesh)
+                            batching="fixed", options=opts)
     _warm(probe)
     # tile if requests < max_batch: the probe must time a FULL batch or
     # capacity comes out ~2x high and the offered load lands in overload
@@ -154,16 +193,34 @@ def run(pipeline="spectrogram", *, requests=200, max_batch=8,
 
     results = {}
     cache0 = plan_lib.cache_stats()
-    for mode in ("fixed", "continuous"):
+    was_on = obs.REGISTRY.enabled
+    idle_gaps = {}
+    # three schedulers against ONE arrival trace: fixed packing,
+    # blocking continuous (each batch packs only after the previous one
+    # retires), and overlapped continuous (the service default: batch
+    # N+1 packs while N runs).  Telemetry is on for the two continuous
+    # drives so the device-idle gap comes off the actual device_run
+    # spans, not an inference.
+    for mode, overlap in (("fixed", False), ("noverlap", False),
+                          ("continuous", True)):
+        batching = "fixed" if mode == "fixed" else "continuous"
+        if mode != "fixed":
+            obs.REGISTRY.enable()
+        ev0 = len(obs.REGISTRY.events())
         svc = PipelineService(g, signal_len=n, batch_size=max_batch,
-                              batching=mode, lowering=lowering, mesh=mesh,
+                              batching=batching, options=opts,
+                              overlap=overlap,
                               max_wait_ms=max_wait_ms,
-                              record_batches=(mode == "continuous"))
+                              record_batches=(batching == "continuous"))
         _warm(svc)
         lat, makespan, _ = drive(svc, signals, gaps)
-        if mode == "continuous":
+        if batching == "continuous":
             checked = replay_batches(svc)      # bit-for-bit vs packing
             assert checked == requests, (checked, requests)
+            idle_gaps[f"{mode}_idle_gap_ms"] = _device_idle_gap_ms(
+                obs.REGISTRY.events()[ev0:])
+            if not was_on:
+                obs.REGISTRY.disable()
         s = svc.stats()
         results[mode] = {
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
@@ -188,8 +245,8 @@ def run(pipeline="spectrogram", *, requests=200, max_batch=8,
     # unbounded queue here would show runaway p99, not a policy)
     ov_limit = 2 * max_batch
     ov = PipelineService(g, signal_len=n, batch_size=max_batch,
-                         batching="continuous", lowering=lowering,
-                         mesh=mesh, queue_limit=ov_limit, on_full="shed",
+                         batching="continuous", options=opts,
+                         queue_limit=ov_limit, on_full="shed",
                          record_batches=True)
     _warm(ov)
     rate_ov = overload_load * capacity
@@ -212,12 +269,50 @@ def run(pipeline="spectrogram", *, requests=200, max_batch=8,
     }
     del ov
 
+    # the multi-tenant priority point: a second pipeline served as a
+    # named tenant of the same device pool, requests offered as one
+    # interleaved burst (a queue forms instantly) with the aux tenant on
+    # the rt class — rt jumps the queue order, so its latency
+    # distribution should sit below the batch class's, and replay must
+    # stay bit-for-bit PER TENANT (each tenant packs its own batches)
+    aux_name = "pfb_power" if pipeline != "pfb_power" else "spectrogram"
+    aux = PIPELINES[aux_name]
+    g2 = aux.build()
+    n2 = aux.valid_len(signal_len)
+    mt = PipelineService(g, signal_len=n, batch_size=max_batch,
+                         batching="continuous", options=opts,
+                         record_batches=True)
+    mt.add_tenant("aux", g2, n2, record_batches=True)
+    rng2 = np.random.default_rng(seed + 1)
+    pairs = max(max_batch, min(requests // 2, 64))
+    xs, tns, prs = [], [], []
+    for i in range(pairs):
+        xs.append(signals[i % len(signals)])
+        tns.append(None)                       # default tenant
+        prs.append("batch")
+        xs.append(rng2.standard_normal(n2).astype(np.float32))
+        tns.append("aux")
+        prs.append("rt")
+    lat_mt, _, _ = drive(mt, xs, [0.0] * len(xs),
+                         tenants=tns, priorities=prs)
+    mt_replayed = (replay_batches(mt, tenant="default")
+                   + replay_batches(mt, tenant="aux"))
+    assert mt_replayed == len(xs), (mt_replayed, len(xs))
+    multi_tenant = {
+        "mt_requests": len(xs),
+        "mt_replayed": int(mt_replayed),
+        "mt_batch_p50_ms": float(np.percentile(lat_mt[0::2], 50) * 1e3),
+        "mt_batch_p99_ms": float(np.percentile(lat_mt[0::2], 99) * 1e3),
+        "mt_rt_p50_ms": float(np.percentile(lat_mt[1::2], 50) * 1e3),
+        "mt_rt_p99_ms": float(np.percentile(lat_mt[1::2], 99) * 1e3),
+    }
+    del mt
+
     # oracle spot-check outside the timed window: the numerics path is
     # identical to the driven services (same bucket plans), and the
     # continuous packing replay above already pinned responses bitwise
     ref = PipelineService(g, signal_len=n, batch_size=max_batch,
-                          batching="continuous", lowering=lowering,
-                          mesh=mesh)
+                          batching="continuous", options=opts)
     futs = [ref.submit(signals[i]) for i in range(min(check, requests))]
     ref.flush()
     for i, f in enumerate(futs):
@@ -242,7 +337,7 @@ def run(pipeline="spectrogram", *, requests=200, max_batch=8,
                            / results["continuous"]["p50_ms"]),
            "p99_speedup": (results["fixed"]["p99_ms"]
                            / results["continuous"]["p99_ms"]),
-           **overload}
+           **idle_gaps, **multi_tenant, **overload}
     rows = [[m, f"{r['p50_ms']:.2f}", f"{r['p99_ms']:.2f}",
              f"{r['throughput_req_s']:.1f}", r["batches"],
              f"{r['fill']:.0%}"] for m, r in results.items()]
@@ -252,10 +347,19 @@ def run(pipeline="spectrogram", *, requests=200, max_batch=8,
                  f"{overload['overload_throughput_req_s']:.1f}",
                  f"{served}/{requests}",
                  f"{overload['overload_shed_ratio']:.0%} shed"])
+    rows.append(["mt rt|batch",
+                 f"{multi_tenant['mt_rt_p50_ms']:.2f}|"
+                 f"{multi_tenant['mt_batch_p50_ms']:.2f}",
+                 f"{multi_tenant['mt_rt_p99_ms']:.2f}|"
+                 f"{multi_tenant['mt_batch_p99_ms']:.2f}",
+                 "-", f"{len(xs)} req", "2 tenants"])
     table = fmt_table(
         f"Fig.4-service: {pipeline} n={n} batch<= {max_batch} "
         f"Poisson load {load:.0%} of capacity ({rate:.1f} req/s), "
-        f"overload row at {overload_load:g}x with queue_limit={ov_limit}",
+        f"overload row at {overload_load:g}x with queue_limit={ov_limit}; "
+        f"device idle gap {idle_gaps['noverlap_idle_gap_ms']:.2f} ms "
+        f"blocking -> {idle_gaps['continuous_idle_gap_ms']:.2f} ms "
+        "overlapped",
         ["batching", "p50_ms", "p99_ms", "req/s", "batches", "fill"], rows)
     return table, rec
 
@@ -298,7 +402,12 @@ def main(argv=None):
           f"{rec['p50_speedup']:.2f}x; overload {args.overload_load:g}x: "
           f"p50/p99 {rec['overload_p50_ms']:.2f}/"
           f"{rec['overload_p99_ms']:.2f} ms at "
-          f"{rec['overload_shed_ratio']:.0%} shed; appended run to {path}")
+          f"{rec['overload_shed_ratio']:.0%} shed; device idle gap "
+          f"{rec['noverlap_idle_gap_ms']:.2f} -> "
+          f"{rec['continuous_idle_gap_ms']:.2f} ms (overlap); "
+          f"2-tenant rt/batch p99 {rec['mt_rt_p99_ms']:.2f}/"
+          f"{rec['mt_batch_p99_ms']:.2f} ms "
+          f"({rec['mt_replayed']} replayed); appended run to {path}")
 
 
 if __name__ == "__main__":

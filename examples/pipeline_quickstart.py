@@ -53,8 +53,8 @@ print(f"plan: out {offline.shape}, traces {plan.trace_count}, "
 # sizes only) on the pipeline's real shapes; winners persist to the
 # on-disk cache, so a second run compiles instantly.  lowering="auto"
 # would tune lowering AND tiling jointly.
-tuned = graph.compile(g, {"x": sig.shape}, lowering="pallas",
-                      block_configs="auto", autotune_kwargs={"repeats": 1})
+tuned = graph.compile(g, {"x": sig.shape}, options=graph.CompileOptions(
+    lowering="pallas", block_configs="auto", autotune_kwargs={"repeats": 1}))
 np.testing.assert_allclose(np.asarray(tuned(jnp.asarray(sig))), offline,
                            rtol=2e-3, atol=2e-3)
 print("tuned:", {k: v for k, v in tuned.configs.items() if v})
@@ -76,7 +76,7 @@ with graph.PipelineService(pg, signal_len=1024, batch_size=4,
     futs = [svc.submit(rng.standard_normal(1024).astype(np.float32))
             for _ in range(10)]
     outs = [f.result(timeout=60) for f in futs]
-print(f"service: {svc.stats}, buckets {list(svc.buckets)}, "
+print(f"service: {svc.stats()}, buckets {list(svc.buckets)}, "
       f"plan traces {svc.plan.trace_count}")
 
 # the built-ins come with numpy oracles — verify one response

@@ -38,13 +38,15 @@ from repro.graph.pipelines import (BUILTINS, build_cascaded_channelizer,
                                    build_correlate, build_fir_decimate,
                                    build_pfb_power, build_spectrogram,
                                    build_stft_overlap_add)
-from repro.graph.plan import Plan, cache_stats, clear_cache, compile
+from repro.graph.plan import (CompileOptions, Plan, cache_stats,
+                              clear_cache, compile)
 from repro.graph.service import (PipelineService, bucket_ladder,
                                  replay_batches)
 from repro.graph.stream import ChunkedRunner, stream_execute, stream_spec
 
 __all__ = [
-    "Graph", "Node", "OpDef", "OPDEFS", "Plan", "compile", "cache_stats",
+    "Graph", "Node", "OpDef", "OPDEFS", "Plan", "CompileOptions",
+    "compile", "cache_stats",
     "clear_cache", "ChunkedRunner", "stream_execute", "stream_spec",
     "PipelineService", "bucket_ladder", "replay_batches",
     "ServiceError", "Overloaded", "DeadlineExceeded", "InvalidRequest",

@@ -707,9 +707,10 @@ def main(argv=None):
     g = spec.build()
     n = spec.valid_len(args.n)
     fuse = "auto" if args.tune_fusion else None
-    plan = plan_lib.compile(g, {g.inputs[0]: (n,)}, lowering="auto",
-                            fuse=fuse, precision=args.precision,
-                            autotune_kwargs={"repeats": args.repeats})
+    opts = plan_lib.CompileOptions(
+        lowering="auto", fuse=fuse, precision=args.precision,
+        autotune_kwargs={"repeats": args.repeats})
+    plan = plan_lib.compile(g, {g.inputs[0]: (n,)}, options=opts)
     print(f"[autotune] {args.pipeline} @ n={n} "
           f"(cache: {at.cache_path()}, mode: {at.mode()}, "
           f"precision: {args.precision})")
@@ -726,9 +727,7 @@ def main(argv=None):
     at._MEM.clear()
     plan_lib.clear_cache()
     before = at.stats()["measured"]
-    plan2 = plan_lib.compile(g, {g.inputs[0]: (n,)}, lowering="auto",
-                             fuse=fuse, precision=args.precision,
-                             autotune_kwargs={"repeats": args.repeats})
+    plan2 = plan_lib.compile(g, {g.inputs[0]: (n,)}, options=opts)
     after = at.stats()["measured"]
     ok = (after == before and plan2.lowerings == plan.lowerings
           and plan2.configs == plan.configs

@@ -455,11 +455,69 @@ def _norm_specs(graph: Graph, shapes, dtype) -> dict[str, jax.ShapeDtypeStruct]:
     return specs
 
 
-def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
-            lowering="native", precision="f32", block_configs=None,
-            fuse=None, mesh=None, shard: str | None = None,
-            autotune_kwargs: dict | None = None) -> Plan:
+@dataclasses.dataclass(frozen=True)
+class CompileOptions:
+    """Every compile-time knob in one value object.
+
+    Nine PRs accreted nine ``compile()`` keyword arguments; this is the
+    consolidation: one dataclass that :func:`compile`,
+    :class:`repro.graph.service.PipelineService`,
+    :class:`repro.graph.stream.ChunkedRunner`, and ``dsp_serve`` all
+    build on, instead of re-plumbing each knob through every layer.
+    Immutable (hashable construction aside — dict-valued fields are
+    allowed), so one instance can be shared across tenants and plan
+    compiles; derive variants with :meth:`replace`::
+
+        opts = CompileOptions(lowering="auto", precision="int8")
+        plan = graph.compile(g, shapes, options=opts)
+        svc = PipelineService(g, n, options=opts.replace(donate=True))
+
+    Field semantics match the historical keyword arguments (documented
+    on :func:`compile`); the one new field is ``donate`` — donate input
+    buffers to the computation (``jax.jit(donate_argnums=...)``), which
+    the overlapped scheduler uses so batch N's input buffer is recycled
+    into batch N's output instead of holding host memory while batch
+    N+1 is formed.  Donation makes the *caller's* input array
+    unusable after the call on backends that honor it; leave it off
+    unless every input is a fresh throwaway (the service's packed
+    batches are).
+    """
+
+    dtype: str = "float32"
+    backend: str | None = None
+    lowering: object = "native"       # str | {node: str}
+    precision: object = "f32"         # str | {node: str}
+    block_configs: object = None      # None | "auto" | {node: {param: int}}
+    fuse: object = None               # None | bool | "auto"
+    mesh: object = None               # Mesh | int device count | None
+    shard: str | None = None
+    donate: bool = False
+    autotune_kwargs: dict | None = None
+
+    def replace(self, **changes) -> "CompileOptions":
+        """A copy with the given fields changed (``dataclasses.replace``)."""
+        return dataclasses.replace(self, **changes)
+
+
+_LEGACY_COMPILE_KWARGS = tuple(
+    f.name for f in dataclasses.fields(CompileOptions) if f.name != "donate")
+_warned_legacy_compile = False
+
+
+def compile(graph: Graph, shapes, *, options: CompileOptions | None = None,
+            **legacy) -> Plan:
     """Compile ``graph`` for the given input shapes; memoized.
+
+    Knobs ride a :class:`CompileOptions`::
+
+        compile(g, shapes, options=CompileOptions(lowering="auto"))
+
+    The historical keyword arguments (``lowering=``, ``precision=``,
+    ``mesh=``, ...) still work — they are folded into a
+    :class:`CompileOptions` behind a once-per-process
+    ``DeprecationWarning`` — but can't be mixed with ``options=`` in
+    one call (that raises ``TypeError``: two sources of truth for the
+    same knob).
 
     ``lowering``: a lowering name for every node (unsupported nodes fall
     back to native — recorded on ``Plan.downgrades`` and warned once), a
@@ -512,7 +570,35 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
     the per-device problem; the plan cache is keyed on the mesh topology
     (axes, sizes, device ids).
     """
-    backend = backend or jax.default_backend()
+    if legacy:
+        unknown = sorted(set(legacy) - set(_LEGACY_COMPILE_KWARGS))
+        if unknown:
+            raise TypeError(
+                f"compile() got unexpected keyword argument(s) {unknown}; "
+                f"known options: {sorted(_LEGACY_COMPILE_KWARGS)} "
+                f"(preferably via options=CompileOptions(...))")
+        if options is not None:
+            raise TypeError(
+                "compile() got both options= and legacy keyword "
+                f"argument(s) {sorted(legacy)}: fold everything into the "
+                "CompileOptions")
+        global _warned_legacy_compile
+        if not _warned_legacy_compile:
+            _warned_legacy_compile = True
+            warnings.warn(
+                "compile(..., lowering=, precision=, mesh=, ...) keyword "
+                "arguments are deprecated; pass "
+                "compile(graph, shapes, options=CompileOptions(...))",
+                DeprecationWarning, stacklevel=2)
+        options = CompileOptions(**legacy)
+    return _compile_impl(graph, shapes, options or CompileOptions())
+
+
+def _compile_impl(graph: Graph, shapes, o: CompileOptions) -> Plan:
+    dtype, lowering, precision = o.dtype, o.lowering, o.precision
+    block_configs, fuse, mesh, shard = o.block_configs, o.fuse, o.mesh, o.shard
+    autotune_kwargs, donate = o.autotune_kwargs, o.donate
+    backend = o.backend or jax.default_backend()
     if lowering == "reference":
         lowering = "native"      # alias: "run the trusted slow path" —
         # shares native's cache key so degraded buckets reuse any
@@ -575,7 +661,8 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
     # compile must not collide with (or poison) the default "int" plans
     # — Graph.signature carries no engine information.
     key = (graph.signature, spec_key, backend, low_key, prec_key,
-           quantize.engine(), cfg_key, fuse, mesh_key, tune_key)
+           quantize.engine(), cfg_key, fuse, mesh_key, bool(donate),
+           tune_key)
     plan = _CACHE.get(key)
     if plan is not None:
         _HITS.add()
@@ -853,8 +940,9 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
             return _execute(g, dict(zip(g.inputs, arrays)), lowerings,
                             configs, precisions_map, qconsts)
 
+        donate_argnums = tuple(range(len(g.inputs))) if donate else ()
         if mesh is None:
-            plan._fn = jax.jit(raw)
+            plan._fn = jax.jit(raw, donate_argnums=donate_argnums)
         else:
             from repro.distributed.sharding import batch_shardings
             shardings = batch_shardings(
@@ -867,10 +955,12 @@ def compile(graph: Graph, shapes, *, dtype="float32", backend: str = None,
                                       else tuple(P(batch_axis)
                                                  for _ in g.outputs)),
                            check_rep=False)
-            plan._fn = jax.jit(fn, in_shardings=plan.input_shardings)
+            plan._fn = jax.jit(fn, in_shardings=plan.input_shardings,
+                               donate_argnums=donate_argnums)
         _CACHE[key] = plan
     return plan
 
 
-__all__ = ["OPS", "Plan", "apply_node", "compile", "infer",
-           "fuse_elementwise", "run_to_steps", "cache_stats", "clear_cache"]
+__all__ = ["OPS", "Plan", "CompileOptions", "apply_node", "compile",
+           "infer", "fuse_elementwise", "run_to_steps", "cache_stats",
+           "clear_cache"]

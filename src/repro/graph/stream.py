@@ -147,16 +147,28 @@ class ChunkedRunner:
     """Push chunks in, get output steps out; carries FIR/PFB/unfold
     overlap state so the concatenated output equals offline execution."""
 
-    def __init__(self, graph: Graph, *, mesh=None, step_buckets: bool = False,
-                 **compile_opts):
+    def __init__(self, graph: Graph, *,
+                 options: plan_lib.CompileOptions | None = None,
+                 mesh=None, step_buckets: bool = False, **compile_opts):
         self.graph = graph
         self.spec = stream_spec(graph)
-        self.compile_opts = dict(compile_opts)
         if mesh is not None:
+            compile_opts["mesh"] = mesh
+        if compile_opts:
+            if options is not None:
+                raise TypeError(
+                    "ChunkedRunner got both options= and legacy compile "
+                    f"keyword argument(s) {sorted(compile_opts)}: fold "
+                    "everything into the CompileOptions")
+            options = plan_lib.CompileOptions(**compile_opts)
+        options = options or plan_lib.CompileOptions()
+        if options.mesh is not None or options.shard is not None:
             # normalize (int -> Mesh) once: every push re-enters
             # plan.compile, and steady-state pushes must stay pure
             # cache hits, not rebuild a Mesh per chunk
-            self.compile_opts["mesh"] = plan_lib._norm_mesh(mesh, None)[0]
+            m, _ = plan_lib._norm_mesh(options.mesh, options.shard)
+            options = options.replace(mesh=m, shard=None)
+        self.options = options
         # step_buckets: quantize each push to a power-of-two number of
         # output steps (carrying the remainder) so irregular push sizes
         # — the continuous-serving arrival pattern — compile a bounded
@@ -188,10 +200,9 @@ class ChunkedRunner:
         self.window_lens.add(int(use))
         with obs.span("stream.push", cat="stream", graph=self.graph.name,
                       steps=int(n_steps), window=int(use)):
-            p = plan_lib.compile(self.graph,
-                                 {self.graph.inputs[0]: window.shape},
-                                 dtype=str(window.dtype),
-                                 **self.compile_opts)
+            p = plan_lib.compile(
+                self.graph, {self.graph.inputs[0]: window.shape},
+                options=self.options.replace(dtype=str(window.dtype)))
             out = p(jnp.asarray(window))
         self._carry = buf[..., n_steps * b:]
         # the deferred remainder a bucketed push left behind (plus the
@@ -228,9 +239,12 @@ class ChunkedRunner:
         return jnp.concatenate(outs, axis=self.spec.concat_axis)
 
 
-def stream_execute(graph: Graph, x, chunk_len: int, **compile_opts):
+def stream_execute(graph: Graph, x, chunk_len: int, *,
+                   options: plan_lib.CompileOptions | None = None,
+                   **compile_opts):
     """One-shot helper: chunked execution of ``x`` (tests/benchmarks)."""
-    return ChunkedRunner(graph, **compile_opts).run(x, chunk_len)
+    return ChunkedRunner(graph, options=options, **compile_opts).run(
+        x, chunk_len)
 
 
 __all__ = ["ChunkedRunner", "PipeStreamSpec", "stream_spec",

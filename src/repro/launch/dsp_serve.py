@@ -42,6 +42,20 @@ that no healthy request was harmed) — pair it with
 ``TINA_FAULTS="device_run:nan"`` to exercise the service's bisection
 quarantine end to end (chaos CI does exactly this).
 
+Multi-tenant serving: ``--tenants pfb_power,fir_decimate`` adds extra
+pipelines as named tenants of the same service — one shared device
+pool, one priority-aware queue, per-tenant plans/stats/replay.
+Requests round-robin across every tenant.  ``--priority mix``
+alternates rt/batch priority classes across requests (rt jumps the
+queue but never preempts a running batch).  ``--overlap on`` forces
+the double-buffered scheduler (host packs batch N+1 while the device
+runs batch N) even in fixed batching mode; continuous batching
+overlaps by default.
+
+Asyncio front door: ``--async`` drives the whole request load through
+``await service.submit_async(...)`` under ``async with`` — the same
+futures, batching, and robustness machinery, natively awaitable.
+
 Observability: ``--trace out.json`` turns span collection on
 (equivalent to ``TINA_TELEMETRY=on``) and writes a Chrome trace of the
 whole run — plan compilation, autotune selection, batch dispatch,
@@ -100,6 +114,26 @@ def build_parser() -> argparse.ArgumentParser:
                          "dispatch the largest queued batch the moment "
                          "the device is idle through a ladder of "
                          "pre-compiled bucket plans")
+    ap.add_argument("--overlap", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="double-buffered scheduler: pack batch N+1 on "
+                         "the host while the device runs batch N "
+                         "(auto = on for --batching continuous, off "
+                         "for fixed)")
+    ap.add_argument("--tenants", metavar="P1,P2", default=None,
+                    help="comma-separated extra pipelines to serve as "
+                         "named tenants of the same service (shared "
+                         "device pool, per-tenant plans/stats/replay); "
+                         "requests round-robin across all tenants")
+    ap.add_argument("--priority", default="batch",
+                    choices=["batch", "rt", "mix"],
+                    help="priority class for submitted requests; mix "
+                         "alternates rt/batch so the rt class "
+                         "demonstrably jumps the queue")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="drive the load through the asyncio front "
+                         "door: async with PipelineService(...) + "
+                         "await submit_async(...)")
     ap.add_argument("--max-wait-ms", type=float, default=2.0,
                     help="fixed-mode fill deadline per request; with "
                          "--batching continuous an idle device never "
@@ -212,13 +246,14 @@ def prewarm(graph_obj, batch: int, signal_len: int, *, lowering: str,
     os.environ["TINA_AUTOTUNE"] = "on"
     try:
         before = autotune.stats()
-        kwargs = (dict(lowering="auto") if lowering == "auto"
-                  else dict(lowering=lowering, block_configs="auto"))
+        opts = plan_lib.CompileOptions(
+            lowering=lowering,
+            block_configs=None if lowering == "auto" else "auto",
+            mesh=mesh, precision=precision,
+            autotune_kwargs={"repeats": repeats})
         plan_lib.compile(graph_obj,
                          {graph_obj.inputs[0]: (batch, signal_len)},
-                         mesh=mesh, precision=precision,
-                         autotune_kwargs={"repeats": repeats},
-                         **kwargs)
+                         options=opts)
         after = autotune.stats()
         return {k: after[k] - before[k] for k in after}
     finally:
@@ -245,6 +280,7 @@ def main(argv=None):
 
     from repro import obs
     from repro.core.registry import PIPELINES, pipelines
+    from repro.graph.plan import CompileOptions
     from repro.graph.service import PipelineService
 
     if args.trace:
@@ -291,18 +327,38 @@ def main(argv=None):
         args.tune_blocks = args.tune_blocks or args.lowering != "auto"
 
     t0 = time.perf_counter()
+    opts = CompileOptions(
+        lowering=args.lowering,
+        precision=args.precision,
+        block_configs="auto" if args.tune_blocks else None,
+        mesh=args.mesh or None)
+    overlap = (None if args.overlap == "auto"
+               else args.overlap == "on")
     svc = PipelineService(g, signal_len=n, batch_size=args.batch,
                           batching=args.batching,
-                          lowering=args.lowering,
-                          precision=args.precision,
-                          block_configs="auto" if args.tune_blocks else None,
-                          mesh=args.mesh or None,
+                          options=opts,
+                          overlap=overlap,
                           max_wait_ms=args.max_wait_ms,
                           queue_limit=args.queue_limit or None,
                           on_full=args.on_full,
                           deadline_ms=args.deadline_ms or None,
                           max_retries=args.max_retries,
                           validate=args.validate)
+    tenant_specs = {"default": spec}
+    tenant_lens = {"default": n}
+    if args.tenants:
+        for tn in [t.strip() for t in args.tenants.split(",") if t.strip()]:
+            if tn not in PIPELINES:
+                raise SystemExit(f"--tenants: unknown pipeline {tn!r}; "
+                                 f"choices: {sorted(PIPELINES)}")
+            if tn in tenant_specs:
+                continue
+            tspec = PIPELINES[tn]
+            tlen = tspec.valid_len(args.signal_len)
+            svc.add_tenant(tn, tspec.build(), tlen,
+                           batch_size=args.batch)
+            tenant_specs[tn] = tspec
+            tenant_lens[tn] = tlen
     t_compile = time.perf_counter() - t0
     tuned = {k: v for k, v in svc.plan.configs.items() if v}
     sharded = ""
@@ -315,23 +371,35 @@ def main(argv=None):
               if args.batching == "continuous" else "")
     prec = ("" if args.precision == "f32"
             else f", precisions: {svc.plan.precisions}")
-    print(f"[dsp_serve] {args.pipeline}: {len(svc.plans)} plan(s) compiled "
+    nplans = sum(len(t.plans) for t in svc.tenants.values())
+    multi = (f", {len(svc.tenants)} tenants" if len(svc.tenants) > 1
+             else "")
+    print(f"[dsp_serve] {args.pipeline}: {nplans} plan(s) compiled "
           f"in {t_compile:.2f}s (lowerings: {svc.plan.lowerings}"
           + (f", block configs: {tuned}" if tuned else "")
-          + prec + sharded + ladder + ")")
+          + prec + sharded + ladder + multi + ")")
 
-    signals = [rng.standard_normal(n).astype(np.float32)
-               for _ in range(args.requests)]
+    # round-robin the request load across every tenant; --priority mix
+    # alternates rt/batch so the priority classes are both exercised
+    tenant_names = list(tenant_specs)
+    reqs = []
+    for i in range(args.requests):
+        tn = tenant_names[i % len(tenant_names)]
+        x = rng.standard_normal(tenant_lens[tn]).astype(np.float32)
+        pr = ("rt" if args.priority == "rt"
+              or (args.priority == "mix" and i % 2 == 0) else "batch")
+        reqs.append((tn, pr, x))
     poison_idx: set = set()
     if args.poison:
-        if args.poison > len(signals):
+        if args.poison > len(reqs):
             raise SystemExit(f"--poison {args.poison} > --requests "
-                             f"{len(signals)}")
+                             f"{len(reqs)}")
         # spread the poison so it lands in different batches
-        poison_idx = set(np.linspace(0, len(signals) - 1,
+        poison_idx = set(np.linspace(0, len(reqs) - 1,
                                      args.poison).astype(int).tolist())
         for i in poison_idx:
-            signals[i][n // 3] = np.nan
+            x = reqs[i][2]
+            x[x.shape[-1] // 3] = np.nan
     metrics_stop = (_start_metrics_thread(svc, args.metrics_interval)
                     if args.metrics_interval > 0 else None)
     profiling = False
@@ -341,17 +409,31 @@ def main(argv=None):
         profiling = True
     t0 = time.perf_counter()
     try:
-        with svc:
-            futs = []
-            for x in signals:
-                try:
-                    futs.append(svc.submit(x))
-                except Exception as e:   # noqa: BLE001 — on_full="raise"
-                    futs.append(e)
-            # outcome-tolerant: every slot ends up a result array or the
-            # typed exception its future resolved with
-            outs = [f if isinstance(f, Exception) else
-                    _result_or_exception(f) for f in futs]
+        if args.use_async:
+            import asyncio
+
+            async def _drive():
+                async with svc:
+                    # outcome-tolerant: gather keeps typed failures as
+                    # values, exactly like the sync path below
+                    return await asyncio.gather(
+                        *(svc.submit_async(x, priority=pr, tenant=tn)
+                          for tn, pr, x in reqs),
+                        return_exceptions=True)
+
+            outs = list(asyncio.run(_drive()))
+        else:
+            with svc:
+                futs = []
+                for tn, pr, x in reqs:
+                    try:
+                        futs.append(svc.submit(x, priority=pr, tenant=tn))
+                    except Exception as e:  # noqa: BLE001 on_full="raise"
+                        futs.append(e)
+                # outcome-tolerant: every slot ends up a result array or
+                # the typed exception its future resolved with
+                outs = [f if isinstance(f, Exception) else
+                        _result_or_exception(f) for f in futs]
     finally:
         elapsed = time.perf_counter() - t0
         if profiling:
@@ -366,11 +448,12 @@ def main(argv=None):
 
     checked = 0
     min_sqnr = float("inf")
-    for i, (x, o) in enumerate(zip(signals, outs)):
+    for i, ((tn, _pr, x), o) in enumerate(zip(reqs, outs)):
         if isinstance(o, Exception) or i in poison_idx:
             continue                 # oracle-check served requests only
+        tspec = tenant_specs[tn]
         if args.precision == "f32":
-            np.testing.assert_allclose(o, spec.oracle(x), rtol=2e-3,
+            np.testing.assert_allclose(o, tspec.oracle(x), rtol=2e-3,
                                        atol=2e-3)
         else:
             # reduced-precision responses are judged the way their
@@ -378,7 +461,7 @@ def main(argv=None):
             # any OpDef budget so a quantization bug (not quantization
             # noise) fails the launch
             from repro.core.opdefs import sqnr_db
-            q = sqnr_db(spec.oracle(x), np.asarray(o))
+            q = sqnr_db(tspec.oracle(x), np.asarray(o))
             min_sqnr = min(min_sqnr, q)
             assert q > 20.0, (
                 f"response {i}: SQNR {q:.1f} dB vs the numpy oracle at "
@@ -400,6 +483,12 @@ def main(argv=None):
           f"{s['batches']} batches, "
           f"fill {s['fill_ratio']:.0%}{buckets}, plan traces {traces} "
           f"(1 == every batch was a cache hit)")
+    if len(svc.tenants) > 1:
+        print("[dsp_serve] tenants: " + ", ".join(
+            f"{tn} {c['requests']} req / {c['batches']} batch(es)"
+            for tn, c in s["tenants"].items()))
+    if args.priority != "batch":
+        print(f"[dsp_serve] priorities: {s['priorities']}")
     from collections import Counter
     from repro.obs import faults
     failures = Counter(type(o).__name__ for o in outs

@@ -37,6 +37,7 @@ gauge = REGISTRY.gauge
 histogram = REGISTRY.histogram
 span = REGISTRY.span
 instant = REGISTRY.instant
+complete = REGISTRY.complete
 snapshot = REGISTRY.snapshot
 events = REGISTRY.events
 enable = REGISTRY.enable
@@ -51,7 +52,8 @@ def enabled() -> bool:
 
 __all__ = ["Counter", "Gauge", "Histogram", "Span", "Registry",
            "REGISTRY", "NULL_SPAN", "ENV_VAR", "counter", "gauge",
-           "histogram", "span", "instant", "snapshot", "events",
+           "histogram", "span", "instant", "complete", "snapshot",
+           "events",
            "enable", "disable", "enabled", "reset", "chrome_trace",
            "export_chrome_trace", "validate_nesting", "faults",
            "InjectedFault"]

@@ -306,6 +306,26 @@ class Registry:
                     "tid": threading.get_ident(),
                     "args": {k: _jsonable(v) for k, v in args.items()}})
 
+    def complete(self, name: str, t0_ns: int, t1_ns: int,
+                 cat: str = "span", tid: int | str | None = None,
+                 **args) -> None:
+        """Record a complete ("X") span from explicit ``perf_counter_ns``
+        endpoints — for regions whose start and end are observed on
+        different threads or reconstructed after the fact (e.g. the
+        overlapped scheduler's device occupancy, which is dispatched on
+        the batcher thread but retired when the array is ready).  An
+        explicit ``tid`` places the span on a synthetic track (Chrome
+        accepts string tids) so it nests independently of any host
+        thread's spans."""
+        if not self._on:
+            return
+        self._push({"name": name, "cat": cat, "ph": "X",
+                    "ts": (t0_ns - self._t0_ns) / 1e3,
+                    "dur": max(0.0, (t1_ns - t0_ns) / 1e3),
+                    "pid": os.getpid(),
+                    "tid": threading.get_ident() if tid is None else tid,
+                    "args": {k: _jsonable(v) for k, v in args.items()}})
+
     def _record(self, name: str, cat: str, t0_ns: int, t1_ns: int,
                 args: dict) -> None:
         self._push({"name": name, "cat": cat, "ph": "X",

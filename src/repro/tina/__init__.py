@@ -1,0 +1,52 @@
+"""Umbrella CLI: one front door for the repo's operational tools.
+
+    PYTHONPATH=src python -m repro.tina serve --pipeline spectrogram ...
+    PYTHONPATH=src python -m repro.tina tune  --pipeline pfb_power ...
+    PYTHONPATH=src python -m repro.tina trace out.json --require ...
+
+Each subcommand delegates to the module that owns it — the historical
+entry points (``python -m repro.launch.dsp_serve``,
+``python -m repro.graph.autotune``, ``python -m repro.obs.trace``)
+keep working unchanged; this package is routing, not logic.  Flags
+after the subcommand are passed through verbatim, so every existing
+invocation translates by replacing the module path with
+``repro.tina <cmd>``.
+"""
+from __future__ import annotations
+
+import importlib
+
+COMMANDS = {
+    "serve": ("repro.launch.dsp_serve",
+              "batched / continuous / multi-tenant pipeline serving"),
+    "tune": ("repro.graph.autotune",
+             "measure-and-persist autotuning for a built-in pipeline"),
+    "trace": ("repro.obs.trace",
+              "validate a chrome-trace JSON (nesting, required spans)"),
+}
+
+
+def _usage() -> str:
+    lines = ["usage: python -m repro.tina {%s} [args...]"
+             % "|".join(COMMANDS)]
+    for name, (mod, desc) in COMMANDS.items():
+        lines.append(f"  {name:<7}{desc}  (= python -m {mod})")
+    lines.append("run a subcommand with -h for its own flags")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    import sys
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0] in ("-h", "--help"):
+        print(_usage())
+        return 0
+    cmd, rest = argv[0], argv[1:]
+    if cmd not in COMMANDS:
+        raise SystemExit(f"repro.tina: unknown command {cmd!r}\n"
+                         + _usage())
+    mod = importlib.import_module(COMMANDS[cmd][0])
+    return mod.main(rest) or 0
+
+
+__all__ = ["COMMANDS", "main"]

@@ -270,7 +270,7 @@ def test_service_failed_batch_fails_futures_not_thread():
     svc.flush()
     with pytest.raises(RuntimeError, match="boom"):
         f.result(timeout=5)
-    assert svc.stats["failed_batches"] == 1
+    assert svc.stats()["failed_batches"] == 1
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,7 @@ import pytest
 from repro import graph, obs
 from repro.core.registry import PIPELINES, pipelines
 from repro.graph import plan as plan_lib
-from repro.graph.service import PipelineService, StatsSnapshot
+from repro.graph.service import PipelineService
 
 pipelines()
 RNG = np.random.default_rng(11)
@@ -248,7 +248,7 @@ def test_service_stats_snapshot_consistent_under_soak():
     assert not errs
     final = svc.stats()
     svc.close()
-    assert isinstance(final, StatsSnapshot)
+    assert isinstance(final, dict)
     assert final["requests"] == 48
     assert final["latency_ms"]["total"]["count"] == 48
     # per-request phases are sub-spans of the total
@@ -271,5 +271,5 @@ def test_service_stats_snapshot_consistent_under_soak():
             assert s["requests"] >= prev["requests"]
             assert s["batches"] >= prev["batches"]
         prev = s
-    # both access forms hand out snapshots of the same books
-    assert svc.stats["requests"] == svc.stats()["requests"] == 48
+    # a fresh snapshot after close still reads the same books
+    assert svc.stats()["requests"] == 48

@@ -88,7 +88,7 @@ def test_continuous_sync_flush_buckets_and_oracle():
     for x, f in zip(xs, futs):
         np.testing.assert_allclose(f.result(timeout=5), spec.oracle(x),
                                    rtol=2e-3, atol=2e-3)
-    s = svc.stats
+    s = svc.stats()
     assert s["requests"] == 13 and s["batches"] == 2
     assert s["padded_slots"] == 3               # 5 rode an 8-bucket
     assert replay_batches(svc) == 13            # bitwise, exact packing
@@ -114,10 +114,10 @@ def test_continuous_poisson_soak(name):
     for x, o in zip(xs, outs):
         np.testing.assert_allclose(o, spec.oracle(x), rtol=2e-3, atol=2e-3)
     assert replay_batches(svc) == len(xs)
-    assert svc.stats["batches"] >= 1
+    assert svc.stats()["batches"] >= 1
     # the scheduler actually used the ladder: padding never exceeds what
     # the next bucket requires (fixed packing would pad to 8 every time)
-    total_slots = svc.stats["requests"] + svc.stats["padded_slots"]
+    total_slots = svc.stats()["requests"] + svc.stats()["padded_slots"]
     assert total_slots == sum(b for b, _ in svc.batch_log)
 
 
@@ -240,7 +240,7 @@ def test_continuous_failed_batch_fails_futures_not_thread():
         x = _signals(1)[0]
         out = svc.submit(x).result(timeout=60)
     np.testing.assert_allclose(out, spec.oracle(x), rtol=2e-3, atol=2e-3)
-    assert svc.stats["failed_batches"] == 1
+    assert svc.stats()["failed_batches"] == 1
     # replay skips the failed packing and still verifies the healthy one
     assert replay_batches(svc) == 1
 
@@ -263,9 +263,6 @@ def test_fixed_mode_unchanged_stats_contract():
     assert {k: s[k] for k in ("requests", "batches", "padded_slots")} \
         == {"requests": 6, "batches": 2, "padded_slots": 2}
     assert "bucket_batches" not in s
-    # old attribute access still works (deprecated), and both forms are
-    # snapshots of the same books
-    assert svc.stats["requests"] == 6
     assert s["fill_ratio"] == 6 / 8
     svc.close()
 
@@ -336,7 +333,7 @@ def test_validate_strict_fails_poison_future_at_submit(chaos):
     assert svc.flush() == 1
     np.testing.assert_allclose(good.result(timeout=5), spec.oracle(x),
                                rtol=2e-3, atol=2e-3)
-    s = svc.stats
+    s = svc.stats()
     assert s["invalid"] == 1 and s["requests"] == 1    # never admitted
     svc.close()
 
@@ -361,7 +358,7 @@ def test_queue_limit_shed_delivers_overloaded(chaos):
     for x, f in zip(xs[:2], futs[:2]):
         np.testing.assert_allclose(f.result(timeout=5), spec.oracle(x),
                                    rtol=2e-3, atol=2e-3)
-    s = svc.stats
+    s = svc.stats()
     assert s["shed"] == 3 and s["requests"] == 2       # shed != admitted
     svc.close()
 
@@ -371,7 +368,7 @@ def test_queue_limit_raise_policy(chaos):
     svc.submit(_signals(1)[0])
     with pytest.raises(Overloaded):
         svc.submit(_signals(1)[0])
-    assert svc.stats["shed"] == 1
+    assert svc.stats()["shed"] == 1
     svc.flush()
     svc.close()
 
@@ -400,7 +397,7 @@ def test_queue_limit_block_admits_when_space_frees(chaos):
                                rtol=2e-3, atol=2e-3)
     np.testing.assert_allclose(box["fut"].result(timeout=5),
                                spec.oracle(x1), rtol=2e-3, atol=2e-3)
-    assert svc.stats["shed"] == 0
+    assert svc.stats()["shed"] == 0
     svc.close()
 
 
@@ -412,7 +409,7 @@ def test_blocked_submit_honors_deadline(chaos):
     assert time.perf_counter() - t0 < 10       # gave up at the deadline,
     with pytest.raises(DeadlineExceeded):      # didn't block forever
         f.result(timeout=0)
-    assert svc.stats["expired"] == 1
+    assert svc.stats()["expired"] == 1
     svc.flush()
     svc.close()
 
@@ -448,7 +445,7 @@ def test_deadline_expiry_soak_no_device_slots(chaos):
     for f in futs:
         with pytest.raises(DeadlineExceeded):
             f.result(timeout=0)
-    s = svc.stats
+    s = svc.stats()
     assert s["expired"] == 50 and s["batches"] == 0
     assert svc.batch_log == []                 # zero device dispatches
     svc.close()
@@ -466,7 +463,7 @@ def test_mixed_deadlines_only_expired_fail(chaos):
             f.result(timeout=0)
     np.testing.assert_allclose(live.result(timeout=5), spec.oracle(x_live),
                                rtol=2e-3, atol=2e-3)
-    assert svc.stats["expired"] == 3
+    assert svc.stats()["expired"] == 3
     svc.close()
 
 
@@ -478,7 +475,7 @@ def test_transient_fault_retried_to_success(chaos):
     assert svc.flush() == 1
     np.testing.assert_allclose(f.result(timeout=5), spec.oracle(x),
                                rtol=2e-3, atol=2e-3)
-    s = svc.stats
+    s = svc.stats()
     assert s["retries"] == 1 and s["failed_batches"] == 0
     assert s["quarantined"] == 0
     assert replay_batches(svc) == 1
@@ -492,7 +489,7 @@ def test_persistent_fault_skips_retries_and_quarantines(chaos):
     assert svc.flush() == 1
     with pytest.raises(InjectedFault):
         f.result(timeout=0)
-    s = svc.stats
+    s = svc.stats()
     assert s["retries"] == 0                   # pointless retries skipped
     assert s["failed_batches"] == 1 and s["quarantined"] == 1
     svc.close()
@@ -517,7 +514,7 @@ def test_bisect_isolates_poison_rows_healthy_rows_served(chaos):
         else:
             np.testing.assert_allclose(f.result(timeout=0), spec.oracle(x),
                                        rtol=2e-3, atol=2e-3)
-    s = svc.stats
+    s = svc.stats()
     assert s["quarantined"] == 2 and s["failed_batches"] == 1
     # healthy sub-batches were logged and replay bit-exactly; poisoned
     # dispatches never enter the log
@@ -550,7 +547,7 @@ def test_runtime_degradation_to_reference_lowering(chaos):
     svc.flush()
     np.testing.assert_allclose(f3.result(timeout=0), spec.oracle(x3),
                                rtol=2e-3, atol=2e-3)
-    s = svc.stats
+    s = svc.stats()
     assert s["degraded"] == 1 and s["quarantined"] == 1
     assert replay_batches(svc) == 2            # the two healthy dispatches
     svc.close()
@@ -595,7 +592,7 @@ def test_acceptance_soak_faults_poison_overload(chaos):
     # phase 1: a burst into the bounded queue with no consumer —
     # deterministic overload, everything past the limit sheds
     futs = [svc.submit(x) for x in xs]
-    assert svc.stats["shed"] == 32
+    assert svc.stats()["shed"] == 32
     svc.start()                                # phase 2: sustained load
     xs2 = _signals(80)
     for i in range(0, 80, 10):
@@ -619,7 +616,7 @@ def test_acceptance_soak_faults_poison_overload(chaos):
         elif kind == "ok":
             np.testing.assert_allclose(val, spec.oracle(x),
                                        rtol=2e-3, atol=2e-3)
-    s = svc.stats
+    s = svc.stats()
     assert s["quarantined"] >= 1 and s["shed"] >= 32
     assert replay_batches(svc) >= 1            # healthy packings bit-exact
     assert faults.stats()["device_run"] >= 1
